@@ -1,0 +1,42 @@
+"""Baselines the paper compares against (Sec. 7): Full GP and Inducing Points.
+
+FGP  — dense Cholesky additive GP (repro.core.exact).
+IP   — subset-of-regressors / Nyström inducing points with m = sqrt(n)
+       (Burt et al. 2019 rate-optimal choice for Matérn-1/2, as in the paper).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import exact
+
+
+def fgp_fit_predict(q, omega, sigma, X, Y, Xq):
+    mean, var = exact.posterior_mean_var(q, jnp.asarray(omega), sigma,
+                                         jnp.asarray(X), jnp.asarray(Y),
+                                         jnp.asarray(Xq))
+    return np.asarray(mean), np.asarray(var)
+
+
+def inducing_points_fit_predict(q, omega, sigma, X, Y, Xq, m=None, seed=0):
+    """SoR predictor: m inducing points chosen uniformly from the data."""
+    n = X.shape[0]
+    m = m or max(10, int(np.sqrt(n)))
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(n, size=m, replace=False)
+    Z = jnp.asarray(X[idx])
+    Xj, Yj, Xqj = jnp.asarray(X), jnp.asarray(Y), jnp.asarray(Xq)
+    om = jnp.asarray(omega)
+    Kmm = exact.additive_gram(q, om, Z) + 1e-6 * jnp.eye(m, dtype=Z.dtype)
+    Kmn = exact.additive_gram(q, om, Z, Xj)  # (m, n)
+    Kmq = exact.additive_gram(q, om, Z, Xqj)  # (m, q)
+    A = Kmm * sigma**2 + Kmn @ Kmn.T
+    cho = jax.scipy.linalg.cho_factor(A)
+    w = jax.scipy.linalg.cho_solve(cho, Kmn @ Yj)
+    mean = Kmq.T @ w
+    # SoR variance
+    v = jax.scipy.linalg.cho_solve(cho, Kmq)
+    var = sigma**2 * jnp.sum(Kmq * v, axis=0)
+    return np.asarray(mean), np.asarray(var)

@@ -1,0 +1,72 @@
+"""Paper Fig. 5: prediction RMSE + wall time vs n (Schwefel/Rastr).
+
+GKP (ours, sparse O(n log n)) vs FGP (dense O(n^3), capped at n<=4000) vs
+IP (inducing points, m = sqrt(n)). CPU-scaled n grid; the paper's 30k point
+is included for GKP only (pass --full).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GPConfig, fit, posterior_mean, posterior_var
+from repro.data import sample_test_function
+
+from .baselines import fgp_fit_predict, inducing_points_fit_predict
+
+
+def run(fname="schwefel", D=10, ns=(500, 1000, 2000, 4000), reps=3,
+        fgp_cap=2000, q=0, sigma=1.0, out_rows=None):
+    rows = out_rows if out_rows is not None else []
+    for n in ns:
+        errs = {"gkp": [], "fgp": [], "ip": []}
+        times = {"gkp": [], "fgp": [], "ip": []}
+        for rep in range(reps):
+            X, Y, f, bounds = sample_test_function(fname, n, D, seed=rep)
+            span = bounds[:, 1] - bounds[:, 0]
+            omega = 8.0 / span  # moderate fixed lengthscale (see EXPERIMENTS.md)
+            Xq_np = np.random.default_rng(100 + rep).uniform(
+                bounds[:, 0], bounds[:, 1], size=(100, D))
+            f_true = f(Xq_np)
+            Xj = jnp.asarray(X)
+            Yj = jnp.asarray(Y)
+            Xqj = jnp.asarray(Xq_np)
+
+            cfg = GPConfig(q=q, solver="pcg", solver_iters=40)
+            t0 = time.time()
+            gp = fit(cfg, Xj, Yj, jnp.asarray(omega), sigma)
+            mu = np.asarray(posterior_mean(gp, Xqj))
+            jax.block_until_ready(mu)
+            times["gkp"].append(time.time() - t0)
+            errs["gkp"].append(float(np.sqrt(np.mean((mu - f_true) ** 2))))
+
+            if n <= fgp_cap:
+                t0 = time.time()
+                mu_f, _ = fgp_fit_predict(q, omega, sigma, X, Y, Xq_np)
+                times["fgp"].append(time.time() - t0)
+                errs["fgp"].append(float(np.sqrt(np.mean((mu_f - f_true) ** 2))))
+
+            t0 = time.time()
+            mu_ip, _ = inducing_points_fit_predict(q, omega, sigma, X, Y, Xq_np)
+            times["ip"].append(time.time() - t0)
+            errs["ip"].append(float(np.sqrt(np.mean((mu_ip - f_true) ** 2))))
+        for method in ("gkp", "fgp", "ip"):
+            if errs[method]:
+                rows.append({
+                    "bench": f"fig5_{fname}_D{D}", "n": n, "method": method,
+                    "rmse": float(np.mean(errs[method])),
+                    "rmse_std": float(np.std(errs[method])),
+                    "time_s": float(np.mean(times[method])),
+                })
+                print(f"fig5,{fname},D={D},n={n},{method},"
+                      f"rmse={np.mean(errs[method]):.4f}"
+                      f"+-{np.std(errs[method]):.4f},"
+                      f"time={np.mean(times[method]):.2f}s", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full]``
+
+Prints ``name,...`` CSV lines per benchmark and writes benchmarks/results.json.
+Default sizes are CPU-scaled (this container); --full uses the paper's grids.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__),
+                                                  "results.json"))
+    args = ap.parse_args()
+
+    from . import fig5_prediction, fig6_bayesopt, table1_complexity
+
+    rows: list[dict] = []
+    print("== Fig 5: prediction RMSE/time vs n ==", flush=True)
+    ns = (500, 1000, 2000, 4000, 8000, 16000, 30000) if args.full else (
+        500, 1000, 2000)
+    fig5_prediction.run(fname="schwefel", D=10, ns=ns,
+                        reps=3 if not args.full else 5, out_rows=rows)
+    fig5_prediction.run(fname="rastrigin", D=10, ns=ns, reps=3, out_rows=rows)
+
+    print("== Fig 6: Bayesian optimization ==", flush=True)
+    fig6_bayesopt.run(D=5, budget=40 if args.full else 15,
+                      n_init=20, out_rows=rows)
+
+    print("== Table 1: per-term complexity ==", flush=True)
+    table1_complexity.run(
+        D=5, ns=(1000, 2000, 4000, 8000, 16000) if args.full else
+        (1000, 2000, 4000), out_rows=rows)
+
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {len(rows)} rows to {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

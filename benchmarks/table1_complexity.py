@@ -1,0 +1,74 @@
+"""Paper Table 1: per-term computation cost scaling.
+
+Times each sparse operation over an n-grid and fits the log-log slope:
+O(n log n) terms should show slope ~1, the O(1)/O(log n) query paths slope
+~0, and the dense FGP fit slope ~3.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (GPConfig, fit, posterior_mean, posterior_var,
+                        log_likelihood, mll_gradients)
+from repro.core.bayesopt import acquisition_value_and_grad, acq_local, \
+    build_local_cache
+from repro.data import sample_test_function
+
+
+def _time(fn, reps=3):
+    fn()  # warmup/compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def run(D=5, ns=(1000, 2000, 4000, 8000), q=0, out_rows=None):
+    rows = out_rows if out_rows is not None else []
+    cfg = GPConfig(q=q, solver="pcg", solver_iters=30, logdet_order=30,
+                   logdet_probes=8, trace_probes=8)
+    results: dict[str, list] = {}
+    for n in ns:
+        X, Y, f, bounds = sample_test_function("schwefel", n, D, seed=0)
+        omega = jnp.asarray(8.0 / (bounds[:, 1] - bounds[:, 0]))
+        Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+        key = jax.random.PRNGKey(0)
+        Xq = jnp.asarray(np.random.default_rng(1).uniform(
+            bounds[:, 0], bounds[:, 1], (16, D)))
+        gp = fit(cfg, Xj, Yj, omega, 1.0)
+
+        timings = {
+            "fit_factorize_bY_Alg2_4": _time(lambda: fit(cfg, Xj, Yj, omega, 1.0).bY),
+            "posterior_mean_query": _time(lambda: posterior_mean(gp, Xq)),
+            "posterior_var_query": _time(lambda: posterior_var(gp, Xq)),
+            "loglik_Alg8": _time(lambda: log_likelihood(gp, key)),
+            "grad_Alg7": _time(lambda: mll_gradients(gp, key)[0]),
+            "acq_operator": _time(lambda: acquisition_value_and_grad(
+                gp, Xq, 2.0, 0.0)[0]),
+        }
+        if n <= 2000:  # dense cache path (paper's O(1), O(n^2) memory)
+            cache = build_local_cache(gp)
+            timings["acq_local_O1"] = _time(lambda: acq_local(
+                gp, cache, Xq[0], 2.0, 0.0)[0])
+        for k, v in timings.items():
+            results.setdefault(k, []).append((n, v))
+            rows.append({"bench": "table1", "term": k, "n": n, "time_s": v})
+            print(f"table1,{k},n={n},us_per_call={v*1e6:.0f}", flush=True)
+    # log-log slopes
+    for k, pts in results.items():
+        if len(pts) >= 3:
+            ns_, ts = zip(*pts)
+            slope = np.polyfit(np.log(ns_), np.log(ts), 1)[0]
+            rows.append({"bench": "table1_slope", "term": k,
+                         "loglog_slope": float(slope)})
+            print(f"table1_slope,{k},slope={slope:.2f}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

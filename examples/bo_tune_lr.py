@@ -1,0 +1,67 @@
+"""The paper's technique as a first-class framework feature: additive-GP
+Bayesian optimization over TRAINING hyperparameters (log-lr, log-wd).
+
+Each objective evaluation trains a tiny LM for a few steps and returns the
+negative final loss; the sparse GP posterior is updated in O(n log n) and
+GP-UCB proposes the next (lr, wd).
+
+PYTHONPATH=src python examples/bo_tune_lr.py [--budget 8]
+"""
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.core import GPConfig
+from repro.core.bayesopt import BOConfig, bayes_opt_loop
+from repro.data import ShardedBatches
+from repro.models import Parallel, build
+from repro.training import AdamWConfig, adamw_init, make_train_step
+
+
+def make_objective(steps=20):
+    cfg = reduced(ARCHS["smollm-360m"], layers=2, width=64)
+    model = build(cfg)
+    par = Parallel(mesh=None)
+
+    def objective(x):
+        log_lr, log_wd = float(x[0]), float(x[1])
+        opt_cfg = AdamWConfig(lr=10.0 ** log_lr, weight_decay=10.0 ** log_wd,
+                              warmup_steps=5, total_steps=steps)
+        params = model.init(jax.random.PRNGKey(0))
+        opt_state = adamw_init(params)
+        step = jax.jit(make_train_step(model, opt_cfg, par, remat=False))
+        batches = ShardedBatches(cfg.vocab, 32, 8, seed=0)
+        loss = None
+        for _ in range(steps):
+            params, opt_state, m = step(params, opt_state, next(batches))
+            loss = float(m["loss"])
+        print(f"  lr=10^{log_lr:.2f} wd=10^{log_wd:.2f} -> loss {loss:.4f}")
+        return -loss  # maximize
+
+    return objective
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=8)
+    args = ap.parse_args()
+
+    bounds = jnp.asarray([[-4.5, -1.0], [-3.0, -0.5]], jnp.float64)  # log10 lr/wd
+    cfg = GPConfig(q=0, solver="pcg", solver_iters=40)
+    bo = BOConfig(kind="ei", ascent_steps=25, n_starts=16, refit_every=0)
+    gp, X, Y, hist = bayes_opt_loop(
+        make_objective(), bounds, args.budget, cfg, bo, jax.random.PRNGKey(0),
+        n_init=6, sigma0=0.05,
+    )
+    best = int(jnp.argmax(Y))
+    print(f"best loss {-float(Y[best]):.4f} at lr=10^{float(X[best,0]):.2f} "
+          f"wd=10^{float(X[best,1]):.2f}")
+
+
+if __name__ == "__main__":
+    main()

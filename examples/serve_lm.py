@@ -1,0 +1,27 @@
+"""Batched serving demo: continuous slot batching over a shared KV cache.
+
+PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+
+from repro.configs import ARCHS, reduced
+from repro.models import Parallel, build
+from repro.serving import ServeEngine
+from repro.serving.engine import Request
+
+
+def main():
+    cfg = reduced(ARCHS["smollm-360m"], layers=4, width=256)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, Parallel(mesh=None), batch_slots=4,
+                      ctx=128, eos_id=-1)
+    for rid in range(8):
+        eng.submit(Request(rid=rid, prompt=[1 + rid, 5, 9], max_new=16))
+    done = eng.run_until_done()
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"request {r.rid}: {len(r.out)} tokens -> {r.out[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

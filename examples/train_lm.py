@@ -1,0 +1,30 @@
+"""End-to-end LM training driver: a ~100M-param smollm-family model for a few
+hundred steps on the synthetic token stream, with checkpoints + auto-resume.
+
+PYTHONPATH=src python examples/train_lm.py [--steps 300] [--quick]
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--quick", action="store_true", help="tiny model, 30 steps")
+    args = ap.parse_args()
+
+    if args.quick:
+        train_main(["--arch", "smollm-360m", "--reduced", "--width", "128",
+                    "--layers", "2", "--steps", "30", "--batch", "8",
+                    "--seq", "64", "--lr", "5e-3"])
+    else:
+        # width 768 x 12 layers ~= 100M params at smollm vocab
+        train_main(["--arch", "smollm-360m", "--reduced", "--width", "768",
+                    "--layers", "12", "--steps", str(args.steps),
+                    "--batch", "8", "--seq", "256", "--lr", "3e-3",
+                    "--ckpt-every", "100"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Assigned architecture configs (``--arch <id>``) + shape grid."""
+from .base import SHAPES, ArchConfig, ShapeConfig, reduced  # noqa: F401
+from .deepseek_coder_33b import CONFIG as deepseek_coder_33b
+from .gemma3_12b import CONFIG as gemma3_12b
+from .llava_next_mistral_7b import CONFIG as llava_next_mistral_7b
+from .mixtral_8x22b import CONFIG as mixtral_8x22b
+from .moonshot_v1_16b_a3b import CONFIG as moonshot_v1_16b_a3b
+from .smollm_360m import CONFIG as smollm_360m
+from .whisper_tiny import CONFIG as whisper_tiny
+from .xlstm_1p3b import CONFIG as xlstm_1p3b
+from .yi_34b import CONFIG as yi_34b
+from .zamba2_1p2b import CONFIG as zamba2_1p2b
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        smollm_360m,
+        yi_34b,
+        deepseek_coder_33b,
+        gemma3_12b,
+        moonshot_v1_16b_a3b,
+        mixtral_8x22b,
+        llava_next_mistral_7b,
+        whisper_tiny,
+        zamba2_1p2b,
+        xlstm_1p3b,
+    ]
+}
+
+# long_500k requires sub-quadratic attention: run only for SSM/hybrid/
+# windowed-attention archs (see DESIGN.md §Arch-applicability).
+LONG_CONTEXT_OK = {"gemma3-12b", "mixtral-8x22b", "zamba2-1.2b", "xlstm-1.3b"}
+
+
+def cells():
+    """All (arch, shape) dry-run cells, with skip markers."""
+    out = []
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            skip = shape.name == "long_500k" and arch.name not in LONG_CONTEXT_OK
+            out.append((arch, shape, skip))
+    return out

@@ -1,0 +1,114 @@
+"""Architecture + run-shape configuration dataclasses."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "reduced"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | vlm | audio | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    # attention pattern
+    sliding_window: int = 0  # 0 = full attention
+    local_global_ratio: int = 0  # k -> k local layers per 1 global (gemma3 = 5)
+    rope_theta: float = 10_000.0
+    rope_theta_global: float = 0.0  # gemma3 uses a different theta on globals
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    attn_every: int = 0  # zamba2: shared attention block cadence
+    slstm_every: int = 0  # xlstm: 1 sLSTM per k blocks
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    frame_dim: int = 0  # stub frontend embedding dim (== d_model)
+    # vlm
+    n_patches: int = 0  # stub patch-embedding count per image
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count_est(self) -> int:
+        """Rough dense-equivalent parameter count (for 6ND roofline math)."""
+        d, L = self.d_model, self.n_layers
+        attn = L * (self.n_heads * self.hd * d * 2 + self.n_kv * self.hd * d * 2)
+        if self.family in ("moe",):
+            mlp_total = L * 3 * d * self.d_ff * (self.n_experts + self.n_shared_experts)
+            mlp_active = L * 3 * d * self.d_ff * (self.top_k + self.n_shared_experts)
+        else:
+            mlp_total = mlp_active = L * 3 * d * self.d_ff
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        self_total = attn + mlp_total + emb
+        return self_total
+
+    def active_param_count_est(self) -> int:
+        d, L = self.d_model, self.n_layers
+        attn = L * (self.n_heads * self.hd * d * 2 + self.n_kv * self.hd * d * 2)
+        if self.family == "moe":
+            mlp = L * 3 * d * self.d_ff * (self.top_k + self.n_shared_experts)
+        else:
+            mlp = L * 3 * d * self.d_ff
+        return attn + mlp + self.vocab * d
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def reduced(cfg: ArchConfig, layers: int = 2, width: int = 64) -> ArchConfig:
+    """Smoke-test-sized config of the same family (CPU-runnable)."""
+    n_heads = max(2, min(cfg.n_heads, 4))
+    n_kv = max(1, min(cfg.n_kv, n_heads))
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-reduced",
+        n_layers=max(layers, 2 if cfg.attn_every or cfg.slstm_every else layers),
+        n_enc_layers=min(cfg.n_enc_layers, layers) if cfg.n_enc_layers else 0,
+        d_model=width,
+        n_heads=n_heads,
+        n_kv=n_kv,
+        head_dim=width // n_heads,
+        d_ff=width * 2 if cfg.d_ff else 0,
+        vocab=128,
+        n_experts=min(cfg.n_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_heads=min(cfg.ssm_heads, 2) if cfg.ssm_heads else 0,
+        ssm_chunk=16,
+        sliding_window=min(cfg.sliding_window, 16) if cfg.sliding_window else 0,
+        attn_every=min(cfg.attn_every, 2) if cfg.attn_every else 0,
+        slstm_every=min(cfg.slstm_every, 2) if cfg.slstm_every else 0,
+        n_patches=min(cfg.n_patches, 4) if cfg.n_patches else 0,
+        frame_dim=width if cfg.frame_dim else 0,
+    )

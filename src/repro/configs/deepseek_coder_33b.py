@@ -1,0 +1,8 @@
+"""DeepSeek-Coder-33B — llama-arch [arXiv:2401.14196]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-coder-33b", family="dense", n_layers=62, d_model=7168,
+    n_heads=56, n_kv=8, d_ff=19200, vocab=32256, head_dim=128,
+    tie_embeddings=False, rope_theta=100_000.0,
+)

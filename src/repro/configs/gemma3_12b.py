@@ -1,0 +1,9 @@
+"""Gemma3-12B — 5:1 local:global attention, 128k ctx [hf:google/gemma-3-12b-pt]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-12b", family="dense", n_layers=48, d_model=3840, n_heads=16,
+    n_kv=8, d_ff=15360, vocab=262144, head_dim=256, tie_embeddings=True,
+    sliding_window=1024, local_global_ratio=5,
+    rope_theta=10_000.0, rope_theta_global=1_000_000.0,
+)

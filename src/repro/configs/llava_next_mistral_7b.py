@@ -1,0 +1,12 @@
+"""LLaVA-NeXT (Mistral-7B backbone) — anyres tiling; STUB patch frontend.
+
+``input_specs`` provides precomputed patch embeddings (B, n_patches, d_model);
+the vision tower is out of scope per the assignment.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b", family="vlm", n_layers=32, d_model=4096,
+    n_heads=32, n_kv=8, d_ff=14336, vocab=32000, head_dim=128,
+    n_patches=576, tie_embeddings=False,
+)

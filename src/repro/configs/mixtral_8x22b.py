@@ -1,0 +1,8 @@
+"""Mixtral-8x22B — MoE 8e top-2, sliding-window attention [arXiv:2401.04088]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b", family="moe", n_layers=56, d_model=6144, n_heads=48,
+    n_kv=8, d_ff=16384, vocab=32768, head_dim=128, n_experts=8, top_k=2,
+    sliding_window=4096, tie_embeddings=False, rope_theta=1_000_000.0,
+)

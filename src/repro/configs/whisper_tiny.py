@@ -1,0 +1,11 @@
+"""Whisper-tiny — enc-dec; STUB conv frontend (precomputed frame embeddings).
+
+4 encoder + 4 decoder layers, d=384, 6 heads [arXiv:2212.04356].
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny", family="audio", n_layers=4, n_enc_layers=4,
+    d_model=384, n_heads=6, n_kv=6, d_ff=1536, vocab=51865, head_dim=64,
+    frame_dim=384, tie_embeddings=True,
+)

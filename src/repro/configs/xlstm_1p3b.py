@@ -1,0 +1,11 @@
+"""xLSTM-1.3B — mLSTM blocks with 1:8 sLSTM interleave [arXiv:2405.04517].
+
+d_ff=0: xLSTM blocks carry their own 2x up-projection.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b", family="ssm", n_layers=48, d_model=2048, n_heads=4,
+    n_kv=4, d_ff=0, vocab=50304, head_dim=512, slstm_every=8,
+    tie_embeddings=True,
+)

@@ -1,0 +1,10 @@
+"""Zamba2-1.2B — Mamba2 backbone + one SHARED attention block every 6 layers
+[arXiv:2411.15242]. ssm_state=64, d=2048.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", family="hybrid", n_layers=38, d_model=2048, n_heads=32,
+    n_kv=32, d_ff=8192, vocab=32000, head_dim=64, ssm_state=64, ssm_heads=64,
+    ssm_expand=2, ssm_conv=4, attn_every=6, tie_embeddings=True,
+)

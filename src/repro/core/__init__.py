@@ -1,0 +1,23 @@
+"""repro.core — sparse-matrix additive Gaussian processes (Kernel Packets).
+
+The paper's primary contribution: KP banded factorizations, backfitting
+solvers, stochastic spectral estimators, the additive-GP posterior /
+likelihood / gradient API, and Bayesian optimization on top of it.
+"""
+from . import banded, matern  # noqa: F401
+from .additive_gp import (  # noqa: F401
+    AdditiveGP,
+    GPConfig,
+    fit,
+    fit_hyperparams,
+    log_likelihood,
+    mll_gradients,
+    posterior_mean,
+    posterior_mean_grad,
+    posterior_var,
+)
+from .backfitting import DimOps, SolveConfig, mhat_matvec, solve_mhat  # noqa: F401
+from .band_inverse import inverse_band, variance_band  # noqa: F401
+from .banded import Banded  # noqa: F401
+from .kernel_packets import gkp_factors, kp_factors, phi_at, phi_grad_at  # noqa: F401
+from .stochastic import hutchinson, logdet_taylor, power_method  # noqa: F401

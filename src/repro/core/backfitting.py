@@ -1,0 +1,199 @@
+"""Backfitting solvers for the additive-GP system (paper Algorithm 4).
+
+All solvers apply ``[P Phi^{-1} A P^T + sigma^{-2} S S^T]^{-1}`` — i.e.
+``Mhat^{-1} = [Khat^{-1} + sigma^{-2} S S^T]^{-1}`` — to batches of vectors.
+Vectors are stacked ``(D, n, B)`` in *original* (unsorted) point order; the
+per-dimension banded factors live in sorted order and are conjugated by the
+sort permutations on the fly.
+
+Three variants:
+  * ``gauss_seidel`` — the paper's Algorithm 4 (sequential over dimensions).
+  * ``jacobi``       — beyond-paper: all D one-dimensional solves in parallel
+                       (damped); maps onto the ``model`` mesh axis.
+  * ``pcg``          — beyond-paper: conjugate gradients preconditioned by the
+                       block solve; fastest convergence per banded solve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .banded import Banded, matvec, solve
+
+__all__ = ["SolveConfig", "DimOps", "solve_mhat", "mhat_matvec"]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(),
+    meta_fields=("method", "iters", "damping", "pivot", "tol"),
+)
+@dataclasses.dataclass(frozen=True)
+class SolveConfig:
+    method: str = "pcg"  # "gauss_seidel" | "jacobi" | "pcg"
+    iters: int = 30
+    damping: float = 0.0  # jacobi under-relaxation; 0 -> auto (1/D, provably safe)
+    pivot: bool = False  # banded LU pivoting
+    tol: float = 0.0  # 0 -> fixed iteration count (jit-friendly)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("A", "Phi", "SAPhi", "sort_idx", "rank_idx", "sigma2"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class DimOps:
+    """Stacked per-dimension banded factors + permutations.
+
+    A, Phi:    Banded with data (D, n, w)
+    SAPhi:     Banded sigma^2*A + Phi, data (D, n, w)
+    sort_idx:  (D, n) int — xs[d] = X[sort_idx[d], d]
+    rank_idx:  (D, n) int — inverse permutation
+    sigma2:    scalar observation-noise variance
+    """
+
+    A: Banded
+    Phi: Banded
+    SAPhi: Banded
+    sort_idx: jax.Array
+    rank_idx: jax.Array
+    sigma2: jax.Array
+
+    @property
+    def D(self) -> int:
+        return self.sort_idx.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.sort_idx.shape[1]
+
+    def to_sorted(self, u: jax.Array) -> jax.Array:
+        """(D, n, B) original order -> sorted order per dim."""
+        idx = self.sort_idx[..., None] if u.ndim == 3 else self.sort_idx
+        return jnp.take_along_axis(u, jnp.broadcast_to(idx, u.shape), axis=1)
+
+    def from_sorted(self, u: jax.Array) -> jax.Array:
+        idx = self.rank_idx[..., None] if u.ndim == 3 else self.rank_idx
+        return jnp.take_along_axis(u, jnp.broadcast_to(idx, u.shape), axis=1)
+
+    def khat_inv_mv(self, u: jax.Array, pivot: bool = False) -> jax.Array:
+        """Khat^{-1} u = P^T Phi^{-1} A P u (per dim), u: (D, n, B)."""
+        us = self.to_sorted(u)
+        w = solve(self.Phi, matvec(self.A, us), pivot=pivot)
+        return self.from_sorted(w)
+
+    def khat_mv(self, u: jax.Array, pivot: bool = False) -> jax.Array:
+        """Khat u = P^T A^{-1} Phi P u (per dim)."""
+        us = self.to_sorted(u)
+        w = solve(self.A, matvec(self.Phi, us), pivot=pivot)
+        return self.from_sorted(w)
+
+    def block_solve(self, r: jax.Array, pivot: bool = False) -> jax.Array:
+        """(Khat^{-1} + sigma^{-2} I)^{-1} r = sigma^2 P^T (s^2 A + Phi)^{-1} Phi P r."""
+        rs = self.to_sorted(r)
+        w = self.sigma2 * solve(self.SAPhi, matvec(self.Phi, rs), pivot=pivot)
+        return self.from_sorted(w)
+
+
+def mhat_matvec(ops: DimOps, u: jax.Array, pivot: bool = False) -> jax.Array:
+    """Mhat u = Khat^{-1} u + sigma^{-2} S S^T u; u: (D, n, B)."""
+    ssT = jnp.sum(u, axis=0, keepdims=True)
+    return ops.khat_inv_mv(u, pivot=pivot) + ssT / ops.sigma2
+
+
+def _gauss_seidel(ops: DimOps, v: jax.Array, cfg: SolveConfig) -> jax.Array:
+    """Algorithm 4: block Gauss-Seidel sweeps, sequential over dimensions."""
+    D = ops.D
+    vt = jnp.zeros_like(v)
+
+    def solve_one_dim(d, r_d):
+        # single-dim block solve (r_d: (n, B))
+        saphi = Banded(ops.SAPhi.data[d], ops.SAPhi.lo, ops.SAPhi.hi)
+        phi = Banded(ops.Phi.data[d], ops.Phi.lo, ops.Phi.hi)
+        idx = ops.sort_idx[d][:, None]
+        rs = jnp.take_along_axis(r_d, jnp.broadcast_to(idx, r_d.shape), axis=0)
+        w = ops.sigma2 * solve(saphi, matvec(phi, rs), pivot=cfg.pivot)
+        ridx = ops.rank_idx[d][:, None]
+        return jnp.take_along_axis(w, jnp.broadcast_to(ridx, w.shape), axis=0)
+
+    def sweep(_, vt):
+        total = jnp.sum(vt, axis=0)
+        for d in range(D):
+            r_d = v[d] - (total - vt[d]) / ops.sigma2
+            new_d = solve_one_dim(d, r_d)
+            total = total - vt[d] + new_d
+            vt = vt.at[d].set(new_d)
+        return vt
+
+    return jax.lax.fori_loop(0, cfg.iters, sweep, vt)
+
+
+def _jacobi(ops: DimOps, v: jax.Array, cfg: SolveConfig) -> jax.Array:
+    """Damped block Jacobi: all D dims in parallel (one batched banded solve).
+
+    The block-Jacobi iteration matrix for Mhat has eigenvalues in
+    (-(D-1), 1]; damping alpha <= 2/D guarantees convergence — auto uses 1/D.
+    """
+    vt = jnp.zeros_like(v)
+    alpha = cfg.damping if cfg.damping > 0 else 1.0 / ops.D
+
+    def sweep(_, vt):
+        total = jnp.sum(vt, axis=0, keepdims=True)
+        r = v - (total - vt) / ops.sigma2
+        new = ops.block_solve(r, pivot=cfg.pivot)
+        return (1.0 - alpha) * vt + alpha * new
+
+    return jax.lax.fori_loop(0, cfg.iters, sweep, vt)
+
+
+def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig) -> jax.Array:
+    """Preconditioned CG on the SPD system Mhat x = v, M_pre = block solve."""
+
+    def amv(u):
+        return mhat_matvec(ops, u, pivot=cfg.pivot)
+
+    def pre(u):
+        return ops.block_solve(u, pivot=cfg.pivot)
+
+    x = jnp.zeros_like(v)
+    r = v - amv(x)
+    z = pre(r)
+    p = z
+    rz = jnp.sum(r * z, axis=(0, 1))
+
+    def body(_, state):
+        x, r, p, rz = state
+        ap = amv(p)
+        denom = jnp.sum(p * ap, axis=(0, 1))
+        alpha = rz / jnp.where(denom == 0, 1.0, denom)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = pre(r)
+        rz_new = jnp.sum(r * z, axis=(0, 1))
+        beta = rz_new / jnp.where(rz == 0, 1.0, rz)
+        p = z + beta * p
+        return (x, r, p, rz_new)
+
+    x, r, p, rz = jax.lax.fori_loop(0, cfg.iters, body, (x, r, p, rz))
+    return x
+
+
+def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig()) -> jax.Array:
+    """Apply Mhat^{-1} to v: (D, n) or (D, n, B), original point order."""
+    vec_in = v.ndim == 2
+    if vec_in:
+        v = v[..., None]
+    if cfg.method == "gauss_seidel":
+        out = _gauss_seidel(ops, v, cfg)
+    elif cfg.method == "jacobi":
+        out = _jacobi(ops, v, cfg)
+    elif cfg.method == "pcg":
+        out = _pcg(ops, v, cfg)
+    else:
+        raise ValueError(f"unknown method {cfg.method!r}")
+    return out[..., 0] if vec_in else out

@@ -1,0 +1,7 @@
+from .pipeline import ShardedBatches  # noqa: F401
+from .synthetic import (  # noqa: F401
+    rastrigin,
+    schwefel,
+    sample_test_function,
+    token_stream,
+)

@@ -1,0 +1,6 @@
+from .sharding import (  # noqa: F401
+    batch_pspecs,
+    cache_pspecs,
+    shardings_for,
+    spec_for_axes,
+)

@@ -1,0 +1,47 @@
+"""Elastic re-meshing: rebuild mesh + shardings after device loss.
+
+On a real fleet the controller detects a failed slice, restarts jax with the
+surviving hosts, and calls ``elastic_mesh`` to get the largest valid
+(data, model) mesh for the remaining chips; ``reshard_tree`` then maps the
+restored checkpoint onto the new mesh. Data-parallel scale-down only changes
+the `data` axis, so per-device param shards stay valid; model-axis changes
+trigger a full reshard (all-gather + re-slice, done lazily by device_put).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .sharding import shardings_for
+
+__all__ = ["elastic_mesh", "reshard_tree", "largest_data_axis"]
+
+
+def largest_data_axis(n_devices: int, model: int) -> int:
+    data = n_devices // model
+    while data > 1 and (n_devices % (data * model)) != 0:
+        data -= 1
+    return max(data, 1)
+
+
+def elastic_mesh(model: int = 16, devices=None) -> Mesh:
+    """Largest (data, model) mesh over the surviving devices."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    if n < model:  # degrade TP if we lost too many chips
+        model = 1 << (n.bit_length() - 1)
+    data = largest_data_axis(n, model)
+    used = devices[: data * model]
+    import numpy as np
+
+    arr = np.array(used).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_tree(tree, axes_tree, mesh: Mesh):
+    """Move a (restored) pytree onto a new mesh using the sharding rules."""
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+    sh = shardings_for(axes_tree, abstract, mesh)
+    return jax.tree_util.tree_map(jax.device_put, tree, sh)

@@ -1,0 +1,158 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Parameter/activation dims are annotated with logical names (see
+``repro.models.spec``); the rules below map them to mesh axes with
+divisibility checks and first-match-wins conflict resolution (a mesh axis is
+used at most once per array).
+
+  batch    -> (pod, data)    data parallelism (pod = outer DP axis)
+  ctx      -> (pod, data)    decode-cache sequence sharding; only claims the
+                             data axes when `batch` could not (e.g. batch=1)
+  embed    -> data           FSDP / ZeRO-3: weights gathered per layer
+  heads, kv_heads, mlp, vocab, experts -> model   (TP / EP)
+
+Falls back to replication when the dim size is not divisible — e.g.
+smollm's 15 heads or whisper's 6 heads on a 16-way model axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["spec_for_axes", "shardings_for", "batch_pspecs", "cache_pspecs"]
+
+
+def _rules(mesh: Mesh, mode: str = "train") -> dict[str, tuple]:
+    names = set(mesh.axis_names)
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    model = ("model",) if "model" in names else ()
+    return {
+        "batch": (data_axes,),
+        "ctx": (data_axes,),
+        # decode mode: NO FSDP — params replicated over data (TP only), so
+        # no per-token weight all-gathers (§Perf hillclimb #3)
+        "embed": (("data",),) if ("data" in names and mode == "train") else (),
+        "heads": (model,),
+        "kv_heads": (model,),
+        "mlp": (model,),
+        "vocab": (model,),
+        "experts": (model,),
+        "state": (),
+        "layers": (),
+        "conv": (),
+    }
+
+
+def _axes_size(mesh: Mesh, axes: tuple) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def spec_for_axes(axes: tuple, shape: tuple, mesh: Mesh, mode: str = "train") -> P:
+    """PartitionSpec for one array given its logical axes + shape."""
+    rules = _rules(mesh, mode)
+    used: set = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        assigned = None
+        for cand in rules.get(name, ()) if name else ():
+            if not cand:
+                continue
+            if any(a in used for a in cand):
+                continue
+            if dim % _axes_size(mesh, cand) != 0:
+                continue
+            assigned = cand if len(cand) > 1 else cand[0]
+            used.update(cand)
+            break
+        entries.append(assigned)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def shardings_for(axes_tree, abstract_tree, mesh: Mesh, mode: str = "train"):
+    """NamedShardings for a pytree of (axes tuples, ShapeDtypeStructs)."""
+
+    def one(axes, ab):
+        return NamedSharding(mesh, spec_for_axes(axes, ab.shape, mesh, mode))
+
+    return jax.tree_util.tree_map(one, axes_tree, abstract_tree,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_pspecs(batch_tree, mesh: Mesh):
+    """Shard input batches: dim 0 = batch over (pod, data) when divisible."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = _axes_size(mesh, data_axes)
+
+    def one(ab):
+        if ab.ndim == 0 or ab.shape[0] % dp != 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(data_axes, *([None] * (ab.ndim - 1))))
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+# -- decode-cache sharding ---------------------------------------------------
+# Cache leaves are identified by key name; per-family layouts documented in
+# each model module. batch dim -> data axes; if batch is unshardable (e.g.
+# long_500k batch=1) the context/sequence dim takes the data axes instead;
+# kv-head-like dims -> model.
+
+_KV_KEYS = {"k", "v", "attn_k", "attn_v", "xk", "xv"}
+
+
+def cache_pspecs(cache_tree, mesh: Mesh, batch: int):
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = _axes_size(mesh, data_axes)
+    mp = mesh.shape.get("model", 1)
+    batch_ok = batch % dp == 0
+
+    def kv_spec(ab):
+        # (L|G, B, T, Kv, hd)
+        _, B, T, Kv, hd = ab.shape
+        ent = [None, None, None, None, None]
+        if batch_ok:
+            ent[1] = data_axes
+        elif T % dp == 0:
+            ent[2] = data_axes
+        if Kv % mp == 0:
+            ent[3] = "model"
+        elif ent[2] is None and T % mp == 0:
+            # GQA kv-heads < model axis: shard the SEQUENCE over model
+            # (flash-decoding style — softmax stats all-reduce is tiny,
+            # vs all-gathering the whole cache when hd is sharded).
+            ent[2] = "model"
+        elif ent[2] is not None and T % (dp * mp) == 0:
+            ent[2] = tuple(data_axes) + ("model",)  # batch=1 long-context
+        elif hd % mp == 0:
+            ent[4] = "model"
+        return P(*ent)
+
+    def state_spec(ab):
+        # mamba/mlstm/slstm states: batch dim is the first dim of size `batch`
+        ent = [None] * ab.ndim
+        placed_data = False
+        placed_model = False
+        for i, s in enumerate(ab.shape):
+            if not placed_data and batch_ok and s == batch:
+                ent[i] = data_axes
+                placed_data = True
+            elif placed_data and not placed_model and s % mp == 0 and s > 1:
+                ent[i] = "model"
+                placed_model = True
+        return P(*ent)
+
+    def one(path, ab):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if key in _KV_KEYS:
+            return NamedSharding(mesh, kv_spec(ab))
+        if key == "kpos":
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, state_spec(ab))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+banded_matvec — banded y = Bx (backfitting / power-method / Hutchinson inner op)
+tridiag_pcr   — parallel-cyclic-reduction tridiagonal solve (Matérn-1/2 path;
+                TPU replacement for the paper's sequential banded LU)
+kp_gram       — fused Phi = A·K band assembly (Algorithm 2) without forming K
+
+Each kernel ships with a pure-jnp oracle in ref.py and is validated in
+interpret mode over shape/dtype sweeps in tests/test_kernels.py.
+"""
+from . import ops, ref  # noqa: F401
+from .banded_matvec import banded_matvec_pallas  # noqa: F401
+from .kp_gram import kp_gram_pallas  # noqa: F401
+from .tridiag_pcr import tridiag_pcr_pallas  # noqa: F401

@@ -1,0 +1,33 @@
+"""Jit'd dispatch layer: Pallas kernels on TPU, interpret-mode on CPU.
+
+These wrappers are what `repro.core` calls when `use_pallas=True`; they fall
+back to interpret mode automatically off-TPU so the same code path is tested
+everywhere.
+"""
+from __future__ import annotations
+
+import jax
+
+from .banded_matvec import banded_matvec_pallas
+from .kp_gram import kp_gram_pallas
+from .tridiag_pcr import tridiag_pcr_pallas
+
+__all__ = ["banded_matvec", "tridiag_solve", "kp_gram", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def banded_matvec(band, x, lo: int, hi: int, block: int = 512):
+    return banded_matvec_pallas(band, x, lo, hi, block=block,
+                                interpret=not on_tpu())
+
+
+def tridiag_solve(dl, d, du, rhs):
+    return tridiag_pcr_pallas(dl, d, du, rhs, interpret=not on_tpu())
+
+
+def kp_gram(q, omega, xs, a_band, block: int = 512):
+    return kp_gram_pallas(q, omega, xs, a_band, block=block,
+                          interpret=not on_tpu())

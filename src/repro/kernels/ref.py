@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import matern as mk
+from ..core.banded import Banded, matvec
+
+
+def banded_matvec_ref(band: jax.Array, x: jax.Array, lo: int, hi: int):
+    """band (n, w), x (n, B)."""
+    return matvec(Banded(band, lo, hi), x)
+
+
+def tridiag_ref(dl, d, du, rhs):
+    from jax.lax.linalg import tridiagonal_solve
+
+    dl = dl.at[0].set(0.0)
+    du = du.at[-1].set(0.0)
+    return tridiagonal_solve(dl, d, du, rhs)
+
+
+def kp_gram_ref(q: int, omega, xs: jax.Array, a_band: jax.Array):
+    """Phi band via explicit windowed gathers (same math as kernel_packets)."""
+    n = xs.shape[0]
+    lo = q + 1
+    i = jnp.arange(n)[:, None]
+    t = jnp.arange(-lo, lo + 1)[None, :]
+    jj = jnp.clip(i + t, 0, n - 1)
+    vv = ((i + t) >= 0) & ((i + t) < n)
+    xw = xs[jj]
+    m = jnp.arange(-q, q + 1)[None, :]
+    jm = jnp.clip(i + m, 0, n - 1)
+    vm = ((i + m) >= 0) & ((i + m) < n)
+    xm = xs[jm]
+    kv = mk.matern(q, omega, xm[:, :, None], xw[:, None, :]) * vv[:, None, :]
+    return jnp.einsum("nmt,nt->nm", kv, a_band) * vm

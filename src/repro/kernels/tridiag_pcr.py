@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: tridiagonal solve by Parallel Cyclic Reduction (PCR).
+
+TPU adaptation of the paper's banded-LU solver (Sec. 5.1.1, Matérn-1/2 case):
+the paper's sequential Thomas/LU recurrence serializes at scalar speed on a
+vector unit, so we replace it with PCR — ceil(log2 n) fully-vectorized steps,
+each combining rows i-s and i+s. O(n log n) work instead of O(n), but every
+step is an (8,128)-lane elementwise op; on TPU this is the difference between
+~n scalar cycles and ~log2(n) vector ops.
+
+Whole system lives in VMEM (n <= ~128k per call; larger n: use the blocked
+host-level fallback in repro.core.banded).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["tridiag_pcr_pallas"]
+
+
+def _shift(x, s):
+    """x[i+s] with zero fill, along axis 0."""
+    n = x.shape[0]
+    if s == 0:
+        return x
+    if s > 0:
+        return jnp.pad(x, ((0, s),) + ((0, 0),) * (x.ndim - 1))[s : s + n]
+    return jnp.pad(x, ((-s, 0),) + ((0, 0),) * (x.ndim - 1))[:n]
+
+
+def _kernel(dl_ref, d_ref, du_ref, b_ref, o_ref, *, steps):
+    a = dl_ref[...]  # (n, 1) sub-diagonal (a[0] = 0)
+    b = d_ref[...]   # (n, 1) diagonal
+    c = du_ref[...]  # (n, 1) super-diagonal (c[-1] = 0)
+    r = b_ref[...]   # (n, B) rhs
+
+    s = 1
+    for _ in range(steps):
+        # row i eliminates against rows i-s and i+s
+        alpha = -a / jnp.where(_shift(b, -s) == 0, 1.0, _shift(b, -s))
+        beta = -c / jnp.where(_shift(b, s) == 0, 1.0, _shift(b, s))
+        b = b + alpha * _shift(c, -s) + beta * _shift(a, s)
+        r = r + alpha * _shift(r, -s) + beta * _shift(r, s)
+        a = alpha * _shift(a, -s)
+        c = beta * _shift(c, s)
+        s *= 2
+    o_ref[...] = r / b
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tridiag_pcr_pallas(dl, d, du, rhs, interpret: bool = True):
+    """Solve T x = rhs; dl/d/du: (n,), rhs: (n, B). dl[0] = du[-1] = 0."""
+    n = d.shape[0]
+    B = rhs.shape[1]
+    steps = max(1, math.ceil(math.log2(max(n, 2))))
+    return pl.pallas_call(
+        functools.partial(_kernel, steps=steps),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda: (0, 0)),
+            pl.BlockSpec((n, 1), lambda: (0, 0)),
+            pl.BlockSpec((n, 1), lambda: (0, 0)),
+            pl.BlockSpec((n, B), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, B), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, B), rhs.dtype),
+        interpret=interpret,
+    )(dl[:, None], d[:, None], du[:, None], rhs)

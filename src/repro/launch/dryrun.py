@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the REAL jitted entry point (train_step for
+training shapes, forward for prefill, decode_step for decode) against
+ShapeDtypeStruct inputs — no allocation — on the production mesh, then
+records memory_analysis(), cost_analysis(), and the collective-byte census
+parsed from the compiled HLO (for EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cells
+from repro.distributed.sharding import batch_pspecs, cache_pspecs, shardings_for
+from repro.launch.mesh import data_axes_for, make_production_mesh
+from repro.models import Parallel, build
+from repro.models.spec import param_count
+from repro.training import AdamWConfig, adamw_init, make_train_step
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\b[^=]*$"
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8, "s32": 4,
+    "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _op_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"= *(?P<shape>[^=]*?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\("
+)
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in the compiled HLO.
+
+    HLO form: ``%name = f32[a,b]{...} all-gather(...), ...`` — the output
+    shape sits between '=' and the op name. ``-done`` ops are skipped (their
+    shape duplicates the matching ``-start``).
+    """
+    out: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        kind = m.group("kind")
+        b = _op_bytes(m.group("shape"))
+        ent = out.setdefault(kind, {"count": 0, "bytes": 0})
+        ent["count"] += 1
+        ent["bytes"] += b
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool) -> dict:
+    arch = ARCHS[arch_name]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    par = Parallel(mesh=mesh, data_axes=data_axes_for(mesh), model_axis="model")
+    model = build(arch)
+
+    abstract = model.abstract()
+    axes = model.axes()
+    p_shard = shardings_for(axes, abstract, mesh)
+    inputs = model.input_specs(shape)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_abstract = jax.eval_shape(adamw_init, abstract)
+        opt_shard = {
+            "m": p_shard, "v": p_shard,
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        }
+        step_fn = make_train_step(model, opt_cfg, par, remat=True)
+        b_shard = batch_pspecs(inputs, mesh)
+        met_shard = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, opt_shard, b_shard),
+                out_shardings=(p_shard, opt_shard,
+                               jax.tree_util.tree_map(lambda _: met_shard,
+                                                      {"grad_norm": 0, "lr": 0,
+                                                       "loss": 0})),
+            ).lower(abstract, opt_abstract, inputs)
+    elif shape.kind == "prefill":
+        b_shard = batch_pspecs(inputs, mesh)
+
+        def prefill(params, batch):
+            return model.forward(params, batch, par)
+
+        logit_shard = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(data_axes_for(mesh), None, "model"))
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                prefill, in_shardings=(p_shard, b_shard), out_shardings=logit_shard,
+            ).lower(abstract, inputs)
+    else:  # decode
+        cache_ab = inputs["cache"]
+        c_shard = cache_pspecs(cache_ab, mesh, shape.global_batch)
+        tok_shard = batch_pspecs({"tokens": inputs["tokens"]}, mesh)["tokens"]
+        pos_shard = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        dp_ok = shape.global_batch % (
+            (mesh.shape.get("pod", 1)) * mesh.shape["data"]) == 0
+        logit_spec = jax.sharding.PartitionSpec(
+            data_axes_for(mesh) if dp_ok else None, None, "model")
+        logit_shard = jax.sharding.NamedSharding(mesh, logit_spec)
+
+        def decode(params, cache, tokens, pos):
+            return model.decode_step(params, cache, tokens, pos, par)
+
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                decode,
+                in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+                out_shardings=(logit_shard, c_shard),
+            ).lower(abstract, cache_ab, inputs["tokens"], inputs["pos"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_census(hlo)
+    n_chips = 512 if multi_pod else 256
+
+    result = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "params": param_count(model.param_specs()),
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "n_chips": n_chips,
+        "collectives": coll,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        for arch, shape, skip in cells():
+            if skip:
+                todo.append((arch.name, shape.name, None))
+            else:
+                todo.append((arch.name, shape.name, args.multi_pod))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        todo.append((args.arch, args.shape, args.multi_pod))
+
+    # resume support: skip cells already recorded in the JSONL output
+    done_keys = set()
+    results = []
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                if line.strip():
+                    r = json.loads(line)
+                    results.append(r)
+                    done_keys.add((r["arch"], r["shape"], r.get("mesh", "-")))
+
+    def emit(r):
+        results.append(r)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(r) + "\n")
+
+    for arch, shape, mp in todo:
+        if mp is None:
+            if (arch, shape, "-") not in done_keys:
+                emit({"arch": arch, "shape": shape, "mesh": "-",
+                      "status": "skipped",
+                      "reason": "long_500k requires sub-quadratic attention"})
+            print(f"[skip] {arch} x {shape}", flush=True)
+            continue
+        meshes = [False, True] if args.both_meshes else [mp]
+        for m in meshes:
+            mesh_name = "2x16x16" if m else "16x16"
+            if (arch, shape, mesh_name) in done_keys:
+                continue
+            tag = f"{arch} x {shape} x {mesh_name}"
+            try:
+                r = run_cell(arch, shape, m)
+                print(f"[ok]   {tag}  compile={r['compile_s']}s "
+                      f"flops/dev={r['flops_per_device']:.3e} "
+                      f"temp={r['temp_bytes']/2**30:.2f}GiB", flush=True)
+                emit(r)
+            except Exception as e:  # noqa: BLE001
+                print(f"[FAIL] {tag}: {e}", flush=True)
+                traceback.print_exc()
+                emit({"arch": arch, "shape": shape, "mesh": mesh_name,
+                      "status": "fail", "error": str(e)[:500]})
+    bad = [r for r in results if r["status"] == "fail"]
+    print(f"\n{len([r for r in results if r['status']=='ok'])} ok, "
+          f"{len(bad)} failed, "
+          f"{len([r for r in results if r['status']=='skipped'])} skipped")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "data_axes_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """256-chip pod mesh (data, model) or 512-chip 2-pod mesh (pod, data, model).
+
+    A function, not a module constant, so importing this module never touches
+    jax device state.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def data_axes_for(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

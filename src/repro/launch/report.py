@@ -1,0 +1,78 @@
+"""Generate EXPERIMENTS.md tables from dryrun/roofline JSONL artifacts.
+
+PYTHONPATH=src python -m repro.launch.report \
+    --dryrun dryrun_results.jsonl --roofline roofline.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _load(path):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                rows.append(json.loads(line))
+    return rows
+
+
+def dryrun_table(rows) -> str:
+    out = ["| arch | shape | mesh | status | compile_s | flops/chip | bytes/chip "
+           "| temp GiB/chip | collectives (per-chip bytes) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | skip (full attention"
+                       f" @500k) | | | | | |")
+            continue
+        if r["status"] == "fail":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | | "
+                       f"| | | {r.get('error','')[:60]} |")
+            continue
+        n = r["n_chips"]
+        coll = ", ".join(f"{k}:{v['count']}x/{v['bytes']/2**20:.0f}MiB"
+                         for k, v in sorted(r["collectives"].items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['compile_s']} | {r['flops_per_device']:.2e} "
+            f"| {r['bytes_accessed_per_device']:.2e} "
+            f"| {r['temp_bytes']/n/2**30:.2f} | {coll or '—'} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows) -> str:
+    out = ["| arch | shape | compute_t | memory_t | collective_t | dominant "
+           "| MODEL_FLOPS/HLO | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "fail":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_t_s']*1e3:.2f} ms "
+            f"| {r['memory_t_s']*1e3:.2f} ms | {r['collective_t_s']*1e3:.2f} ms "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="dryrun_results.jsonl")
+    ap.add_argument("--roofline", default=None)
+    args = ap.parse_args()
+    rows = _load(args.dryrun)
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    fail = sum(1 for r in rows if r["status"] == "fail")
+    skip = sum(1 for r in rows if r["status"] == "skipped")
+    print(f"### Dry-run summary: {ok} ok / {fail} fail / {skip} skipped\n")
+    print(dryrun_table(rows))
+    if args.roofline:
+        print("\n### Roofline\n")
+        print(roofline_table(_load(args.roofline)))
+
+
+if __name__ == "__main__":
+    main()

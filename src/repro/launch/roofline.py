@@ -1,0 +1,238 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis from compiled dry-run artifacts (single-pod mesh).
+
+XLA's cost model counts while-loop bodies ONCE, so scanned layer stacks
+under-report FLOPs/bytes by ~L x. We therefore lower *unrolled probes* with
+reduced layer counts (full batch/width — identical per-layer shapes), take
+the exact per-layer delta, and scale to the full depth:
+
+    total = probe(k1) + (full_units - k1_units) * [probe(k2) - probe(k1)]
+
+The same delta-scaling applies to the collective census. Memory comes from
+the full-depth compile (loops analyzed correctly for buffers).
+
+Terms (per chip, TPU v5e):
+    compute_t    = flops / 197e12          (bf16 MXU peak)
+    memory_t     = bytes_accessed / 819e9  (HBM bw)
+    collective_t = collective_bytes / 50e9 (ICI per-link bw, 1 link modeled)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --all --out roofline.jsonl
+  PYTHONPATH=src python -m repro.launch.roofline --arch yi-34b --shape train_4k
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, cells
+from repro.distributed.sharding import batch_pspecs, cache_pspecs, shardings_for
+from repro.launch.dryrun import collective_census
+from repro.launch.mesh import data_axes_for, make_production_mesh
+from repro.models import Parallel, build
+from repro.training import AdamWConfig, adamw_init, make_train_step
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9
+ICI_BW = 50e9
+N_CHIPS = 256
+
+
+def _probe_cfgs(arch):
+    """[(cfg, units)] probes + (unit_count_full, fixed_extra_units)."""
+    r = dataclasses.replace
+    if arch.family == "audio":
+        return ([(r(arch, n_layers=1, n_enc_layers=1), (1, 1)),
+                 (r(arch, n_layers=2, n_enc_layers=1), (2, 1)),
+                 (r(arch, n_layers=1, n_enc_layers=2), (1, 2))],
+                (arch.n_layers, arch.n_enc_layers))
+    if arch.family == "hybrid":
+        k = arch.attn_every
+        return ([(r(arch, n_layers=k), (1, 0)),
+                 (r(arch, n_layers=2 * k), (2, 0)),
+                 (r(arch, n_layers=k + 1), (1, 1))],
+                (arch.n_layers // k, arch.n_layers % k))
+    if arch.family == "ssm" and arch.slstm_every:
+        k = arch.slstm_every
+        return ([(r(arch, n_layers=k), (1,)), (r(arch, n_layers=2 * k), (2,))],
+                (arch.n_layers // k,))
+    return ([(r(arch, n_layers=1), (1,)), (r(arch, n_layers=2), (2,))],
+            (arch.n_layers,))
+
+
+def _lower_cell(cfg, shape, mesh, unroll, variant=None):
+    variant = variant or {}
+    par = Parallel(mesh=mesh, data_axes=data_axes_for(mesh), unroll=unroll,
+                   cast_bf16=variant.get("cast_bf16", False),
+                   attn_chunk=variant.get("attn_chunk", 0))
+    model = build(cfg)
+    abstract = model.abstract()
+    mode = "decode" if (shape.kind == "decode"
+                        and variant.get("decode_tp_only")) else "train"
+    p_shard = shardings_for(model.axes(), abstract, mesh, mode=mode)
+    inputs = model.input_specs(shape)
+    if shape.kind == "train":
+        opt_abstract = jax.eval_shape(adamw_init, abstract)
+        opt_shard = {"m": p_shard, "v": p_shard,
+                     "step": jax.sharding.NamedSharding(
+                         mesh, jax.sharding.PartitionSpec())}
+        fn = make_train_step(model, AdamWConfig(), par, remat=True)
+        lowered = jax.jit(
+            fn, in_shardings=(p_shard, opt_shard, batch_pspecs(inputs, mesh)),
+        ).lower(abstract, opt_abstract, inputs)
+    elif shape.kind == "prefill":
+        lowered = jax.jit(
+            lambda p, b: model.forward(p, b, par),
+            in_shardings=(p_shard, batch_pspecs(inputs, mesh)),
+        ).lower(abstract, inputs)
+    else:
+        cache_ab = inputs["cache"]
+        c_shard = cache_pspecs(cache_ab, mesh, shape.global_batch)
+        tok_shard = batch_pspecs({"tokens": inputs["tokens"]}, mesh)["tokens"]
+        pos_shard = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        lowered = jax.jit(
+            lambda p, c, t, i: model.decode_step(p, c, t, i, par),
+            in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+        ).lower(abstract, cache_ab, inputs["tokens"], inputs["pos"])
+    return lowered
+
+
+def _measure(cfg, shape, mesh, unroll=True, variant=None):
+    compiled = _lower_cell(cfg, shape, mesh, unroll, variant).compile()
+    cost = compiled.cost_analysis()
+    coll = collective_census(compiled.as_text())
+    coll_bytes = sum(v["bytes"] for v in coll.values())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "coll_bytes": float(coll_bytes),
+        "coll": coll,
+    }
+
+
+def _combine(probes, units_full):
+    """Solve per-unit deltas from probe measurements and extrapolate."""
+    out = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        base = probes[0]["meas"][key]
+        u0 = probes[0]["units"]
+        total = base
+        for dim in range(len(units_full)):
+            # find a probe differing from probe0 only in unit-dim `dim`
+            delta = None
+            for p in probes[1:]:
+                diff = [a - b for a, b in zip(p["units"], u0)]
+                if diff[dim] != 0 and all(d == 0 for i, d in enumerate(diff)
+                                          if i != dim):
+                    delta = (p["meas"][key] - base) / diff[dim]
+                    break
+            if delta is None:
+                continue
+            total += (units_full[dim] - u0[dim]) * delta
+        out[key] = max(total, 0.0)
+    return out
+
+
+def model_flops(arch, shape):
+    """6*N*D (train) / 2*N*D (inference), N = active matmul params."""
+    n_active = arch.active_param_count_est()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # one token per sequence
+
+
+def run_cell(arch_name, shape_name, variant=None):
+    arch = ARCHS[arch_name]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    probes_spec, units_full = _probe_cfgs(arch)
+    probes = []
+    t0 = time.time()
+    for cfg, units in probes_spec:
+        probes.append({"units": units,
+                       "meas": _measure(cfg, shape, mesh, variant=variant)})
+    totals = _combine(probes, units_full)
+    compute_t = totals["flops"] / PEAK_FLOPS
+    memory_t = totals["bytes"] / HBM_BW
+    coll_t = totals["coll_bytes"] / ICI_BW
+    dominant = max((compute_t, "compute"), (memory_t, "memory"),
+                   (coll_t, "collective"))[1]
+    mf = model_flops(arch, shape)
+    hlo_total = totals["flops"] * N_CHIPS
+    bound = max(compute_t, memory_t, coll_t)
+    return {
+        "arch": arch_name, "shape": shape_name, "mesh": "16x16",
+        "flops_per_chip": totals["flops"], "bytes_per_chip": totals["bytes"],
+        "coll_bytes_per_chip": totals["coll_bytes"],
+        "compute_t_s": compute_t, "memory_t_s": memory_t,
+        "collective_t_s": coll_t, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "roofline_fraction": (compute_t / bound) if bound else 0.0,
+        "probe_s": round(time.time() - t0, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--cast-bf16", action="store_true")
+    ap.add_argument("--attn-chunk", type=int, default=0)
+    ap.add_argument("--decode-tp-only", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    variant = {"cast_bf16": args.cast_bf16, "attn_chunk": args.attn_chunk,
+               "decode_tp_only": args.decode_tp_only}
+
+    todo = []
+    if args.all:
+        for arch, shape, skip in cells():
+            if not skip:
+                todo.append((arch.name, shape.name))
+    else:
+        todo.append((args.arch, args.shape))
+
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                if line.strip():
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"]))
+
+    for arch, shape in todo:
+        if (arch, shape) in done:
+            continue
+        try:
+            r = run_cell(arch, shape, variant=variant)
+            if args.tag:
+                r["variant"] = args.tag
+            print(f"[ok] {arch} x {shape}: compute={r['compute_t_s']*1e3:.2f}ms "
+                  f"mem={r['memory_t_s']*1e3:.2f}ms "
+                  f"coll={r['collective_t_s']*1e3:.2f}ms -> {r['dominant']} "
+                  f"(useful={r['useful_ratio']:.2f})", flush=True)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+
+            traceback.print_exc()
+            r = {"arch": arch, "shape": shape, "status": "fail",
+                 "error": str(e)[:300]}
+            print(f"[FAIL] {arch} x {shape}: {e}", flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Training launcher: ``python -m repro.launch.train --arch smollm-360m ...``
+
+Runs a real training loop (CPU-scale uses --reduced; cluster-scale uses the
+production mesh). Wires together: configs -> model -> sharding rules ->
+AdamW -> fault-tolerant TrainLoop (+checkpoint auto-resume) -> data pipeline.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import ARCHS, reduced
+from repro.data import ShardedBatches
+from repro.distributed.sharding import batch_pspecs, shardings_for
+from repro.launch.mesh import data_axes_for, make_production_mesh
+from repro.models import Parallel, build
+from repro.training import AdamWConfig, adamw_init, make_train_step
+from repro.training.loop import TrainLoop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS.keys()))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU)")
+    ap.add_argument("--width", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--mesh", action="store_true", help="use the production mesh")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced(cfg, layers=args.layers, width=args.width)
+    model = build(cfg)
+
+    if args.mesh:
+        mesh = make_production_mesh()
+        par = Parallel(mesh=mesh, data_axes=data_axes_for(mesh))
+        p_shard = shardings_for(model.axes(), model.abstract(), mesh)
+    else:
+        mesh, par, p_shard = None, Parallel(mesh=None), None
+
+    params = model.init(jax.random.PRNGKey(0))
+    if p_shard is not None:
+        params = jax.tree_util.tree_map(jax.device_put, params, p_shard)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps)
+    opt_state = adamw_init(params)
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg, par, remat=True))
+    ckpt = Checkpointer(args.ckpt_dir)
+    start = 0
+    if args.resume:
+        restored, start = ckpt.restore({"params": params, "opt": opt_state})
+        if restored is not None:
+            params = jax.tree_util.tree_map(jnp.asarray, restored["params"])
+            opt_state = jax.tree_util.tree_map(jnp.asarray, restored["opt"])
+            print(f"resumed from step {start}")
+
+    batches = ShardedBatches(cfg.vocab, args.seq, args.batch, seed=0,
+                             start_step=start)
+    loop = TrainLoop(step_fn, ckpt, ckpt_every=args.ckpt_every)
+    params, opt_state, metrics = loop.run(params, opt_state, batches,
+                                          num_steps=args.steps, start_step=start)
+    print(f"final loss: {float(metrics['loss']):.4f}")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: dense / MoE / VLM / audio / hybrid / SSM families."""
+from .mlp import Parallel  # noqa: F401
+from .registry import Model, build  # noqa: F401
+from .spec import ParamSpec, abstract_params, init_params, logical_axes, param_count  # noqa: F401

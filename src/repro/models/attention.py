@@ -1,0 +1,101 @@
+"""GQA attention: training (full / sliding-window / local:global) + cached decode.
+
+Layout: q (B, S, H, hd); k/v (B, T, Kv, hd). Query heads are grouped over KV
+heads ((B, S, Kv, G, hd), G = H // Kv) so the GQA structure is explicit in the
+einsums — XLA shards the Kv/G dims over the "model" mesh axis. Softmax runs in
+float32.
+
+``window`` may be a traced scalar (gemma3 selects per-layer local/global width
+inside a scanned block); the mask is computed dynamically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gqa_attention", "decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, window):
+    causal = q_pos[:, None] >= k_pos[None, :]
+    if window is None:
+        return causal
+    win = q_pos[:, None] - k_pos[None, :] < window
+    return causal & win
+
+
+def gqa_attention(q, k, v, q_pos, k_pos, window=None, chunk: int = 0):
+    """Training/prefill attention. window: None, int, or traced scalar.
+
+    chunk > 0 enables causal query-chunking: query block j only touches keys
+    in its causal (and window) range, cutting score FLOPs/bytes ~2x for full
+    causal attention and to O(S*(chunk+window)) for sliding-window layers.
+    Requires a *static* window (None/int) and S % chunk == 0.
+    """
+    B, S, H, hd = q.shape
+    if (chunk and S > chunk and S % chunk == 0
+            and (window is None or isinstance(window, int))):
+        return _gqa_chunked(q, k, v, q_pos, k_pos, window, chunk)
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, S, Kv, G, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    mask = _mask(q_pos, k_pos, window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def _gqa_chunked(q, k, v, q_pos, k_pos, window, chunk):
+    """Causal query-chunked attention with static per-chunk KV ranges."""
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    outs = []
+    for j in range(S // chunk):
+        q_lo, q_hi = j * chunk, (j + 1) * chunk
+        k_lo = 0 if window is None else max(0, q_hi - chunk - window + 1)
+        k_lo = (k_lo // chunk) * chunk  # align for clean slicing
+        qg = q[:, q_lo:q_hi].reshape(B, chunk, Kv, G, hd)
+        ks = k[:, k_lo:q_hi]
+        vs = v[:, k_lo:q_hi]
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, ks,
+                            preferred_element_type=jnp.float32) * scale
+        mask = _mask(q_pos[q_lo:q_hi], k_pos[k_lo:q_hi], window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        outs.append(jnp.einsum("bkgst,btkd->bskgd", probs, vs)
+                    .reshape(B, chunk, H, hd))
+    return jnp.concatenate(outs, axis=1)
+
+
+def decode_attention(q, k_cache, v_cache, pos, k_pos=None, window=None):
+    """One-token attention against a cache.
+
+    q: (B, 1, H, hd); k_cache/v_cache: (B, T, Kv, hd); pos: current index
+    (number of valid cache entries is pos+1 after insertion).
+    k_pos: optional explicit key positions (B-invariant, (T,)) for ring
+    buffers; defaults to arange(T).
+    """
+    B, _, H, hd = q.shape
+    T, Kv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Kv, G, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    if k_pos is None:
+        k_pos = jnp.arange(T)
+    valid = (k_pos >= 0) & (k_pos <= pos)  # -1 marks empty ring-buffer slots
+    if window is not None:
+        valid = valid & (pos - k_pos < window)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v_cache)
+    return out.reshape(B, 1, H, hd)

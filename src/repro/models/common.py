@@ -1,0 +1,70 @@
+"""Shared model components: norms, RoPE, embeddings, attention masks.
+
+Compute convention: parameters are stored float32 (optimizer master copies),
+cast to bfloat16 at use; softmax/norm statistics accumulate in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ACT_DTYPE = jnp.bfloat16
+
+__all__ = ["ACT_DTYPE", "rms_norm", "layer_norm", "rope_freqs", "apply_rope",
+           "silu", "gelu", "causal_window_mask", "pad_vocab"]
+
+
+def pad_vocab(v: int, multiple: int = 32) -> int:
+    return -(-v // multiple) * multiple
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32) + b.astype(
+        jnp.float32
+    )
+    return out.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+def rope_freqs(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """(sin, cos) of shape positions.shape + (head_dim//2,), float32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); sin/cos: (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_window_mask(q_pos: jax.Array, k_pos: jax.Array, window) -> jax.Array:
+    """True where attention is allowed. window: 0/None = full causal."""
+    causal = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is None:
+        return causal
+    win = q_pos[..., :, None] - k_pos[..., None, :] < window
+    return causal & win

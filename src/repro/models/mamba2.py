@@ -1,0 +1,189 @@
+"""Mamba-2 (SSD) block: chunked-parallel training scan + recurrent decode.
+
+Implements the state-space dual form (Dao & Gu 2024): intra-chunk quadratic
+attention-like einsums + inter-chunk state recurrence (lax.scan over chunks).
+Single B/C group; heads H with head dim P; state dim N.
+
+TPU notes: the chunk length is the MXU tile knob (default 256); all einsums
+keep (Lc, N/P) as the contracted/minor dims so the compiler maps them onto
+128x128 MXU tiles. Decay products are computed in log space (float32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import silu, rms_norm
+
+__all__ = ["ssd_chunked", "ssd_decode_step", "mamba2_forward", "mamba2_decode",
+           "mamba2_param_specs"]
+
+
+def _segsum(dA):
+    """dA: (..., Lc) log-decays -> (..., Lc, Lc) with out[i,j]=sum_{j<t<=i} dA_t."""
+    Lc = dA.shape[-1]
+    cum = jnp.cumsum(dA, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # (.., i, j) = cum_i - cum_j
+    mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, C, D, chunk: int):
+    """x:(B,S,H,P) dt:(B,S,H) A:(H,) Bm,C:(B,S,N) -> y:(B,S,H,P), state:(B,H,P,N)."""
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    Nc = S // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(Bsz, Nc, chunk, H, Pd)
+    dtc = dt.reshape(Bsz, Nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(Bsz, Nc, chunk, N)
+    Cc = C.reshape(Bsz, Nc, chunk, N)
+    dA = dtc * A.astype(f32)[None, None, None, :]  # (B,Nc,Lc,H) log decay
+    dA = jnp.moveaxis(dA, -1, -2)  # (B,Nc,H,Lc)
+    cum = jnp.cumsum(dA, axis=-1)
+
+    # intra-chunk: Y[i] = sum_{j<=i} C_i . B_j exp(cum_i - cum_j) dt_j x_j
+    L = jnp.exp(_segsum(dA))  # (B,Nc,H,Lc,Lc)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc.astype(f32), Bc.astype(f32))
+    xdt = xc.astype(f32) * dtc[..., None]  # (B,Nc,Lc,H,P)
+    y = jnp.einsum("bchij,bcij,bcjhp->bcihp", L, scores, xdt)
+
+    # chunk states: S_c = sum_j exp(cum_end - cum_j) B_j (dt x)_j  (B,Nc,H,P,N)
+    decay_end = jnp.exp(cum[..., -1:] - cum)  # (B,Nc,H,Lc)
+    states = jnp.einsum("bchj,bcjn,bcjhp->bchpn", decay_end, Bc.astype(f32), xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])  # (B,Nc,H) total chunk decay
+
+    def step(s_prev, inp):
+        s_c, dec = inp  # (B,H,P,N), (B,H)
+        s_new = dec[..., None, None] * s_prev + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((Bsz, H, Pd, N), f32)
+    s_final, s_prevs = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)  # (B,Nc,H,P,N) state entering chunk c
+
+    # inter-chunk contribution: C_i . (exp(cum_i) * S_prev)
+    y = y + jnp.einsum("bcin,bchi,bchpn->bcihp", Cc.astype(f32), jnp.exp(cum), s_prevs)
+    y = y + xc.astype(f32) * D.astype(f32)[None, None, None, :, None]
+    return y.reshape(Bsz, S, H, Pd).astype(x.dtype), s_final
+
+
+def ssd_decode_step(state, x, dt, A, Bm, C, D):
+    """One-token update. state:(B,H,P,N) x:(B,H,P) dt:(B,H) Bm,C:(B,N)."""
+    f32 = jnp.float32
+    dtf = dt.astype(f32)
+    dec = jnp.exp(dtf * A.astype(f32)[None, :])  # (B,H)
+    upd = jnp.einsum("bn,bhp->bhpn", Bm.astype(f32), x.astype(f32) * dtf[..., None])
+    state = dec[..., None, None] * state + upd
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(f32), state)
+    y = y + x.astype(f32) * D.astype(f32)[None, :, None]
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 block (in_proj -> causal conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_param_specs(cfg):
+    from .spec import ParamSpec
+
+    d = cfg.d_model
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_expand * cfg.d_model // cfg.ssm_heads, cfg.ssm_state
+    d_in = H * Pd
+    conv_ch = d_in + 2 * N
+    return {
+        "in_norm": ParamSpec((d,), ("embed",), init="zeros"),
+        "in_proj": ParamSpec((d, 2 * d_in + 2 * N + H), ("embed", "heads")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_ch), (None, "heads")),
+        "conv_b": ParamSpec((conv_ch,), ("heads",), init="zeros"),
+        "A_log": ParamSpec((H,), (None,), init="zeros"),
+        "D": ParamSpec((H,), (None,), init="ones"),
+        "dt_bias": ParamSpec((H,), (None,), init="zeros"),
+        "norm_w": ParamSpec((d_in,), ("heads",), init="zeros"),
+        "out_proj": ParamSpec((d_in, d), ("heads", "embed")),
+    }
+
+
+def _split_proj(cfg, proj):
+    H = cfg.ssm_heads
+    Pd = cfg.ssm_expand * cfg.d_model // H
+    N = cfg.ssm_state
+    d_in = H * Pd
+    z, xin, Bm, C, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    return z, xin, Bm, C, dt, H, Pd, N, d_in
+
+
+def mamba2_forward(params, x, cfg):
+    """x: (B, S, d) -> (B, S, d); pre-norm + full-sequence chunked SSD."""
+    B, S, d = x.shape
+    dt_ = x.dtype
+    x = rms_norm(x, params["in_norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(dt_))
+    z, xin, Bm, C, dtp, H, Pd, N, d_in = _split_proj(cfg, proj)
+
+    xBC = jnp.concatenate([xin, Bm, C], axis=-1)
+    w = params["conv_w"].astype(dt_)  # (K, ch)
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(pad[:, i : i + S, :] * w[i][None, None, :] for i in range(K))
+    xBC = silu(conv + params["conv_b"].astype(dt_)[None, None, :])
+    xin, Bm, C = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+
+    dt_act = jax.nn.softplus(dtp.astype(jnp.float32)
+                             + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(
+        xin.reshape(B, S, H, Pd), dt_act, A, Bm, C, params["D"], cfg.ssm_chunk
+    )
+    y = y.reshape(B, S, d_in) * silu(z)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(dt_))
+
+
+def mamba2_init_cache(cfg, batch, dtype=jnp.float32):
+    H = cfg.ssm_heads
+    Pd = cfg.ssm_expand * cfg.d_model // H
+    N = cfg.ssm_state
+    d_in = H * Pd
+    conv_ch = d_in + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, Pd, N), jnp.float32),
+    }
+
+
+def mamba2_decode(params, cache, x, cfg):
+    """x: (B, 1, d) one token; returns (y (B,1,d), new cache)."""
+    B, _, d = x.shape
+    dt_ = x.dtype
+    x = rms_norm(x, params["in_norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(dt_))[:, 0]
+    z, xin, Bm, C, dtp, H, Pd, N, d_in = _split_proj(cfg, proj)
+
+    xBC = jnp.concatenate([xin, Bm, C], axis=-1)  # (B, ch)
+    conv_buf = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B,K,ch)
+    w = params["conv_w"].astype(dt_)
+    conv = jnp.einsum("bkc,kc->bc", conv_buf, w) + params["conv_b"].astype(dt_)
+    xBC_a = silu(conv)
+    xin, Bm, C = jnp.split(xBC_a, [d_in, d_in + N], axis=-1)
+
+    dt_act = jax.nn.softplus(dtp.astype(jnp.float32)
+                             + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, ssm = ssd_decode_step(
+        cache["ssm"], xin.reshape(B, H, Pd), dt_act, A, Bm, C, params["D"]
+    )
+    y = y.reshape(B, d_in) * silu(z)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, params["out_proj"].astype(dt_))[:, None, :]
+    return out.astype(dt_), {"conv": conv_buf[:, 1:].astype(cache["conv"].dtype),
+                             "ssm": ssm}

@@ -1,0 +1,126 @@
+"""Uniform model interface over all architecture families.
+
+``build(cfg)`` returns a ``Model`` exposing:
+  param_specs() / init(key) / abstract()      — declaration vs allocation
+  loss(params, batch, par)                    — training objective
+  forward(params, batch, par)                 — logits
+  init_cache(batch, ctx) / cache_specs(...)   — decode state
+  decode_step(params, cache, tokens, pos, par)
+  input_specs(shape_cfg) -> (batch pytree of ShapeDtypeStruct, labels kind)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import transformer, whisper, zamba, xlstm_model
+from .common import ACT_DTYPE
+from .mlp import Parallel
+from .spec import abstract_params, init_params, logical_axes
+
+__all__ = ["Model", "build"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    mod: Any  # module implementing the family
+
+    # -- parameters ---------------------------------------------------------
+    def param_specs(self):
+        return self.mod.param_specs(self.cfg)
+
+    def init(self, key):
+        return init_params(key, self.param_specs())
+
+    def abstract(self):
+        return abstract_params(self.param_specs())
+
+    def axes(self):
+        return logical_axes(self.param_specs())
+
+    # -- compute ------------------------------------------------------------
+    def _cast(self, params, par: Parallel):
+        if not par.cast_bf16:
+            return params
+        return jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.bfloat16)
+            if (p.dtype == jnp.float32 and p.ndim >= 2) else p,
+            params,
+        )
+
+    def loss(self, params, batch, par: Parallel, remat: bool = True):
+        return self.mod.loss_fn(self._cast(params, par), batch, self.cfg, par,
+                                remat=remat)
+
+    def forward(self, params, batch, par: Parallel):
+        params = self._cast(params, par)
+        if self.cfg.family == "audio":
+            return self.mod.forward(params, batch, self.cfg, par)
+        if self.cfg.family == "vlm":
+            return self.mod.forward(params, batch["tokens"], self.cfg, par,
+                                    vision_embeds=batch.get("vision_embeds"))[0]
+        out = self.mod.forward(params, batch["tokens"], self.cfg, par)
+        return out[0] if isinstance(out, tuple) else out
+
+    def init_cache(self, batch: int, ctx: int):
+        return self.mod.init_cache(self.cfg, batch, ctx)
+
+    def cache_specs(self, batch: int, ctx: int):
+        cache = jax.eval_shape(lambda: self.mod.init_cache(self.cfg, batch, ctx))
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos, par: Parallel):
+        return self.mod.decode_step(self._cast(params, par), cache, tokens, pos,
+                                    self.cfg, par)
+
+    # -- shapes ---------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            if self.cfg.family == "audio":
+                # decoder sees (B, S) tokens; encoder the stubbed frames
+                return {
+                    "frames": jax.ShapeDtypeStruct(
+                        (B, whisper.N_FRAMES, self.cfg.d_model), ACT_DTYPE),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32),
+                }
+            if self.cfg.family == "vlm":
+                npatch = self.cfg.n_patches
+                return {
+                    "tokens": jax.ShapeDtypeStruct((B, S - npatch), i32),
+                    "vision_embeds": jax.ShapeDtypeStruct(
+                        (B, npatch, self.cfg.d_model), ACT_DTYPE),
+                    "labels": jax.ShapeDtypeStruct((B, S - npatch), i32),
+                }
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        # decode: one new token against a ctx-length cache
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "cache": self.cache_specs(B, S),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "audio": whisper,
+    "hybrid": zamba,
+    "ssm": xlstm_model,
+}
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg, mod=_FAMILY_MODULES[cfg.family])

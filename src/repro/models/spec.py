@@ -1,0 +1,83 @@
+"""Parameter-spec machinery: declare-once parameters with logical sharding axes.
+
+Every model declares its parameters as a pytree of ``ParamSpec`` (shape +
+logical axis names + init). From one declaration we derive:
+
+  * ``init_params``        — materialize real arrays (smoke tests, training)
+  * ``abstract_params``    — ShapeDtypeStructs (dry-run: no allocation)
+  * ``logical_axes``       — pytree of axis-name tuples -> PartitionSpec via
+                             the rules in ``repro.distributed.sharding``
+
+Logical axis vocabulary (mapped to mesh axes by sharding rules):
+  "batch", "seq"            activations
+  "embed"                   model width (d_model) — FSDP-sharded on "data"
+  "heads", "kv_heads"       attention heads — TP-sharded on "model"
+  "mlp"                     FFN hidden — TP-sharded on "model"
+  "vocab"                   vocabulary — TP-sharded on "model"
+  "experts"                 MoE experts — EP-sharded on "model"
+  "layers", "conv", "state" never sharded
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "logical_axes", "param_count"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis per dim (None = replicated)
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "embed" | "scaled"
+    dtype: Any = jnp.float32
+    fan_in_dims: tuple[int, ...] = ()  # dims forming fan-in for scaled init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        return jax.random.normal(key, spec.shape, spec.dtype) * 0.02
+    # scaled / normal: 1/sqrt(fan_in)
+    if spec.fan_in_dims:
+        fan_in = math.prod(spec.shape[d] for d in spec.fan_in_dims)
+    else:
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, spec.shape, spec.dtype) * scale
+
+
+def init_params(key: jax.Array, specs) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(specs) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec
+    )
+
+
+def logical_axes(specs) -> Any:
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return sum(math.prod(s.shape) for s in leaves)

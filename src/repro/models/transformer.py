@@ -1,0 +1,273 @@
+"""Decoder-only transformer LM: dense / MoE / VLM-stub families.
+
+Layers run under ``lax.scan`` over stacked parameters (small HLO, fast
+compile, remat-policy control). Attention pattern (full / sliding-window /
+gemma3 5:1 local:global) is selected per layer by a scanned boolean so one
+block serves every family.
+
+Decode uses a uniform ring-buffer KV cache: slot = pos % T with explicit key
+positions, which degenerates to a plain cache when T = context length and to
+a rolling window when T = window (mixtral SWA).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .attention import decode_attention, gqa_attention
+from .common import ACT_DTYPE, pad_vocab, rms_norm, rope_freqs, apply_rope
+from .mlp import Parallel, moe_ffn, swiglu
+from .spec import ParamSpec
+
+__all__ = ["param_specs", "forward", "loss_fn", "init_cache", "decode_step",
+           "shard_act", "LARGE_WINDOW"]
+
+LARGE_WINDOW = 1 << 30
+
+
+def shard_act(x, par: Parallel, spec=None):
+    if par.mesh is None:
+        return x
+    if spec is None:
+        dp = 1
+        for a in par.data_axes:
+            dp *= par.mesh.shape[a]
+        if x.shape[0] % dp != 0:  # e.g. long_500k decode with batch 1
+            return x
+        spec = P(tuple(par.data_axes), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(par.mesh, spec)
+    )
+
+
+def _layer_specs(cfg):
+    d, H, Kv, hd, L, f = (cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd,
+                          cfg.n_layers, cfg.d_ff)
+    attn = {
+        "wq": ParamSpec((L, d, H, hd), ("layers", "embed", "heads", None)),
+        "wk": ParamSpec((L, d, Kv, hd), ("layers", "embed", "kv_heads", None)),
+        "wv": ParamSpec((L, d, Kv, hd), ("layers", "embed", "kv_heads", None)),
+        "wo": ParamSpec((L, H, hd, d), ("layers", "heads", None, "embed"),
+                        fan_in_dims=(1, 2)),
+    }
+    if cfg.family == "moe":
+        mlp = {
+            "router": ParamSpec((L, d, cfg.n_experts), ("layers", "embed", None)),
+            "wg": ParamSpec((L, cfg.n_experts, d, f),
+                            ("layers", "experts", "embed", "mlp")),
+            "wu": ParamSpec((L, cfg.n_experts, d, f),
+                            ("layers", "experts", "embed", "mlp")),
+            "wd": ParamSpec((L, cfg.n_experts, f, d),
+                            ("layers", "experts", "mlp", "embed")),
+        }
+    else:
+        mlp = {
+            "wg": ParamSpec((L, d, f), ("layers", "embed", "mlp")),
+            "wu": ParamSpec((L, d, f), ("layers", "embed", "mlp")),
+            "wd": ParamSpec((L, f, d), ("layers", "mlp", "embed")),
+        }
+    return {
+        "attn": attn,
+        "mlp": mlp,
+        "ln1": ParamSpec((L, d), ("layers", "embed"), init="zeros"),
+        "ln2": ParamSpec((L, d), ("layers", "embed"), init="zeros"),
+    }
+
+
+def param_specs(cfg):
+    vp = pad_vocab(cfg.vocab)
+    specs = {
+        "embed": ParamSpec((vp, cfg.d_model), ("vocab", "embed"), init="embed"),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "layers": _layer_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, vp), ("embed", "vocab"))
+    return specs
+
+
+def _is_global_flags(cfg):
+    """(L,) bool: which layers use full/global attention."""
+    import numpy as np
+
+    L = cfg.n_layers
+    if cfg.local_global_ratio:
+        r = cfg.local_global_ratio
+        return jnp.asarray([(i + 1) % (r + 1) == 0 for i in range(L)], bool)
+    if cfg.sliding_window:
+        return jnp.zeros((L,), bool)
+    return jnp.ones((L,), bool)
+
+
+def _window_for(cfg, is_global):
+    """Traced per-layer effective window (LARGE when global)."""
+    if not cfg.sliding_window:
+        return None
+    return jnp.where(is_global, LARGE_WINDOW, cfg.sliding_window)
+
+
+def _rope_pair(cfg, positions):
+    sin_l, cos_l = rope_freqs(positions, cfg.hd, cfg.rope_theta)
+    if cfg.rope_theta_global:
+        sin_g, cos_g = rope_freqs(positions, cfg.hd, cfg.rope_theta_global)
+    else:
+        sin_g, cos_g = sin_l, cos_l
+    return (sin_l, cos_l), (sin_g, cos_g)
+
+
+def _attn_block(lp, x, cfg, sin, cos, q_pos, k_pos, window, par=None):
+    dt = x.dtype
+    xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wv"].astype(dt))
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    chunk = par.attn_chunk if par is not None else 0
+    use_window = window
+    if chunk:
+        if cfg.local_global_ratio:
+            chunk = 0  # traced per-layer window: keep the masked path
+        elif cfg.sliding_window:
+            use_window = cfg.sliding_window  # static SWA window
+    out = gqa_attention(q, k, v, q_pos, k_pos, use_window, chunk=chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"].astype(dt))
+
+
+def _mlp_block(lp, x, cfg, par):
+    xn = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        out, aux = moe_ffn(xn, lp["mlp"]["router"], lp["mlp"]["wg"],
+                           lp["mlp"]["wu"], lp["mlp"]["wd"],
+                           n_experts=cfg.n_experts, top_k=cfg.top_k, par=par)
+        return out, aux
+    return swiglu(xn, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"]), 0.0
+
+
+def _block(carry, scanned, cfg, par, ropes, q_pos, k_pos):
+    x, aux = carry
+    lp, is_global = scanned
+    (sin_l, cos_l), (sin_g, cos_g) = ropes
+    sin = jnp.where(is_global, sin_g, sin_l)
+    cos = jnp.where(is_global, cos_g, cos_l)
+    window = _window_for(cfg, is_global)
+    x = shard_act(
+        x + _attn_block(lp, x, cfg, sin, cos, q_pos, k_pos, window, par=par), par)
+    mlp_out, a = _mlp_block(lp, x, cfg, par)
+    x = shard_act(x + mlp_out, par)
+    return (x, aux + a), None
+
+
+def embed_tokens(params, tokens, cfg):
+    vp = pad_vocab(cfg.vocab)
+    tok = jnp.clip(tokens, 0, vp - 1)
+    return params["embed"][tok].astype(ACT_DTYPE)
+
+
+def logits_from_hidden(params, x, cfg):
+    xn = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params.get("unembed")
+    if w is None:
+        w = params["embed"].T
+    return jnp.einsum("bsd,dv->bsv", xn, w.astype(ACT_DTYPE))
+
+
+def forward(params, tokens, cfg, par: Parallel, vision_embeds=None,
+            remat: bool = False):
+    """tokens (B, S_text) -> logits (B, S_total, vocab_padded)."""
+    x = embed_tokens(params, tokens, cfg)
+    if vision_embeds is not None:  # VLM stub frontend: prepend patch embeddings
+        x = jnp.concatenate([vision_embeds.astype(ACT_DTYPE), x], axis=1)
+    x = shard_act(x, par)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    ropes = _rope_pair(cfg, positions)
+    flags = _is_global_flags(cfg)
+
+    body = partial(_block, cfg=cfg, par=par, ropes=ropes,
+                   q_pos=positions, k_pos=positions)
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable, static_argnums=()
+        )
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.asarray(0.0, jnp.float32)),
+                               (params["layers"], flags), unroll=par.unroll)
+    return logits_from_hidden(params, x, cfg), aux
+
+
+def loss_fn(params, batch, cfg, par: Parallel, remat: bool = True,
+            aux_coef: float = 0.01):
+    """Causal LM cross-entropy (labels -1 = ignored)."""
+    logits, aux = forward(params, batch["tokens"], cfg, par,
+                          vision_embeds=batch.get("vision_embeds"), remat=remat)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # vision prefix: no loss on patches
+        pad = logits.shape[1] - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], pad), -1, labels.dtype), labels], axis=1
+        )
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1)
+    zloss = 1e-4 * jnp.sum((logz * mask) ** 2) / jnp.maximum(jnp.sum(mask), 1)
+    return nll + zloss + aux_coef * aux
+
+
+def init_cache(cfg, batch, ctx, dtype=ACT_DTYPE):
+    """Ring-buffer KV cache. ctx = window for pure-SWA archs, else context."""
+    T = min(ctx, cfg.sliding_window) if (cfg.sliding_window
+                                         and not cfg.local_global_ratio) else ctx
+    L, Kv, hd = cfg.n_layers, cfg.n_kv, cfg.hd
+    return {
+        "k": jnp.zeros((L, batch, T, Kv, hd), dtype),
+        "v": jnp.zeros((L, batch, T, Kv, hd), dtype),
+        "kpos": jnp.full((T,), -1, jnp.int32),
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg, par: Parallel):
+    """One-token decode. tokens (B, 1); pos scalar int32."""
+    x = embed_tokens(params, tokens, cfg)
+    x = shard_act(x, par)
+    T = cache["k"].shape[2]
+    slot = pos % T
+    _z = jnp.asarray(0, jnp.int32)
+    kpos = cache["kpos"].at[slot].set(pos)
+    posf = jnp.asarray(pos, jnp.float32)[None]
+    ropes = _rope_pair(cfg, posf)
+    flags = _is_global_flags(cfg)
+
+    def body(carry, scanned):
+        x = carry
+        lp, is_global, k_l, v_l = scanned
+        (sin_l, cos_l), (sin_g, cos_g) = ropes
+        sin = jnp.where(is_global, sin_g, sin_l)
+        cos = jnp.where(is_global, cos_g, cos_l)
+        window = _window_for(cfg, is_global)
+        dt = x.dtype
+        xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = apply_rope(
+            jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wq"].astype(dt)), sin, cos)
+        k = apply_rope(
+            jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wk"].astype(dt)), sin, cos)
+        v = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wv"].astype(dt))
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (_z, slot.astype(jnp.int32), _z, _z))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (_z, slot.astype(jnp.int32), _z, _z))
+        out = decode_attention(q, k_l, v_l, pos, k_pos=kpos, window=window)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"].astype(dt))
+        mlp_out, _ = _mlp_block(lp, x, cfg, par)
+        x = shard_act(x + mlp_out, par)
+        return x, (k_l, v_l)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], flags, cache["k"], cache["v"]),
+        unroll=par.unroll,
+    )
+    logits = logits_from_hidden(params, x, cfg)
+    return logits, {"k": k_new, "v": v_new, "kpos": kpos}

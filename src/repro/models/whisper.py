@@ -1,0 +1,219 @@
+"""Whisper-style encoder-decoder backbone (stub conv frontend).
+
+Per the assignment, the audio frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, T_frames, d_model); the conv1d+GELU stem is
+out of scope. Encoder: bidirectional self-attention over frames. Decoder:
+causal self-attention + cross-attention, sinusoidal positions.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .attention import decode_attention, gqa_attention
+from .common import ACT_DTYPE, pad_vocab, layer_norm
+from .mlp import Parallel
+from .spec import ParamSpec
+from .transformer import shard_act
+
+__all__ = ["param_specs", "encode", "forward", "loss_fn", "init_cache",
+           "decode_step", "N_FRAMES"]
+
+N_FRAMES = 1500  # 30 s of audio after the (stubbed) conv stem
+
+
+def _sinusoid(S, d):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(ACT_DTYPE)
+
+
+def _attn_specs(cfg, L):
+    d, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    return {
+        "wq": ParamSpec((L, d, H, hd), ("layers", "embed", "heads", None)),
+        "wk": ParamSpec((L, d, Kv, hd), ("layers", "embed", "kv_heads", None)),
+        "wv": ParamSpec((L, d, Kv, hd), ("layers", "embed", "kv_heads", None)),
+        "wo": ParamSpec((L, H, hd, d), ("layers", "heads", None, "embed"),
+                        fan_in_dims=(1, 2)),
+    }
+
+
+def _mlp_specs(cfg, L):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w1": ParamSpec((L, d, f), ("layers", "embed", "mlp")),
+        "b1": ParamSpec((L, f), ("layers", "mlp"), init="zeros"),
+        "w2": ParamSpec((L, f, d), ("layers", "mlp", "embed")),
+        "b2": ParamSpec((L, d), ("layers", "embed"), init="zeros"),
+    }
+
+
+def _ln_specs(cfg, L, name):
+    d = cfg.d_model
+    return {
+        f"{name}_w": ParamSpec((L, d), ("layers", "embed"), init="ones"),
+        f"{name}_b": ParamSpec((L, d), ("layers", "embed"), init="zeros"),
+    }
+
+
+def param_specs(cfg):
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    vp = pad_vocab(cfg.vocab)
+    d = cfg.d_model
+    return {
+        "embed": ParamSpec((vp, d), ("vocab", "embed"), init="embed"),
+        "enc": {"attn": _attn_specs(cfg, Le), "mlp": _mlp_specs(cfg, Le),
+                **_ln_specs(cfg, Le, "ln1"), **_ln_specs(cfg, Le, "ln2")},
+        "dec": {"attn": _attn_specs(cfg, Ld), "cross": _attn_specs(cfg, Ld),
+                "mlp": _mlp_specs(cfg, Ld), **_ln_specs(cfg, Ld, "ln1"),
+                **_ln_specs(cfg, Ld, "ln2"), **_ln_specs(cfg, Ld, "ln3")},
+        "enc_norm_w": ParamSpec((d,), ("embed",), init="ones"),
+        "enc_norm_b": ParamSpec((d,), ("embed",), init="zeros"),
+        "dec_norm_w": ParamSpec((d,), ("embed",), init="ones"),
+        "dec_norm_b": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def _proj_qkv(lp, xq, xkv, dt):
+    q = jnp.einsum("bsd,dhk->bshk", xq, lp["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", xkv, lp["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", xkv, lp["wv"].astype(dt))
+    return q, k, v
+
+
+def _mlp(lp, x, dt):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, lp["w1"].astype(dt))
+                    + lp["b1"].astype(dt))
+    return jnp.einsum("bsf,fd->bsd", h, lp["w2"].astype(dt)) + lp["b2"].astype(dt)
+
+
+def encode(params, frames, cfg, par: Parallel):
+    """frames: (B, T, d) stub embeddings -> encoder states (B, T, d)."""
+    x = frames.astype(ACT_DTYPE) + _sinusoid(frames.shape[1], cfg.d_model)[None]
+    x = shard_act(x, par)
+    T = x.shape[1]
+    pos = jnp.arange(T)
+
+    def body(x, lp):
+        dt = x.dtype
+        xn = layer_norm(x, lp["ln1_w"], lp["ln1_b"], cfg.norm_eps)
+        q, k, v = _proj_qkv(lp["attn"], xn, xn, dt)
+        # bidirectional: mask = all True -> window None and q_pos >= k_pos trick
+        out = gqa_attention(q, k, v, jnp.full_like(pos, T), pos, None)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"].astype(dt))
+        xn = layer_norm(x, lp["ln2_w"], lp["ln2_b"], cfg.norm_eps)
+        x = shard_act(x + _mlp(lp["mlp"], xn, dt), par)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"], unroll=par.unroll)
+    return layer_norm(x, params["enc_norm_w"], params["enc_norm_b"], cfg.norm_eps)
+
+
+def _decoder(params, tokens, enc_x, cfg, par):
+    vp = pad_vocab(cfg.vocab)
+    x = params["embed"][jnp.clip(tokens, 0, vp - 1)].astype(ACT_DTYPE)
+    x = x + _sinusoid(x.shape[1], cfg.d_model)[None]
+    x = shard_act(x, par)
+    S = x.shape[1]
+    Tenc = enc_x.shape[1]
+    pos = jnp.arange(S)
+    enc_pos = jnp.arange(Tenc)
+
+    def body(x, lp):
+        dt = x.dtype
+        xn = layer_norm(x, lp["ln1_w"], lp["ln1_b"], cfg.norm_eps)
+        q, k, v = _proj_qkv(lp["attn"], xn, xn, dt)
+        out = gqa_attention(q, k, v, pos, pos, None)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"].astype(dt))
+        xn = layer_norm(x, lp["ln2_w"], lp["ln2_b"], cfg.norm_eps)
+        q, k, v = _proj_qkv(lp["cross"], xn, enc_x, dt)
+        out = gqa_attention(q, k, v, jnp.full_like(pos, Tenc), enc_pos, None)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["cross"]["wo"].astype(dt))
+        xn = layer_norm(x, lp["ln3_w"], lp["ln3_b"], cfg.norm_eps)
+        x = shard_act(x + _mlp(lp["mlp"], xn, dt), par)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["dec"], unroll=par.unroll)
+    x = layer_norm(x, params["dec_norm_w"], params["dec_norm_b"], cfg.norm_eps)
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(ACT_DTYPE))
+
+
+def forward(params, batch, cfg, par: Parallel, remat: bool = False):
+    enc_x = encode(params, batch["frames"], cfg, par)
+    return _decoder(params, batch["tokens"], enc_x, cfg, par)
+
+
+def loss_fn(params, batch, cfg, par: Parallel, remat: bool = True, **_):
+    logits = forward(params, batch, cfg, par).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.clip(labels, 0)[..., None], -1)[..., 0]
+    mask = labels >= 0
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def init_cache(cfg, batch, ctx, dtype=ACT_DTYPE):
+    L, Kv, hd = cfg.n_layers, cfg.n_kv, cfg.hd
+    return {
+        "k": jnp.zeros((L, batch, ctx, Kv, hd), dtype),
+        "v": jnp.zeros((L, batch, ctx, Kv, hd), dtype),
+        # cross-attention K/V, precomputed from the encoder at prefill
+        "xk": jnp.zeros((L, batch, N_FRAMES, Kv, hd), dtype),
+        "xv": jnp.zeros((L, batch, N_FRAMES, Kv, hd), dtype),
+    }
+
+
+def prefill_cross(params, cache, frames, cfg, par: Parallel):
+    """Encode audio and fill the cross-attention cache."""
+    enc_x = encode(params, frames, cfg, par)
+    dt = enc_x.dtype
+
+    def body(_, lp):
+        k = jnp.einsum("btd,dhk->bthk", enc_x, lp["cross"]["wk"].astype(dt))
+        v = jnp.einsum("btd,dhk->bthk", enc_x, lp["cross"]["wv"].astype(dt))
+        return None, (k, v)
+
+    _, (xk, xv) = jax.lax.scan(body, None, params["dec"])
+    return dict(cache, xk=xk.astype(cache["xk"].dtype), xv=xv.astype(cache["xv"].dtype))
+
+
+def decode_step(params, cache, tokens, pos, cfg, par: Parallel):
+    vp = pad_vocab(cfg.vocab)
+    x = params["embed"][jnp.clip(tokens, 0, vp - 1)].astype(ACT_DTYPE)
+    d = cfg.d_model
+    posf = jnp.asarray(pos, jnp.float32)
+    _z = jnp.asarray(0, jnp.int32)
+    sin_table = _sinusoid(cache["k"].shape[2], d)
+    x = x + jax.lax.dynamic_slice(sin_table, (pos.astype(jnp.int32), _z), (1, d))[None]
+    Tenc = cache["xk"].shape[2]
+
+    def body(x, scanned):
+        lp, k_l, v_l, xk_l, xv_l = scanned
+        dt = x.dtype
+        xn = layer_norm(x, lp["ln1_w"], lp["ln1_b"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wv"].astype(dt))
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (_z, pos.astype(jnp.int32), _z, _z))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (_z, pos.astype(jnp.int32), _z, _z))
+        out = decode_attention(q, k_l, v_l, pos)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"].astype(dt))
+        xn = layer_norm(x, lp["ln2_w"], lp["ln2_b"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", xn, lp["cross"]["wq"].astype(dt))
+        out = decode_attention(q, xk_l, xv_l, jnp.asarray(Tenc, jnp.int32))
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["cross"]["wo"].astype(dt))
+        xn = layer_norm(x, lp["ln3_w"], lp["ln3_b"], cfg.norm_eps)
+        x = x + _mlp(lp["mlp"], xn, dt)
+        return x, (k_l, v_l)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        unroll=par.unroll,
+    )
+    x = layer_norm(x, params["dec_norm_w"], params["dec_norm_b"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(ACT_DTYPE))
+    return logits, dict(cache, k=k_new, v=v_new)

@@ -1,0 +1,265 @@
+"""xLSTM blocks: chunk-parallel mLSTM (matrix memory) + scan sLSTM (scalar).
+
+mLSTM follows the paper's normalizer/stabilizer semantics: exponential input
+gate (clipped), sigmoid forget gate in log space, denominator
+max(|q . n|, 1). The chunked form mirrors the SSD decomposition with an extra
+normalizer state. sLSTM is a true recurrence -> lax.scan over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm, silu
+
+__all__ = [
+    "mlstm_chunked", "mlstm_decode_step", "mlstm_param_specs", "mlstm_forward",
+    "mlstm_decode", "slstm_param_specs", "slstm_forward", "slstm_decode",
+    "mlstm_init_cache", "slstm_init_cache",
+]
+
+
+def _segsum(dA):
+    Lc = dA.shape[-1]
+    cum = jnp.cumsum(dA, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+    return jnp.where(mask, diff, -jnp.inf), cum
+
+
+def mlstm_chunked(q, k, v, log_i, log_f, chunk: int):
+    """q,k,v: (B,S,H,hd); log_i/log_f: (B,S,H) float32.
+
+    Returns y (B,S,H,hd) and final (C (B,H,hd,hd), n (B,H,hd)).
+    """
+    B, S, H, hd = q.shape
+    assert S % chunk == 0
+    Nc = S // chunk
+    f32 = jnp.float32
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, f32))
+
+    qc = q.reshape(B, Nc, chunk, H, hd).astype(f32) * scale
+    kc = k.reshape(B, Nc, chunk, H, hd).astype(f32)
+    vc = v.reshape(B, Nc, chunk, H, hd).astype(f32)
+    fi = jnp.moveaxis(log_f.reshape(B, Nc, chunk, H), -1, -2)  # (B,Nc,H,Lc)
+    ii = jnp.moveaxis(log_i.reshape(B, Nc, chunk, H), -1, -2)
+
+    seg, cumF = _segsum(fi)  # seg[i,j] = cumF_i - cumF_j
+    Dmat = jnp.exp(seg + ii[..., None, :])  # (B,Nc,H,i,j): decay * input gate
+    scores = jnp.einsum("bcihd,bcjhd->bchij", qc, kc)
+    intra_num = jnp.einsum("bchij,bcjhd->bcihd", scores * Dmat, vc)
+    intra_den = jnp.einsum("bchij->bchi", scores * Dmat)
+
+    # chunk states with input gate folded into k
+    decay_end = jnp.exp(cumF[..., -1:] - cumF + ii)  # (B,Nc,H,Lc)
+    Cstate = jnp.einsum("bchj,bcjhd,bcjhe->bchde", decay_end, kc, vc)
+    nstate = jnp.einsum("bchj,bcjhd->bchd", decay_end, kc)
+    chunk_decay = jnp.exp(cumF[..., -1])  # (B,Nc,H)
+
+    def step(carry, inp):
+        Cp, np_ = carry
+        Cc, nc, dec = inp
+        Cn = dec[..., None, None] * Cp + Cc
+        nn = dec[..., None] * np_ + nc
+        return (Cn, nn), (Cp, np_)
+
+    C0 = jnp.zeros((B, H, hd, hd), f32)
+    n0 = jnp.zeros((B, H, hd), f32)
+    (Cf, nf), (Cprev, nprev) = jax.lax.scan(
+        step, (C0, n0),
+        (jnp.moveaxis(Cstate, 1, 0), jnp.moveaxis(nstate, 1, 0),
+         jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    Cprev = jnp.moveaxis(Cprev, 0, 1)  # (B,Nc,H,hd,hd)
+    nprev = jnp.moveaxis(nprev, 0, 1)
+
+    decay_in = jnp.exp(cumF)  # (B,Nc,H,Lc)
+    inter_num = jnp.einsum("bchi,bcihd,bchde->bcihe", decay_in, qc, Cprev)
+    inter_den = jnp.einsum("bchi,bcihd,bchd->bchi", decay_in, qc, nprev)
+
+    num = intra_num + inter_num  # (B,Nc,Lc,H,hd)
+    den = jnp.moveaxis(intra_den + inter_den, -1, -2)[..., None]  # (B,Nc,Lc,H,1)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    return y.reshape(B, S, H, hd).astype(q.dtype), (Cf, nf)
+
+
+def mlstm_decode_step(state, q, k, v, log_i, log_f):
+    """One token. state: (C (B,H,hd,hd), n (B,H,hd)); q,k,v (B,H,hd)."""
+    C, n = state
+    f32 = jnp.float32
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, f32))
+    qf = q.astype(f32) * scale
+    f_ = jnp.exp(log_f)[..., None]  # (B,H,1)
+    i_ = jnp.exp(log_i)[..., None]
+    C = f_[..., None] * C + i_[..., None] * jnp.einsum("bhd,bhe->bhde",
+                                                       k.astype(f32), v.astype(f32))
+    n = f_ * n + i_ * k.astype(f32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.einsum("bhd,bhd->bh", qf, n)[..., None]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    return y.astype(q.dtype), (C, n)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_param_specs(cfg):
+    from .spec import ParamSpec
+
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d, H, hd), ("embed", "heads", None)),
+        "wv": ParamSpec((d, H, hd), ("embed", "heads", None)),
+        "wif": ParamSpec((d, 2 * H), ("embed", None)),
+        "if_bias": ParamSpec((2 * H,), (None,), init="zeros"),
+        "conv_w": ParamSpec((4, d), (None, "embed")),
+        "conv_b": ParamSpec((d,), ("embed",), init="zeros"),
+        "wgate": ParamSpec((d, d), ("embed", "embed")),
+        "wo": ParamSpec((H, hd, d), ("heads", None, "embed")),
+        "norm_w": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def _mlstm_gates(params, xg):
+    H2 = params["if_bias"].shape[0]
+    H = H2 // 2
+    g = (xg.astype(jnp.float32) @ params["wif"].astype(jnp.float32)
+         + params["if_bias"].astype(jnp.float32))
+    i_raw, f_raw = g[..., :H], g[..., H:]
+    log_i = jnp.clip(i_raw, -8.0, 8.0)  # exponential input gate (clipped)
+    log_f = -jax.nn.softplus(-f_raw)  # log sigmoid
+    return log_i, log_f
+
+
+def _causal_conv(x, w, b):
+    """x (B,S,d), w (K,d) depthwise causal."""
+    K = w.shape[0]
+    S = x.shape[1]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + S, :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def mlstm_forward(params, x, cfg):
+    B, S, d = x.shape
+    dt_ = x.dtype
+    xn = rms_norm(x, params["norm_w"], cfg.norm_eps)
+    xc = silu(_causal_conv(xn, params["conv_w"].astype(dt_),
+                           params["conv_b"].astype(dt_)))
+    q = jnp.einsum("bsd,dhk->bshk", xc, params["wq"].astype(dt_))
+    k = jnp.einsum("bsd,dhk->bshk", xc, params["wk"].astype(dt_))
+    v = jnp.einsum("bsd,dhk->bshk", xn, params["wv"].astype(dt_))
+    log_i, log_f = _mlstm_gates(params, xc)
+    y, _ = mlstm_chunked(q, k, v, log_i, log_f, cfg.ssm_chunk or 256)
+    gate = silu(jnp.einsum("bsd,de->bse", xn, params["wgate"].astype(dt_)))
+    out = jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(dt_)) * gate
+    return out
+
+
+def mlstm_init_cache(cfg, batch):
+    H, hd, d = cfg.n_heads, cfg.hd, cfg.d_model
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "conv": jnp.zeros((batch, 3, d), jnp.float32),
+    }
+
+
+def mlstm_decode(params, cache, x, cfg):
+    B, _, d = x.shape
+    dt_ = x.dtype
+    xn = rms_norm(x, params["norm_w"], cfg.norm_eps)
+    conv_buf = jnp.concatenate([cache["conv"].astype(dt_), xn], axis=1)  # (B,4,d)
+    xc = silu(jnp.einsum("bkd,kd->bd", conv_buf, params["conv_w"].astype(dt_))
+              + params["conv_b"].astype(dt_))
+    q = jnp.einsum("bd,dhk->bhk", xc, params["wq"].astype(dt_))
+    k = jnp.einsum("bd,dhk->bhk", xc, params["wk"].astype(dt_))
+    v = jnp.einsum("bd,dhk->bhk", xn[:, 0], params["wv"].astype(dt_))
+    log_i, log_f = _mlstm_gates(params, xc)
+    y, (C, n) = mlstm_decode_step((cache["C"], cache["n"]), q, k, v, log_i, log_f)
+    gate = silu(jnp.einsum("bd,de->be", xn[:, 0], params["wgate"].astype(dt_)))
+    out = (jnp.einsum("bhk,hkd->bd", y, params["wo"].astype(dt_)) * gate)[:, None]
+    return out, {"C": C, "n": n, "conv": conv_buf[:, 1:].astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (true recurrence; lax.scan over time)
+# ---------------------------------------------------------------------------
+
+
+def slstm_param_specs(cfg):
+    from .spec import ParamSpec
+
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    return {
+        "wx": ParamSpec((d, 4 * d), ("embed", None)),
+        "r": ParamSpec((H, hd, 4 * hd), ("heads", None, None)),
+        "bias": ParamSpec((4 * d,), (None,), init="zeros"),
+        "wo": ParamSpec((d, d), ("embed", "embed")),
+        "norm_w": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def _slstm_cell(params, carry, zx, H, hd):
+    """carry: (h, c, n, m) each (B, H, hd) f32; zx: (B, 4d) f32 input proj."""
+    h, c, n, m = carry
+    B = h.shape[0]
+    rec = jnp.einsum("bhd,hdk->bhk", h, params["r"].astype(jnp.float32))
+    g = zx.reshape(B, H, 4 * hd) + rec
+    z_r, i_r, f_r, o_r = jnp.split(g, 4, axis=-1)
+    log_i = jnp.clip(i_r, -8.0, 8.0)
+    log_f = -jax.nn.softplus(-f_r)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_g = jnp.exp(log_i - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c = f_g * c + i_g * jnp.tanh(z_r)
+    n = f_g * n + i_g
+    h = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+    return (h, c, n, m_new)
+
+
+def slstm_init_cache(cfg, batch):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z}
+
+
+def slstm_forward(params, x, cfg):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    dt_ = x.dtype
+    xn = rms_norm(x, params["norm_w"], cfg.norm_eps)
+    zx = (jnp.einsum("bsd,dk->bsk", xn, params["wx"].astype(dt_))
+          + params["bias"].astype(dt_)).astype(jnp.float32)
+
+    def step(carry, zt):
+        carry = _slstm_cell(params, carry, zt, H, hd)
+        return carry, carry[0]
+
+    c0 = slstm_init_cache(cfg, B)
+    init = (c0["h"], c0["c"], c0["n"], c0["m"])
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(zx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(dt_)
+    return jnp.einsum("bsd,de->bse", hs, params["wo"].astype(dt_))
+
+
+def slstm_decode(params, cache, x, cfg):
+    B, _, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    dt_ = x.dtype
+    xn = rms_norm(x, params["norm_w"], cfg.norm_eps)
+    zx = (jnp.einsum("bd,dk->bk", xn[:, 0], params["wx"].astype(dt_))
+          + params["bias"].astype(dt_)).astype(jnp.float32)
+    carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h, c, n, m = _slstm_cell(params, carry, zx, H, hd)
+    out = jnp.einsum("bd,de->be", h.reshape(B, d).astype(dt_),
+                     params["wo"].astype(dt_))[:, None]
+    return out, {"h": h, "c": c, "n": n, "m": m}

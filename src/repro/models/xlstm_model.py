@@ -1,0 +1,155 @@
+"""xLSTM LM: groups of (slstm_every - 1) mLSTM blocks + 1 sLSTM block.
+
+48 layers with slstm_every=8 -> 6 scanned groups of (7 mLSTM + 1 sLSTM),
+matching the paper's xLSTM[7:1] ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACT_DTYPE, pad_vocab, rms_norm
+from .mlp import Parallel
+from .spec import ParamSpec
+from .transformer import shard_act
+from .xlstm import (mlstm_decode, mlstm_forward, mlstm_init_cache,
+                    mlstm_param_specs, slstm_decode, slstm_forward,
+                    slstm_init_cache, slstm_param_specs)
+
+__all__ = ["param_specs", "forward", "loss_fn", "init_cache", "decode_step"]
+
+
+def _stack(specs, L):
+    def f(s):
+        return dataclasses.replace(s, shape=(L,) + s.shape, axes=("layers",) + s.axes)
+
+    return jax.tree_util.tree_map(f, specs,
+                                  is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _layout(cfg):
+    k = cfg.slstm_every or cfg.n_layers + 1
+    if cfg.slstm_every and cfg.n_layers % cfg.slstm_every == 0:
+        return cfg.n_layers // cfg.slstm_every, cfg.slstm_every - 1, True
+    return cfg.n_layers, 0, False  # all-mLSTM fallback
+
+
+def param_specs(cfg):
+    vp = pad_vocab(cfg.vocab)
+    n_groups, n_m, has_s = _layout(cfg)
+    specs = {
+        "embed": ParamSpec((vp, cfg.d_model), ("vocab", "embed"), init="embed"),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+    if has_s:
+        specs["mlstm"] = _stack(_stack(mlstm_param_specs(cfg), n_m), n_groups)
+        specs["slstm"] = _stack(slstm_param_specs(cfg), n_groups)
+    else:
+        specs["mlstm"] = _stack(mlstm_param_specs(cfg), n_groups)
+    return specs
+
+
+def forward(params, tokens, cfg, par: Parallel, remat: bool = False, **_):
+    vp = pad_vocab(cfg.vocab)
+    x = params["embed"][jnp.clip(tokens, 0, vp - 1)].astype(ACT_DTYPE)
+    x = shard_act(x, par)
+    n_groups, n_m, has_s = _layout(cfg)
+
+    if has_s:
+        def group(x, gp):
+            mp, sp = gp
+            for i in range(n_m):
+                lp = jax.tree_util.tree_map(lambda a: a[i], mp)
+                x = shard_act(x + mlstm_forward(lp, x, cfg), par)
+            x = shard_act(x + slstm_forward(sp, x, cfg), par)
+            return x, None
+
+        body = group
+        if remat:
+            body = jax.checkpoint(group,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, (params["mlstm"], params["slstm"]),
+                            unroll=par.unroll)
+    else:
+        def blk(x, lp):
+            return shard_act(x + mlstm_forward(lp, x, cfg), par), None
+
+        if remat:
+            blk = jax.checkpoint(blk, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(blk, x, params["mlstm"], unroll=par.unroll)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(ACT_DTYPE)), 0.0
+
+
+def loss_fn(params, batch, cfg, par: Parallel, remat: bool = True, **_):
+    logits, _ = forward(params, batch["tokens"], cfg, par, remat=remat)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, jnp.clip(labels, 0)[..., None], -1)[..., 0]
+    mask = labels >= 0
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def init_cache(cfg, batch, ctx, dtype=ACT_DTYPE):
+    n_groups, n_m, has_s = _layout(cfg)
+    m1 = mlstm_init_cache(cfg, batch)
+    if has_s:
+        return {
+            "mlstm": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n_groups, n_m) + a.shape), m1
+            ),
+            "slstm": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape),
+                slstm_init_cache(cfg, batch),
+            ),
+        }
+    return {
+        "mlstm": jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), m1
+        )
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg, par: Parallel):
+    vp = pad_vocab(cfg.vocab)
+    x = params["embed"][jnp.clip(tokens, 0, vp - 1)].astype(ACT_DTYPE)
+    n_groups, n_m, has_s = _layout(cfg)
+
+    if has_s:
+        def group(x, scanned):
+            (mp, sp), (mc, sc) = scanned
+            ncs = []
+            for i in range(n_m):
+                lp = jax.tree_util.tree_map(lambda a: a[i], mp)
+                lc = jax.tree_util.tree_map(lambda a: a[i], mc)
+                y, nc = mlstm_decode(lp, lc, x, cfg)
+                x = x + y
+                ncs.append(nc)
+            mc_new = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ncs)
+            y, sc_new = slstm_decode(sp, sc, x, cfg)
+            x = x + y
+            return x, (mc_new, sc_new)
+
+        x, (mc, sc) = jax.lax.scan(
+            group, x,
+            ((params["mlstm"], params["slstm"]), (cache["mlstm"], cache["slstm"])),
+            unroll=par.unroll,
+        )
+        new_cache = {"mlstm": mc, "slstm": sc}
+    else:
+        def blk(x, scanned):
+            lp, lc = scanned
+            y, nc = mlstm_decode(lp, lc, x, cfg)
+            return x + y, nc
+
+        x, mc = jax.lax.scan(blk, x, (params["mlstm"], cache["mlstm"]),
+                             unroll=par.unroll)
+        new_cache = {"mlstm": mc}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(ACT_DTYPE))
+    return logits, new_cache

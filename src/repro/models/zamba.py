@@ -1,0 +1,192 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block.
+
+The signature Zamba2 trick: a single (attention + MLP) transformer block whose
+weights are SHARED across all its occurrences (every ``attn_every`` mamba
+layers). Backbone layers scan in groups of ``attn_every``; the tail layers
+that don't fill a group run unrolled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import decode_attention, gqa_attention
+from .common import ACT_DTYPE, pad_vocab, rms_norm, rope_freqs, apply_rope
+from .mamba2 import (mamba2_decode, mamba2_forward, mamba2_init_cache,
+                     mamba2_param_specs)
+from .mlp import Parallel, swiglu
+from .spec import ParamSpec
+from .transformer import shard_act
+
+__all__ = ["param_specs", "forward", "loss_fn", "init_cache", "decode_step"]
+
+
+def _stack_specs(specs, L):
+    import dataclasses
+
+    def f(s):
+        return dataclasses.replace(s, shape=(L,) + s.shape, axes=("layers",) + s.axes)
+
+    return jax.tree_util.tree_map(f, specs,
+                                  is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _shared_block_specs(cfg):
+    d, H, Kv, hd, f = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd, cfg.d_ff
+    return {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d, Kv, hd), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((d, Kv, hd), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((H, hd, d), ("heads", None, "embed"), fan_in_dims=(0, 1)),
+        "wg": ParamSpec((d, f), ("embed", "mlp")),
+        "wu": ParamSpec((d, f), ("embed", "mlp")),
+        "wd": ParamSpec((f, d), ("mlp", "embed")),
+        "ln1": ParamSpec((d,), ("embed",), init="zeros"),
+        "ln2": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def _layout(cfg):
+    """(n_groups, tail): groups of attn_every mamba layers + shared block."""
+    k = cfg.attn_every
+    return cfg.n_layers // k, cfg.n_layers % k
+
+
+def param_specs(cfg):
+    vp = pad_vocab(cfg.vocab)
+    n_groups, tail = _layout(cfg)
+    specs = {
+        "embed": ParamSpec((vp, cfg.d_model), ("vocab", "embed"), init="embed"),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "mamba_groups": _stack_specs(
+            _stack_specs(mamba2_param_specs(cfg), cfg.attn_every), n_groups
+        ),
+        "shared": _shared_block_specs(cfg),
+    }
+    if tail:
+        specs["mamba_tail"] = _stack_specs(mamba2_param_specs(cfg), tail)
+    return specs
+
+
+def _shared_attn(sp, x, cfg, sin, cos, q_pos, k_pos, par):
+    dt = x.dtype
+    xn = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    q = apply_rope(jnp.einsum("bsd,dhk->bshk", xn, sp["wq"].astype(dt)), sin, cos)
+    k = apply_rope(jnp.einsum("bsd,dhk->bshk", xn, sp["wk"].astype(dt)), sin, cos)
+    v = jnp.einsum("bsd,dhk->bshk", xn, sp["wv"].astype(dt))
+    out = gqa_attention(q, k, v, q_pos, k_pos, None)
+    x = x + jnp.einsum("bshk,hkd->bsd", out, sp["wo"].astype(dt))
+    xn = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    x = shard_act(x + swiglu(xn, sp["wg"], sp["wu"], sp["wd"]), par)
+    return x
+
+
+def forward(params, tokens, cfg, par: Parallel, remat: bool = False, **_):
+    vp = pad_vocab(cfg.vocab)
+    x = params["embed"][jnp.clip(tokens, 0, vp - 1)].astype(ACT_DTYPE)
+    x = shard_act(x, par)
+    S = x.shape[1]
+    pos = jnp.arange(S)
+    sin, cos = rope_freqs(pos, cfg.hd, cfg.rope_theta)
+    n_groups, tail = _layout(cfg)
+
+    def group(x, gp):
+        for i in range(cfg.attn_every):
+            lp = jax.tree_util.tree_map(lambda a: a[i], gp)
+            x = shard_act(x + mamba2_forward(lp, x, cfg), par)
+        x = _shared_attn(params["shared"], x, cfg, sin, cos, pos, pos, par)
+        return x, None
+
+    body = group
+    if remat:
+        body = jax.checkpoint(group, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["mamba_groups"], unroll=par.unroll)
+    for i in range(tail):
+        lp = jax.tree_util.tree_map(lambda a: a[i], params["mamba_tail"])
+        x = shard_act(x + mamba2_forward(lp, x, cfg), par)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(ACT_DTYPE)), 0.0
+
+
+def loss_fn(params, batch, cfg, par: Parallel, remat: bool = True, **_):
+    logits, _ = forward(params, batch["tokens"], cfg, par, remat=remat)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, jnp.clip(labels, 0)[..., None], -1)[..., 0]
+    mask = labels >= 0
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def init_cache(cfg, batch, ctx, dtype=ACT_DTYPE):
+    n_groups, tail = _layout(cfg)
+    one = mamba2_init_cache(cfg, batch)
+    groups = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n_groups, cfg.attn_every) + a.shape), one
+    )
+    cache = {
+        "mamba_groups": groups,
+        "attn_k": jnp.zeros((n_groups, batch, ctx, cfg.n_kv, cfg.hd), dtype),
+        "attn_v": jnp.zeros((n_groups, batch, ctx, cfg.n_kv, cfg.hd), dtype),
+    }
+    if tail:
+        cache["mamba_tail"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (tail,) + a.shape), one
+        )
+    return cache
+
+
+def decode_step(params, cache, tokens, pos, cfg, par: Parallel):
+    vp = pad_vocab(cfg.vocab)
+    x = params["embed"][jnp.clip(tokens, 0, vp - 1)].astype(ACT_DTYPE)
+    posf = jnp.asarray(pos, jnp.float32)[None]
+    sin, cos = rope_freqs(posf, cfg.hd, cfg.rope_theta)
+    n_groups, tail = _layout(cfg)
+    _z = jnp.asarray(0, jnp.int32)
+
+    def group(x, scanned):
+        gp, gcache, k_l, v_l = scanned
+        new_gc = []
+        for i in range(cfg.attn_every):
+            lp = jax.tree_util.tree_map(lambda a: a[i], gp)
+            lc = jax.tree_util.tree_map(lambda a: a[i], gcache)
+            y, nc = mamba2_decode(lp, lc, x, cfg)
+            x = x + y
+            new_gc.append(nc)
+        gcache = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_gc)
+        # shared attention block on this occurrence's own KV cache
+        dt = x.dtype
+        sp = params["shared"]
+        xn = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        q = apply_rope(jnp.einsum("bsd,dhk->bshk", xn, sp["wq"].astype(dt)), sin, cos)
+        k = apply_rope(jnp.einsum("bsd,dhk->bshk", xn, sp["wk"].astype(dt)), sin, cos)
+        v = jnp.einsum("bsd,dhk->bshk", xn, sp["wv"].astype(dt))
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (_z, pos.astype(jnp.int32), _z, _z))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (_z, pos.astype(jnp.int32), _z, _z))
+        out = decode_attention(q, k_l, v_l, pos)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, sp["wo"].astype(dt))
+        xn = rms_norm(x, sp["ln2"], cfg.norm_eps)
+        x = x + swiglu(xn, sp["wg"], sp["wu"], sp["wd"])
+        return x, (gcache, k_l, v_l)
+
+    x, (gc_new, k_new, v_new) = jax.lax.scan(
+        group, x,
+        (params["mamba_groups"], cache["mamba_groups"], cache["attn_k"],
+         cache["attn_v"]),
+        unroll=par.unroll,
+    )
+    new_cache = dict(cache, mamba_groups=gc_new, attn_k=k_new, attn_v=v_new)
+    if tail:
+        tc = []
+        for i in range(tail):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["mamba_tail"])
+            lc = jax.tree_util.tree_map(lambda a: a[i], cache["mamba_tail"])
+            y, nc = mamba2_decode(lp, lc, x, cfg)
+            x = x + y
+            tc.append(nc)
+        new_cache["mamba_tail"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *tc
+        )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(ACT_DTYPE))
+    return logits, new_cache

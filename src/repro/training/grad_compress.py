@@ -1,0 +1,49 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+``make_ef_int8_compressor`` quantizes each gradient leaf to int8 with a
+per-leaf scale before the (implicit) all-reduce, carrying the quantization
+residual into the next step (error feedback keeps SGD/Adam convergence).
+On a real fleet the int8 tensors are what cross the DCI between pods —
+a 4x wire-format reduction for the pod-level gradient all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_ef_int8_compressor", "ef_state_init"]
+
+
+def ef_state_init(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_dequant(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def make_ef_int8_compressor():
+    """Returns compressor(grads, opt_state) -> (grads, opt_state).
+
+    opt_state must contain an "ef" entry (from ef_state_init); the residual
+    err = g - dequant(quant(g + err_prev)) is carried forward.
+    """
+
+    def compressor(grads, opt_state):
+        ef = opt_state["ef"]
+
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e
+            gq = _quant_dequant(gf)
+            return gq.astype(g.dtype), gf - gq
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_e = jax.tree_util.tree_leaves(ef)
+        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        new_g = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_e = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        return new_g, dict(opt_state, ef=new_e)
+
+    return compressor

@@ -1,0 +1,28 @@
+"""Jit-able train step: loss -> grads -> AdamW update.
+
+Built once per (model, optimizer, parallel) combination; the dry-run lowers
+this exact function for every training cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step"]
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, par, remat: bool = True,
+                    compressor=None):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, par, remat=remat)
+        )(params)
+        if compressor is not None:
+            grads, opt_state = compressor(grads, opt_state)
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

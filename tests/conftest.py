@@ -1,0 +1,5 @@
+import jax
+
+# GP-core numerics are validated against dense float64 oracles; model smoke
+# tests use explicit dtypes so the global x64 flag does not affect them.
+jax.config.update("jax_enable_x64", True)

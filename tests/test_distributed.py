@@ -1,0 +1,72 @@
+"""Sharding rules + mesh helpers (AbstractMesh: no devices needed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.distributed.sharding import batch_pspecs, cache_pspecs, spec_for_axes
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_spec_for_axes_basic():
+    assert spec_for_axes(("embed", "mlp"), (64, 128), MESH) == P("data", "model")
+    # non-divisible dims fall back to replication (e.g. smollm's 15 heads)
+    assert spec_for_axes(("heads", None), (15, 7), MESH) == P()
+
+
+def test_spec_for_axes_conflict_resolution():
+    # experts=64 takes "model"; mlp cannot reuse it
+    assert spec_for_axes(("layers", "experts", "embed", "mlp"),
+                         (48, 64, 2048, 1408), MESH) == P(None, "model", "data")
+    # mixtral: experts=8 not divisible by 16 -> mlp gets "model" (expert TP)
+    assert spec_for_axes(("layers", "experts", "embed", "mlp"),
+                         (56, 8, 6144, 16384), MESH) == \
+        P(None, None, "data", "model")
+
+
+def test_spec_for_axes_same_axis_not_reused():
+    assert spec_for_axes(("embed", "embed"), (64, 64), MESH) == P("data")
+
+
+def test_multi_pod_batch_axes():
+    spec = batch_pspecs(
+        {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}, MESH3
+    )["tokens"].spec
+    assert spec == P(("pod", "data"), None)
+    # batch=1 (long_500k): replicated
+    spec = batch_pspecs(
+        {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32)}, MESH3
+    )["tokens"].spec
+    assert spec == P()
+
+
+def test_cache_pspecs_batch_vs_ctx():
+    # gemma3 decode cache: kv=8 < model axis 16 -> SEQUENCE gets "model"
+    # (flash-decoding sharding; §Perf hillclimb 3.2)
+    kv = jax.ShapeDtypeStruct((48, 128, 32768, 8, 256), jnp.bfloat16)
+    sh = cache_pspecs({"k": kv}, MESH, batch=128)["k"]
+    assert sh.spec == P(None, "data", "model", None, None)
+    # batch=1 (long_500k): ctx takes data AND model axes
+    kv1 = jax.ShapeDtypeStruct((48, 1, 524288, 8, 256), jnp.bfloat16)
+    sh = cache_pspecs({"k": kv1}, MESH, batch=1)["k"]
+    assert sh.spec == P(None, None, ("data", "model"), None, None)
+    # zamba shared-attn cache: kv=32 divides -> kv-head sharding preferred
+    kv2 = jax.ShapeDtypeStruct((6, 128, 32768, 32, 64), jnp.bfloat16)
+    sh = cache_pspecs({"attn_k": kv2}, MESH, batch=128)["attn_k"]
+    assert sh.spec == P(None, "data", None, "model", None)
+
+
+def test_cache_pspecs_state_leaves():
+    # mamba ssm state (B, H, P, N): batch -> data, heads -> model
+    st = jax.ShapeDtypeStruct((128, 64, 64, 64), jnp.float32)
+    sh = cache_pspecs({"ssm": st}, MESH, batch=128)["ssm"]
+    assert sh.spec == P(("data",), "model", None, None)
+
+
+def test_data_axes_helper():
+    from repro.launch.mesh import data_axes_for
+
+    assert data_axes_for(MESH) == ("data",)
+    assert data_axes_for(MESH3) == ("pod", "data")

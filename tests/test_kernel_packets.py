@@ -1,0 +1,140 @@
+"""KP / generalized-KP factorization correctness (paper Thms 3-6, Algs 2-3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import banded as bd
+from repro.core import matern as mk
+from repro.core import kernel_packets as kp
+
+
+def _sorted_points(rng, n, span=10.0):
+    return jnp.asarray(np.sort(rng.random(n) * span))
+
+
+@pytest.mark.parametrize("q", [0, 1, 2, 3])
+def test_matern_derivatives(q):
+    x, y, om = 0.7, 2.3, 1.4
+    eps = 1e-6
+    fd_om = (mk.matern(q, om + eps, x, y) - mk.matern(q, om - eps, x, y)) / (2 * eps)
+    assert abs(float(mk.matern_domega(q, om, x, y)) - float(fd_om)) < 1e-7
+    fd_x = (mk.matern(q, om, x + eps, y) - mk.matern(q, om, x - eps, y)) / (2 * eps)
+    assert abs(float(mk.matern_dx(q, om, x, y)) - float(fd_x)) < 1e-7
+    # unit variance at r = 0
+    assert abs(float(mk.matern(q, om, x, x)) - 1.0) < 1e-12
+
+
+@pytest.mark.parametrize("q,n", [(0, 10), (0, 64), (1, 12), (1, 64), (2, 20), (3, 30)])
+def test_kp_factorization(q, n):
+    rng = np.random.default_rng(q * 100 + n)
+    xs = _sorted_points(rng, n)
+    omega = 1.3
+    A, Phi = kp.kp_factors(q, omega, xs)
+    K = np.array(mk.gram(q, omega, xs))
+    AK = np.array(bd.to_dense(A)) @ K
+    # compact support: AK is banded with half-bw q
+    mask = np.abs(np.arange(n)[:, None] - np.arange(n)[None, :]) > q
+    assert np.abs(AK[mask]).max() < 1e-10
+    # Phi band equals AK band
+    assert np.abs(np.array(bd.to_dense(Phi)) - np.where(mask, 0.0, AK)).max() < 1e-10
+    # A^{-1} Phi == K
+    rec = np.linalg.solve(np.array(bd.to_dense(A)), np.array(bd.to_dense(Phi)))
+    assert np.abs(rec - K).max() < 1e-7
+
+
+@pytest.mark.parametrize("q", [0, 1])
+def test_gkp_factorization(q):
+    rng = np.random.default_rng(7)
+    n = 40
+    xs = _sorted_points(rng, n, span=8.0)
+    omega = 1.1
+    B, Psi = kp.gkp_factors(q, omega, xs)
+    dK = np.array(mk.matern_domega(q, omega, xs[:, None], xs[None, :]))
+    BdK = np.array(bd.to_dense(B)) @ dK
+    mask = np.abs(np.arange(n)[:, None] - np.arange(n)[None, :]) > q + 1
+    assert np.abs(BdK[mask]).max() < 1e-9
+    rec = np.linalg.solve(np.array(bd.to_dense(B)), np.array(bd.to_dense(Psi)))
+    assert np.abs(rec - dK).max() < 1e-7
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    q=st.integers(0, 2),
+    n=st.integers(9, 80),
+    omega=st.floats(0.2, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kp_property(q, n, omega, seed):
+    """Property: for any scattered points & scale, A K is banded and invertible."""
+    rng = np.random.default_rng(seed)
+    xs = _sorted_points(rng, n, span=5.0)
+    A, Phi = kp.kp_factors(q, omega, xs)
+    K = np.array(mk.gram(q, omega, xs))
+    AK = np.array(bd.to_dense(A)) @ K
+    mask = np.abs(np.arange(n)[:, None] - np.arange(n)[None, :]) > q
+    assert np.abs(AK[mask]).max() < 1e-7
+    # A invertible (Thm 4 analogue): finite logdet
+    assert np.isfinite(float(bd.logdet(A)))
+
+
+@pytest.mark.parametrize("q", [0, 1, 2])
+def test_phi_at_matches_dense(q):
+    """Sparse phi(x*) window equals the dense product A k(X, x*)."""
+    rng = np.random.default_rng(11)
+    n = 50
+    xs = _sorted_points(rng, n)
+    omega = 0.9
+    A, _ = kp.kp_factors(q, omega, xs)
+    Ad = np.array(bd.to_dense(A))
+    xq = jnp.asarray(rng.random(7) * 10.0)
+    rows, vals, valid = kp.phi_at(q, omega, xs, A, xq)
+    kvec = np.array(mk.matern(q, omega, np.array(xs)[:, None], np.array(xq)[None, :]))
+    dense_phi = Ad @ kvec  # (n, m)
+    for j in range(xq.shape[0]):
+        sparse = np.zeros(n)
+        r = np.array(rows[j])
+        v = np.array(vals[j]) * np.array(valid[j])
+        np.add.at(sparse, r, v)
+        assert np.abs(sparse - dense_phi[:, j]).max() < 1e-9, f"query {j}"
+
+
+def test_phi_at_out_of_range_queries():
+    rng = np.random.default_rng(12)
+    q, n = 1, 30
+    xs = _sorted_points(rng, n)
+    omega = 1.0
+    A, _ = kp.kp_factors(q, omega, xs)
+    Ad = np.array(bd.to_dense(A))
+    xq = jnp.asarray([-3.0, 14.0])  # outside the data range
+    rows, vals, valid = kp.phi_at(q, omega, xs, A, xq)
+    kvec = np.array(mk.matern(q, omega, np.array(xs)[:, None], np.array(xq)[None, :]))
+    dense_phi = Ad @ kvec
+    for j in range(2):
+        sparse = np.zeros(n)
+        np.add.at(sparse, np.array(rows[j]), np.array(vals[j]) * np.array(valid[j]))
+        assert np.abs(sparse - dense_phi[:, j]).max() < 1e-9
+
+
+@pytest.mark.parametrize("q", [0, 1])
+def test_phi_grad_at(q):
+    rng = np.random.default_rng(13)
+    n = 40
+    xs = _sorted_points(rng, n)
+    omega = 1.2
+    A, _ = kp.kp_factors(q, omega, xs)
+    xq = jnp.asarray(rng.random(5) * 9.0 + 0.5)
+    eps = 1e-6
+    rows, dvals, valid = kp.phi_grad_at(q, omega, xs, A, xq)
+    rp, vp, valp = kp.phi_at(q, omega, xs, A, xq + eps)
+    rm, vm, valm = kp.phi_at(q, omega, xs, A, xq - eps)
+    n_ = n
+    for j in range(5):
+        d_sparse = np.zeros(n_)
+        np.add.at(d_sparse, np.array(rows[j]), np.array(dvals[j]) * np.array(valid[j]))
+        fp = np.zeros(n_)
+        np.add.at(fp, np.array(rp[j]), np.array(vp[j]) * np.array(valp[j]))
+        fm = np.zeros(n_)
+        np.add.at(fm, np.array(rm[j]), np.array(vm[j]) * np.array(valm[j]))
+        assert np.abs(d_sparse - (fp - fm) / (2 * eps)).max() < 1e-6

@@ -1,0 +1,83 @@
+"""Backfitting solvers, band-of-inverse (Alg 5) and stochastic estimators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import banded as bd
+from repro.core.band_inverse import inverse_band, variance_band
+from repro.core.kernel_packets import kp_factors
+from repro.core.stochastic import hutchinson, logdet_taylor, power_method
+
+
+def _spd_banded(rng, n, hw):
+    dense = np.zeros((n, n))
+    for m in range(-hw, hw + 1):
+        idx = np.arange(max(0, -m), min(n, n - m))
+        dense[idx, idx + m] = rng.standard_normal(len(idx))
+    dense = dense + dense.T + np.eye(n) * (4 * hw + 4)
+    return dense
+
+
+@pytest.mark.parametrize("n,hw,want", [(30, 1, 3), (47, 2, 5), (64, 3, 3)])
+def test_inverse_band_matches_dense(n, hw, want):
+    rng = np.random.default_rng(n)
+    dense = _spd_banded(rng, n, hw)
+    H = bd.from_dense(jnp.asarray(dense), hw, hw)
+    G = inverse_band(H, want)
+    G_ref = np.linalg.inv(dense)
+    Gd = np.array(bd.to_dense(G))
+    for m in range(-want, want + 1):
+        idx = np.arange(max(0, -m), min(n, n - m))
+        assert np.abs(Gd[idx, idx + m] - G_ref[idx, idx + m]).max() < 1e-9, m
+
+
+@pytest.mark.parametrize("q,rtol", [(0, 1e-9), (1, 1e-4)])
+def test_variance_band_is_inverse_of_APhiT(q, rtol):
+    # tolerance is relative to max|G|: kappa(A Phi^T) ~ kappa(K) reaches 1e9
+    # for q=1, so the dense reference inverse itself carries O(kappa*eps) error.
+    rng = np.random.default_rng(9)
+    n = 40
+    xs = jnp.asarray(np.sort(rng.random(n) * 6))
+    A, Phi = kp_factors(q, 1.2, xs)
+    G = variance_band(A, Phi)
+    H = np.array(bd.to_dense(A)) @ np.array(bd.to_dense(Phi)).T
+    G_ref = np.linalg.inv(H)
+    Gd = np.array(bd.to_dense(G))
+    hw = 2 * q + 1
+    scale = np.abs(G_ref).max()
+    for m in range(-hw, hw + 1):
+        idx = np.arange(max(0, -m), min(n, n - m))
+        assert np.abs(Gd[idx, idx + m] - G_ref[idx, idx + m]).max() < rtol * scale
+
+
+def test_power_method():
+    rng = np.random.default_rng(10)
+    n = 50
+    M = _spd_banded(rng, n, 2)
+    mv = lambda v: jnp.asarray(M) @ v
+    lam = float(power_method(mv, (n,), jax.random.PRNGKey(0), iters=100,
+                             restarts=4, dtype=jnp.float64))
+    lam_ref = float(np.linalg.eigvalsh(M)[-1])
+    assert abs(lam - lam_ref) < 1e-3 * lam_ref
+
+
+def test_hutchinson_trace():
+    rng = np.random.default_rng(11)
+    n = 60
+    M = _spd_banded(rng, n, 1)
+    quad = lambda V: jnp.einsum("nq,nq->q", V, jnp.asarray(M) @ V)
+    tr = float(hutchinson(quad, (n,), jax.random.PRNGKey(0), probes=4096,
+                          dtype=jnp.float64))
+    assert abs(tr - np.trace(M)) < 0.02 * abs(np.trace(M))
+
+
+def test_logdet_taylor_well_conditioned():
+    rng = np.random.default_rng(12)
+    n = 40
+    M = _spd_banded(rng, n, 1)
+    mv = lambda v: jnp.asarray(M) @ v
+    ld = float(logdet_taylor(mv, n, (n,), jax.random.PRNGKey(0), order=400,
+                             probes=256, dtype=jnp.float64))
+    _, ld_ref = np.linalg.slogdet(M)
+    assert abs(ld - ld_ref) < 0.02 * abs(ld_ref) + 0.5
