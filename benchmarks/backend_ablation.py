@@ -1,0 +1,114 @@
+"""Backend ablation: jax-scan vs Pallas kernels through the same GP core.
+
+Times the dispatched banded primitives (matvec / solve / logdet / band
+matmul) and the end-to-end GP entry points (posterior mean / var / MLL)
+through both ``repro.kernels.ops`` backends over an n-grid.
+
+Off-TPU the "pallas" rows run the kernels in interpret mode — they measure
+dispatch correctness and interpret overhead, not TPU speed; the "jax" rows
+are the compiled scan reference. On TPU the same harness gives the real
+kernel-vs-scan ablation (``--full`` grid n ∈ {1e3..1e5}).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (GPConfig, fit, posterior_mean, posterior_var,
+                        log_likelihood)
+from repro.core import banded as bd
+from repro.core.kernel_packets import kp_factors
+from repro.data import sample_test_function
+
+BACKENDS = ("jax", "pallas")
+
+
+def _time(fn, reps=3):
+    out = fn()  # warmup/compile
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def run_ops(ns=(1000, 4000), q=1, reps=3, out_rows=None):
+    """Op-level ablation: one banded primitive per row, per backend."""
+    rows = out_rows if out_rows is not None else []
+    for n in ns:
+        rng = np.random.default_rng(n)
+        xs = jnp.asarray(np.sort(rng.random(n) * 10))
+        A, Phi = kp_factors(q, 1.3, xs)
+        S = bd.add(bd.scale(A, 0.09), Phi)  # sigma^2 A + Phi, SPD-ish
+        rhs = jnp.asarray(rng.standard_normal((n, 8)))
+        for backend in BACKENDS:
+            timings = {
+                "banded_matvec": _time(
+                    lambda: bd.matvec(S, rhs, backend=backend), reps),
+                "banded_solve": _time(
+                    lambda: bd.solve(S, rhs, pivot=False, backend=backend), reps),
+                "banded_logdet": _time(
+                    lambda: bd.logdet(S, pivot=False, backend=backend), reps),
+                "band_matmul": _time(
+                    lambda: bd.band_band_matmul(A, bd.transpose(Phi),
+                                                backend=backend).data, reps),
+            }
+            for op, v in timings.items():
+                rows.append({"bench": "backend_ablation_ops", "backend": backend,
+                             "op": op, "n": n, "q": q, "time_s": v})
+                print(f"backend_ablation_ops,{backend},{op},n={n},"
+                      f"us_per_call={v*1e6:.0f}", flush=True)
+    return rows
+
+
+def run_gp(ns=(500, 1000), D=5, q=0, reps=3, out_rows=None):
+    """End-to-end ablation: posterior mean/var/MLL through each backend."""
+    rows = out_rows if out_rows is not None else []
+    for n in ns:
+        X, Y, f, bounds = sample_test_function("schwefel", n, D, seed=0)
+        omega = jnp.asarray(8.0 / (bounds[:, 1] - bounds[:, 0]))
+        Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+        Xq = jnp.asarray(np.random.default_rng(1).uniform(
+            bounds[:, 0], bounds[:, 1], (16, D)))
+        key = jax.random.PRNGKey(0)
+        for backend in BACKENDS:
+            cfg = GPConfig(q=q, solver="pcg", solver_iters=30, logdet_order=30,
+                           logdet_probes=8, trace_probes=8, backend=backend)
+            gp = fit(cfg, Xj, Yj, omega, 1.0)
+            timings = {
+                "fit": _time(lambda: fit(cfg, Xj, Yj, omega, 1.0).bY, reps),
+                "posterior_mean": _time(lambda: posterior_mean(gp, Xq), reps),
+                "posterior_var": _time(lambda: posterior_var(gp, Xq), reps),
+                "mll": _time(lambda: log_likelihood(gp, key), reps),
+            }
+            for op, v in timings.items():
+                rows.append({"bench": "backend_ablation_gp", "backend": backend,
+                             "op": op, "n": n, "D": D, "q": q, "time_s": v})
+                print(f"backend_ablation_gp,{backend},{op},n={n},"
+                      f"ms_per_call={v*1e3:.1f}", flush=True)
+    return rows
+
+
+def run(full=False, out_rows=None):
+    rows = out_rows if out_rows is not None else []
+    # interpret-mode pallas on CPU pays a large constant per solve row; the
+    # smoke grid keeps it honest but quick, --full is the paper-scale grid
+    # (meant for a real TPU where "pallas" is compiled, not interpreted).
+    op_ns = (1000, 10_000, 100_000) if full else (1000, 2000)
+    gp_ns = (1000, 4000, 16_000) if full else (300,)
+    run_ops(ns=op_ns, out_rows=rows)
+    run_gp(ns=gp_ns, out_rows=rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(full=args.full)

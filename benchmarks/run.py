@@ -24,24 +24,32 @@ def main() -> None:
                                                   "results.json"))
     args = ap.parse_args()
 
-    from . import fig5_prediction, fig6_bayesopt, table1_complexity
+    from . import backend_ablation, fig5_prediction, fig6_bayesopt, \
+        table1_complexity
 
     rows: list[dict] = []
     print("== Fig 5: prediction RMSE/time vs n ==", flush=True)
+    # non-full grids are a CPU smoke (scripts/check.sh budget); --full is the
+    # paper's grid
     ns = (500, 1000, 2000, 4000, 8000, 16000, 30000) if args.full else (
-        500, 1000, 2000)
+        500, 1000)
     fig5_prediction.run(fname="schwefel", D=10, ns=ns,
-                        reps=3 if not args.full else 5, out_rows=rows)
-    fig5_prediction.run(fname="rastrigin", D=10, ns=ns, reps=3, out_rows=rows)
+                        reps=2 if not args.full else 5, out_rows=rows)
+    if args.full:
+        fig5_prediction.run(fname="rastrigin", D=10, ns=ns, reps=3,
+                            out_rows=rows)
 
     print("== Fig 6: Bayesian optimization ==", flush=True)
-    fig6_bayesopt.run(D=5, budget=40 if args.full else 15,
+    fig6_bayesopt.run(D=5, budget=40 if args.full else 4,
                       n_init=20, out_rows=rows)
 
     print("== Table 1: per-term complexity ==", flush=True)
     table1_complexity.run(
         D=5, ns=(1000, 2000, 4000, 8000, 16000) if args.full else
-        (1000, 2000, 4000), out_rows=rows)
+        (1000, 2000), out_rows=rows)
+
+    print("== Backend ablation: jax scan vs Pallas kernels ==", flush=True)
+    backend_ablation.run(full=args.full, out_rows=rows)
 
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)

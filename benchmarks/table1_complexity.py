@@ -51,7 +51,7 @@ def run(D=5, ns=(1000, 2000, 4000, 8000), q=0, out_rows=None):
             "acq_operator": _time(lambda: acquisition_value_and_grad(
                 gp, Xq, 2.0, 0.0)[0]),
         }
-        if n <= 2000:  # dense cache path (paper's O(1), O(n^2) memory)
+        if n <= 1000:  # dense cache path (paper's O(1), O(n^2) memory)
             cache = build_local_cache(gp)
             timings["acq_local_O1"] = _time(lambda: acq_local(
                 gp, cache, Xq[0], 2.0, 0.0)[0])

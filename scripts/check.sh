@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# One-command verify entrypoint: tier-1 tests + benchmark smoke.
+#
+#   scripts/check.sh          # tier-1 (slow tests deselected via pytest.ini)
+#   scripts/check.sh --slow   # include slow-marked tests
+#   SKIP_BENCH=1 scripts/check.sh   # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=(-x -q)
+if [[ "${1:-}" == "--slow" ]]; then
+  PYTEST_ARGS+=(-m "slow or not slow")  # override pytest.ini deselection
+  shift
+fi
+
+echo "== tier-1 tests =="
+python -m pytest "${PYTEST_ARGS[@]}"
+
+if [[ -z "${SKIP_BENCH:-}" ]]; then
+  echo "== benchmark smoke =="
+  python -m benchmarks.run
+fi
+
+echo "check.sh: OK"

@@ -37,7 +37,8 @@ __all__ = ["GPConfig", "AdditiveGP", "fit", "posterior_mean", "posterior_var",
     jax.tree_util.register_dataclass,
     data_fields=(),
     meta_fields=("q", "solver", "solver_iters", "pivot", "logdet_order",
-                 "logdet_probes", "trace_probes", "power_iters", "logdet_method"),
+                 "logdet_probes", "trace_probes", "power_iters", "logdet_method",
+                 "backend"),
 )
 @dataclasses.dataclass(frozen=True)
 class GPConfig:
@@ -45,6 +46,9 @@ class GPConfig:
     solver: str = "pcg"  # backfitting method for Mhat^{-1}
     solver_iters: int = 50
     pivot: bool = False
+    # banded-algebra backend: "auto" (pallas on TPU, jax elsewhere) | "jax" |
+    # "pallas"; threaded through every matvec/solve/logdet via kernels.ops
+    backend: str = "auto"
     logdet_order: int = 30
     logdet_probes: int = 16
     trace_probes: int = 16
@@ -56,7 +60,8 @@ class GPConfig:
     logdet_method: str = "taylor_pc"
 
     def solve_cfg(self) -> SolveConfig:
-        return SolveConfig(method=self.solver, iters=self.solver_iters, pivot=self.pivot)
+        return SolveConfig(method=self.solver, iters=self.solver_iters,
+                           pivot=self.pivot, backend=self.backend)
 
 
 @partial(
@@ -96,9 +101,24 @@ def _build_factors(q: int, omega: jax.Array, xs: jax.Array):
     return A, Phi, B, Psi
 
 
-@partial(jax.jit, static_argnums=(0,))
 def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma) -> AdditiveGP:
-    """Build all sparse factors and posterior caches — O(n log n)."""
+    """Build all sparse factors and posterior caches — O(n log n).
+
+    The banded-algebra backend is resolved here (config "auto" -> concrete
+    "jax"/"pallas" via the process default / REPRO_BACKEND / platform) and
+    baked into the returned GP, so the jit cache keys on the *resolved*
+    backend and later ``set_backend`` calls can't silently hit a stale trace.
+    """
+    from ..kernels import ops as _kops
+
+    config = dataclasses.replace(config,
+                                 backend=_kops.resolve_backend(config.backend))
+    return _fit_impl(config, X, Y, omega, sigma)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _fit_impl(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array,
+              sigma) -> AdditiveGP:
     q = config.q
     n, D = X.shape
     sigma = jnp.asarray(sigma, X.dtype)
@@ -119,8 +139,9 @@ def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma) -
     cfg = config.solve_cfg()
     SY = jnp.broadcast_to(Y[None, :], (D, n))
     u_sy = solve_mhat(ops, SY, cfg)  # Mhat^{-1} S Y, original order
-    bY = solve(transpose(Phi), ops.to_sorted(u_sy) / sigma**2, pivot=config.pivot)
-    Gband = variance_band(A, Phi)
+    bY = solve(transpose(Phi), ops.to_sorted(u_sy) / sigma**2,
+               pivot=config.pivot, backend=config.backend)
+    Gband = variance_band(A, Phi, backend=config.backend)
     return AdditiveGP(X=X, Y=Y, omega=omega, sigma=sigma, xs=xs, ops=ops, B=B,
                       Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband, config=config)
 
@@ -178,7 +199,8 @@ def posterior_var(gp: AdditiveGP, Xq: jax.Array) -> jax.Array:
         rows,
         jnp.broadcast_to(m_idx, rows.shape),
     ].add(vals)
-    w_sorted = solve(gp.ops.Phi, phi_dense, pivot=gp.config.pivot)  # (D, n, m)
+    w_sorted = solve(gp.ops.Phi, phi_dense, pivot=gp.config.pivot,
+                     backend=gp.config.backend)  # (D, n, m)
     w = gp.ops.from_sorted(w_sorted)
     z = solve_mhat(gp.ops, w, gp.config.solve_cfg())
     term3 = jnp.sum(w * z, axis=(0, 1))
@@ -205,7 +227,7 @@ def _logdet_mhat(gp: AdditiveGP, key: jax.Array) -> jax.Array:
     c = gp.config
     n, D = gp.n, gp.D
     if c.logdet_method == "taylor":
-        mv = lambda u: mhat_matvec(gp.ops, u, pivot=c.pivot)
+        mv = lambda u: mhat_matvec(gp.ops, u, pivot=c.pivot, backend=c.backend)
         return logdet_taylor(
             mv, D * n, (D, n), key, order=c.logdet_order, probes=c.logdet_probes,
             power_iters=c.power_iters, dtype=gp.Y.dtype,
@@ -213,8 +235,11 @@ def _logdet_mhat(gp: AdditiveGP, key: jax.Array) -> jax.Array:
     # taylor_pc: C = Khat^{-1} + sigma^{-2} I (block diag). log|C| is exact:
     # log|K_d^{-1} + s^{-2} I| = log|A_d + s^{-2} Phi_d| - log|Phi_d|.
     APhi = add(gp.ops.A, scale(gp.ops.Phi, 1.0 / gp.sigma**2))
-    ld_c = jnp.sum(logdet(APhi)) - jnp.sum(logdet(gp.ops.Phi))
-    nv = lambda u: gp.ops.block_solve(mhat_matvec(gp.ops, u, pivot=c.pivot), pivot=c.pivot)
+    ld_c = jnp.sum(logdet(APhi, pivot=c.pivot, backend=c.backend)) - jnp.sum(
+        logdet(gp.ops.Phi, pivot=c.pivot, backend=c.backend))
+    nv = lambda u: gp.ops.block_solve(
+        mhat_matvec(gp.ops, u, pivot=c.pivot, backend=c.backend),
+        pivot=c.pivot, backend=c.backend)
     ld_n = logdet_taylor(
         nv, D * n, (D, n), key, order=c.logdet_order, probes=c.logdet_probes,
         power_iters=c.power_iters, dtype=gp.Y.dtype,
@@ -228,7 +253,9 @@ def log_likelihood(gp: AdditiveGP, key: jax.Array) -> jax.Array:
     n = gp.n
     quad = gp.Y @ gp.Y / gp.sigma**2 - (gp.Y @ jnp.sum(gp.u_sy, axis=0)) / gp.sigma**4
     ld_mhat = _logdet_mhat(gp, key)
-    ld_k = jnp.sum(logdet(gp.ops.Phi)) - jnp.sum(logdet(gp.ops.A))
+    be, pv = gp.config.backend, gp.config.pivot
+    ld_k = jnp.sum(logdet(gp.ops.Phi, pivot=pv, backend=be)) - jnp.sum(
+        logdet(gp.ops.A, pivot=pv, backend=be))
     return -0.5 * (
         quad + ld_mhat + ld_k + 2.0 * n * jnp.log(gp.sigma) + n * jnp.log(2.0 * jnp.pi)
     )
@@ -239,7 +266,9 @@ def _dk_apply(gp: AdditiveGP, v: jax.Array) -> jax.Array:
     D = gp.D
     vb = jnp.broadcast_to(v[None], (D,) + v.shape)
     vs = gp.ops.to_sorted(vb)
-    w = solve(gp.B, matvec(gp.Psi, vs), pivot=gp.config.pivot)
+    be = gp.config.backend
+    w = solve(gp.B, matvec(gp.Psi, vs, backend=be), pivot=gp.config.pivot,
+              backend=be)
     return gp.ops.from_sorted(w)
 
 

@@ -156,8 +156,9 @@ def inverse_band(H: Banded, hw: int) -> Banded:
     return Banded(out.reshape(H.data.shape[:-2] + out.shape[-2:]), hw, hw)
 
 
-def variance_band(A: Banded, Phi: Banded) -> Banded:
+def variance_band(A: Banded, Phi: Banded,
+                  backend: str | None = None) -> Banded:
     """Algorithm 5 entry point: the 2q+1 band of (A Phi^T)^{-1} = Phi^{-T} A^{-1}."""
-    H = band_band_matmul(A, transpose(Phi))
+    H = band_band_matmul(A, transpose(Phi), backend=backend)
     hw = A.lo + Phi.lo  # 2q+1
     return inverse_band(mask_band(H), hw)

@@ -9,6 +9,12 @@ shift-multiply — the TPU-friendly reformulation of the paper's sparse ops.
 Provided ops: matvec, transpose, dense<->band conversion, band x band product,
 LU solve without pivoting (scan), LU solve with partial pivoting (gbsv-style
 scan), and log|det| from the pivoted factorization.
+
+The public ``matvec`` / ``solve`` / ``logdet`` / ``band_band_matmul`` entry
+points dispatch through ``repro.kernels.ops`` (backend = "jax" scan reference
+vs "pallas" kernels, see that module for the selection rules); the
+``_*_scan`` functions below are the jax-backend implementations the
+dispatcher routes back to.
 """
 from __future__ import annotations
 
@@ -55,11 +61,11 @@ class Banded:
         return self.lo + self.hi + 1
 
     def __post_init__(self):
-        assert self.data.shape[-1] == self.lo + self.hi + 1, (
-            self.data.shape,
-            self.lo,
-            self.hi,
-        )
+        # jax tree unflattening (vmap/jit internals) may pass sentinel
+        # placeholders for `data`; only validate real array-likes.
+        shape = getattr(self.data, "shape", None)
+        if shape is not None:
+            assert shape[-1] == self.lo + self.hi + 1, (shape, self.lo, self.hi)
 
 
 def _band_mask(n: int, lo: int, hi: int) -> jax.Array:
@@ -110,12 +116,20 @@ def _shift(x: jax.Array, m: int) -> jax.Array:
     return jnp.pad(x, pad)[..., :n]
 
 
-def matvec(b: Banded, x: jax.Array) -> jax.Array:
+def matvec(b: Banded, x: jax.Array, *, backend: str | None = None) -> jax.Array:
     """y = M @ x.
 
     x may be (..., n) (vector batch) or (..., n, k) (matrix RHS; n axis at -2,
     matching the layout used by ``solve``). Batch dims broadcast against b.
+    Dispatches through ``repro.kernels.ops`` (backend: None -> global default).
     """
+    from ..kernels import ops as _ops
+
+    return _ops.banded_matvec(b.data, x, b.lo, b.hi, backend=backend)
+
+
+def _matvec_scan(b: Banded, x: jax.Array) -> jax.Array:
+    """Pure-jax shift-multiply matvec (the "jax" backend implementation)."""
     if x.ndim >= 2 and x.shape[-2] == b.n and x.ndim == b.data.ndim:
         # (..., n, k) form: shift along axis -2, broadcast data over k
         y = None
@@ -143,7 +157,16 @@ def transpose(b: Banded) -> Banded:
     return mask_band(Banded(data, b.hi, b.lo))
 
 
-def band_band_matmul(a: Banded, b: Banded) -> Banded:
+def band_band_matmul(a: Banded, b: Banded, *, backend: str | None = None) -> Banded:
+    """C = A @ B in band form; dispatches through ``repro.kernels.ops``."""
+    from ..kernels import ops as _ops
+
+    data = _ops.band_band_matmul(a.data, b.data, a.lo, a.hi, b.lo, b.hi,
+                                 backend=backend)
+    return Banded(data, a.lo + b.lo, a.hi + b.hi)
+
+
+def _band_band_matmul_scan(a: Banded, b: Banded) -> Banded:
     """C = A @ B in band form; lo = a.lo + b.lo, hi = a.hi + b.hi."""
     lo, hi = a.lo + b.lo, a.hi + b.hi
     n = a.n
@@ -361,8 +384,21 @@ def solve_nopivot(b: Banded, rhs: jax.Array) -> jax.Array:
     return _batched(_solve_nopivot_single, b, rhs)
 
 
-def solve(b: Banded, rhs: jax.Array, pivot: bool = True) -> jax.Array:
-    """Solve M x = rhs. Default uses partial pivoting (robust)."""
+def solve(b: Banded, rhs: jax.Array, pivot: bool = True,
+          *, backend: str | None = None) -> jax.Array:
+    """Solve M x = rhs. Default uses partial pivoting (robust).
+
+    Dispatches through ``repro.kernels.ops``; pivot=True always takes the
+    jax scan path (no pivoted Pallas kernel).
+    """
+    from ..kernels import ops as _ops
+
+    return _ops.banded_solve(b.data, rhs, b.lo, b.hi, pivot=pivot,
+                             backend=backend)
+
+
+def _solve_scan(b: Banded, rhs: jax.Array, pivot: bool = True) -> jax.Array:
+    """Pure-jax banded LU solve (the "jax" backend implementation)."""
     if b.lo == 1 and b.hi == 1 and not pivot:
         return _tridiag_solve(b, rhs)
     fn = _solve_pivot_single if pivot else _solve_nopivot_single
@@ -384,7 +420,22 @@ def _tridiag_solve(b: Banded, rhs: jax.Array) -> jax.Array:
     return _batched(lambda bb, r: one(bb.data, r), b, rhs)
 
 
-def logdet(b: Banded) -> jax.Array:
+def logdet(b: Banded, pivot: bool = True,
+           *, backend: str | None = None) -> jax.Array:
+    """log |det M|; dispatches through ``repro.kernels.ops``.
+
+    Defaults to pivot=True like ``solve`` — the robust path on every backend
+    (the scan implementation is always pivoted; the flag only constrains
+    dispatch). Callers on stably-factorizable bands (the GP core's KP
+    systems) pass pivot=False to unlock the no-pivot Pallas kernel.
+    """
+    from ..kernels import ops as _ops
+
+    return _ops.banded_logdet(b.data, b.lo, b.hi, pivot=pivot,
+                              backend=backend)
+
+
+def _logdet_scan(b: Banded) -> jax.Array:
     """log |det M| via pivoted LU (absolute value; batched over leading dims)."""
 
     def one(data):

@@ -23,7 +23,22 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["spec_for_axes", "shardings_for", "batch_pspecs", "cache_pspecs"]
+__all__ = ["make_abstract_mesh", "spec_for_axes", "shardings_for",
+           "batch_pspecs", "cache_pspecs"]
+
+
+def make_abstract_mesh(shape: tuple, names: tuple):
+    """Device-free AbstractMesh across jax versions.
+
+    jax <= 0.4.x takes a single ``((name, size), ...)`` shape tuple; newer
+    releases take ``(axis_sizes, axis_names)`` positionally.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(zip(names, shape)))
+    except TypeError:
+        return AbstractMesh(tuple(shape), tuple(names))
 
 
 def _rules(mesh: Mesh, mode: str = "train") -> dict[str, tuple]:
@@ -112,6 +127,11 @@ def cache_pspecs(cache_tree, mesh: Mesh, batch: int):
     mp = mesh.shape.get("model", 1)
     batch_ok = batch % dp == 0
 
+    def unwrap(e):
+        # singleton axis tuples are not == their bare-string form in older
+        # jax PartitionSpec equality; canonicalize before building P
+        return e[0] if isinstance(e, tuple) and len(e) == 1 else e
+
     def kv_spec(ab):
         # (L|G, B, T, Kv, hd)
         _, B, T, Kv, hd = ab.shape
@@ -131,7 +151,7 @@ def cache_pspecs(cache_tree, mesh: Mesh, batch: int):
             ent[2] = tuple(data_axes) + ("model",)  # batch=1 long-context
         elif hd % mp == 0:
             ent[4] = "model"
-        return P(*ent)
+        return P(*map(unwrap, ent))
 
     def state_spec(ab):
         # mamba/mlstm/slstm states: batch dim is the first dim of size `batch`

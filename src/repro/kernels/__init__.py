@@ -1,14 +1,27 @@
-"""Pallas TPU kernels for the paper's compute hot-spots.
+"""Pallas TPU kernels for the paper's compute hot-spots + backend dispatch.
 
 banded_matvec — banded y = Bx (backfitting / power-method / Hutchinson inner op)
+banded_lu     — banded LU solve (fwd/bwd substitution) + log-determinant
+band_matmul   — band x band product in band form (Algorithm 5 input H = A Phi^T)
 tridiag_pcr   — parallel-cyclic-reduction tridiagonal solve (Matérn-1/2 path;
                 TPU replacement for the paper's sequential banded LU)
 kp_gram       — fused Phi = A·K band assembly (Algorithm 2) without forming K
 
-Each kernel ships with a pure-jnp oracle in ref.py and is validated in
-interpret mode over shape/dtype sweeps in tests/test_kernels.py.
+``ops`` is the backend dispatch layer: every banded op in ``repro.core``
+routes through it and is served either by the pure-jax scan reference or by
+these kernels (interpret mode off-TPU). See ``ops`` module docstring and
+``README.md`` for the selection rules. Each kernel ships with a pure-jnp
+oracle in ``ref.py`` and is validated in interpret mode over
+shape/dtype/batch sweeps in ``tests/test_kernels.py`` and
+``tests/test_backend_dispatch.py``.
 """
 from . import ops, ref  # noqa: F401
+from .band_matmul import band_matmul_pallas  # noqa: F401
+from .banded_lu import (  # noqa: F401
+    banded_logdet_pallas,
+    banded_lu_pallas,
+    banded_solve_pallas,
+)
 from .banded_matvec import banded_matvec_pallas  # noqa: F401
 from .kp_gram import kp_gram_pallas  # noqa: F401
 from .tridiag_pcr import tridiag_pcr_pallas  # noqa: F401

@@ -1,33 +1,228 @@
-"""Jit'd dispatch layer: Pallas kernels on TPU, interpret-mode on CPU.
+"""Backend dispatch for all banded algebra in the GP core.
 
-These wrappers are what `repro.core` calls when `use_pallas=True`; they fall
-back to interpret mode automatically off-TPU so the same code path is tested
-everywhere.
+Every banded op the core performs — matvec, solve, logdet, band x band
+matmul, KP Gram assembly, tridiagonal solve — routes through this module and
+is served by one of two backends:
+
+  * ``"jax"``    — the pure-jax ``lax.scan`` reference implementations in
+                   ``repro.core.banded`` (compiled, CPU/GPU/TPU).
+  * ``"pallas"`` — the Pallas TPU kernels in this package, automatically run
+                   in interpret mode off-TPU so the same code path is
+                   testable everywhere.
+  * ``"auto"``   — resolves to ``"pallas"`` on TPU, ``"jax"`` elsewhere.
+
+Selection precedence (first wins):
+  1. an explicit ``"jax"``/``"pallas"`` ``backend=`` argument (threaded from
+     ``GPConfig.backend`` / ``SolveConfig.backend``),
+  2. the process-wide default set by ``set_backend`` / ``use_backend`` or the
+     ``REPRO_BACKEND`` environment variable (consulted when the argument is
+     ``None`` or ``"auto"`` — the config default — so the env var reaches
+     every routed op in the GP core),
+  3. platform: ``"pallas"`` on TPU, ``"jax"`` elsewhere.
+
+Backend choice is a trace-time static, so jitted GP entry points specialize
+per backend (``GPConfig`` is a static/meta field throughout).
+
+The pivoted banded solve has no Pallas kernel; ``pivot=True`` always takes
+the jax scan path regardless of backend (documented dispatch rule).
 """
 from __future__ import annotations
 
-import jax
+import contextlib
+import os
 
+import jax
+import jax.numpy as jnp
+
+from .band_matmul import band_matmul_pallas
+from .banded_lu import banded_logdet_pallas, banded_solve_pallas
 from .banded_matvec import banded_matvec_pallas
 from .kp_gram import kp_gram_pallas
 from .tridiag_pcr import tridiag_pcr_pallas
 
-__all__ = ["banded_matvec", "tridiag_solve", "kp_gram", "on_tpu"]
+__all__ = [
+    "BACKENDS", "on_tpu", "get_backend", "set_backend", "use_backend",
+    "resolve_backend", "banded_matvec", "banded_solve", "banded_logdet",
+    "band_band_matmul", "tridiag_solve", "kp_gram",
+]
+
+BACKENDS = ("auto", "jax", "pallas")
+ENV_VAR = "REPRO_BACKEND"
+
+_backend = os.environ.get(ENV_VAR, "auto")
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def banded_matvec(band, x, lo: int, hi: int, block: int = 512):
-    return banded_matvec_pallas(band, x, lo, hi, block=block,
-                                interpret=not on_tpu())
+def get_backend() -> str:
+    """Current process-wide default backend name (may be "auto")."""
+    return _backend
 
 
-def tridiag_solve(dl, d, du, rhs):
-    return tridiag_pcr_pallas(dl, d, du, rhs, interpret=not on_tpu())
+def set_backend(name: str) -> None:
+    """Set the process-wide default backend ("auto" | "jax" | "pallas")."""
+    global _backend
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
+    _backend = name
 
 
-def kp_gram(q, omega, xs, a_band, block: int = 512):
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Temporarily override the default backend (trace-time scope)."""
+    prev = _backend
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Resolve an op-level override (or the global default) to jax|pallas.
+
+    An explicit "jax"/"pallas" wins; "auto" (the GPConfig/SolveConfig
+    default) and None defer to the process default (set_backend /
+    REPRO_BACKEND); an "auto" process default resolves by platform.
+    """
+    b = backend if backend is not None else _backend
+    if b not in BACKENDS:
+        raise ValueError(f"unknown backend {b!r}; expected one of {BACKENDS}")
+    if b == "auto":
+        b = _backend  # config-level "auto" defers to the process default
+        if b not in BACKENDS:
+            # process default comes from REPRO_BACKEND unvalidated; a typo'd
+            # env value must raise here, not silently select a backend
+            raise ValueError(
+                f"unknown backend {b!r} (from {ENV_VAR} or set_backend); "
+                f"expected one of {BACKENDS}")
+    if b == "auto":
+        return "pallas" if on_tpu() else "jax"
+    return b
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def _core():
+    # deferred: repro.core.banded lazily imports this module in its public
+    # dispatchers, so neither side may import the other at module load
+    from ..core import banded as bd
+
+    return bd
+
+
+def _map_batched(fn, arrs, core_dims):
+    """Broadcast leading batch dims of ``arrs`` and map ``fn`` over them.
+
+    Pallas kernels are written for single operands; batch sizes here are the
+    GP's D (or D*probes) — small, so a trace-time unrolled loop beats relying
+    on vmap-of-pallas_call across jax versions.
+    """
+    batch = jnp.broadcast_shapes(*[a.shape[:-d] for a, d in zip(arrs, core_dims)])
+    flats = [
+        jnp.broadcast_to(a, batch + a.shape[-d:]).reshape((-1,) + a.shape[-d:])
+        for a, d in zip(arrs, core_dims)
+    ]
+    outs = [fn(*[f[i] for f in flats]) for i in range(flats[0].shape[0])]
+    out = jnp.stack(outs)
+    return out.reshape(batch + out.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# dispatched ops
+# ---------------------------------------------------------------------------
+
+
+def banded_matvec(band, x, lo: int, hi: int, block: int = 512,
+                  backend: str | None = None):
+    """y = M x. band (..., n, lo+hi+1); x (..., n) or (..., n, k)."""
+    bd = _core()
+    if resolve_backend(backend) == "jax":
+        return bd._matvec_scan(bd.Banded(band, lo, hi), x)
+    n = band.shape[-2]
+    mat_form = x.ndim >= 2 and x.shape[-2] == n and x.ndim == band.ndim
+    xb = x if mat_form else x[..., None]
+    out = _map_batched(
+        lambda d, r: banded_matvec_pallas(d, r, lo, hi, block=block,
+                                          interpret=_interpret()),
+        (band, xb), (2, 2),
+    )
+    return out if mat_form else out[..., 0]
+
+
+def banded_solve(band, rhs, lo: int, hi: int, pivot: bool = False,
+                 backend: str | None = None):
+    """Solve M x = rhs. band (..., n, w); rhs (..., n) or (..., n, k).
+
+    ``pivot=True`` always takes the jax scan path (no pivoted Pallas kernel).
+    """
+    bd = _core()
+    b = bd.Banded(band, lo, hi)
+    if pivot or resolve_backend(backend) == "jax":
+        return bd._solve_scan(b, rhs, pivot=pivot)
+    n = band.shape[-2]
+    vec_in = rhs.shape[-1] == n and rhs.ndim == band.ndim - 1
+    rb = rhs[..., None] if vec_in else rhs
+    out = _map_batched(
+        lambda d, r: banded_solve_pallas(d, r, lo, hi, interpret=_interpret()),
+        (band, rb), (2, 2),
+    )
+    return out[..., 0] if vec_in else out
+
+
+def banded_logdet(band, lo: int, hi: int, pivot: bool = False,
+                  backend: str | None = None):
+    """log |det M|, batched over leading dims of band.
+
+    ``pivot=True`` always takes the (pivoted) jax scan path — the Pallas
+    kernel's no-pivot elimination would hit log(0) on a dead leading pivot
+    (same dispatch rule as ``banded_solve``).
+    """
+    bd = _core()
+    if pivot or resolve_backend(backend) == "jax":
+        return bd._logdet_scan(bd.Banded(band, lo, hi))
+    return _map_batched(
+        lambda d: banded_logdet_pallas(d, lo, hi, interpret=_interpret()),
+        (band,), (2,),
+    )
+
+
+def band_band_matmul(a_band, b_band, a_lo: int, a_hi: int, b_lo: int,
+                     b_hi: int, block: int = 512, backend: str | None = None):
+    """C = A @ B in band form; returns band data (..., n, wa + wb - 1)."""
+    bd = _core()
+    if resolve_backend(backend) == "jax":
+        return bd._band_band_matmul_scan(
+            bd.Banded(a_band, a_lo, a_hi), bd.Banded(b_band, b_lo, b_hi)
+        ).data
+    out = _map_batched(
+        lambda a, b: band_matmul_pallas(a, b, a_lo, a_hi, b_lo, b_hi,
+                                        block=block, interpret=_interpret()),
+        (a_band, b_band), (2, 2),
+    )
+    n = a_band.shape[-2]
+    return out * bd._band_mask(n, a_lo + b_lo, a_hi + b_hi)
+
+
+def tridiag_solve(dl, d, du, rhs, backend: str | None = None):
+    """Tridiagonal solve; PCR kernel on pallas, lax.tridiagonal_solve on jax."""
+    if resolve_backend(backend) == "jax":
+        from .ref import tridiag_ref
+
+        return tridiag_ref(dl, d, du, rhs)
+    return tridiag_pcr_pallas(dl, d, du, rhs, interpret=_interpret())
+
+
+def kp_gram(q: int, omega, xs, a_band, block: int = 512,
+            backend: str | None = None):
+    """Fused Phi = A K band assembly (Algorithm 2)."""
+    if resolve_backend(backend) == "jax":
+        from .ref import kp_gram_ref
+
+        return kp_gram_ref(q, omega, xs, a_band)
     return kp_gram_pallas(q, omega, xs, a_band, block=block,
-                          interpret=not on_tpu())
+                          interpret=_interpret())

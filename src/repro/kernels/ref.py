@@ -1,16 +1,40 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Deliberately *independent* of the scan implementations they validate: banded
+operands are densified and hit with ``jnp.linalg`` so the parity suite can
+assert ``pallas(interpret) == ref == jax-scan`` with three genuinely distinct
+code paths.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from ..core import matern as mk
-from ..core.banded import Banded, matvec
+from ..core.banded import Banded, from_dense, to_dense
 
 
 def banded_matvec_ref(band: jax.Array, x: jax.Array, lo: int, hi: int):
-    """band (n, w), x (n, B)."""
-    return matvec(Banded(band, lo, hi), x)
+    """band (n, w); x (n,) or (n, B). Dense product oracle."""
+    return to_dense(Banded(band, lo, hi)) @ x
+
+
+def banded_solve_ref(band: jax.Array, rhs: jax.Array, lo: int, hi: int):
+    """band (n, w); rhs (n,) or (n, B). Dense solve oracle."""
+    return jnp.linalg.solve(to_dense(Banded(band, lo, hi)), rhs)
+
+
+def banded_logdet_ref(band: jax.Array, lo: int, hi: int):
+    """log |det M| via dense slogdet."""
+    return jnp.linalg.slogdet(to_dense(Banded(band, lo, hi)))[1]
+
+
+def band_matmul_ref(a_band: jax.Array, b_band: jax.Array,
+                    a_lo: int, a_hi: int, b_lo: int, b_hi: int):
+    """Band data of A @ B via the dense product."""
+    dense = to_dense(Banded(a_band, a_lo, a_hi)) @ to_dense(
+        Banded(b_band, b_lo, b_hi))
+    return from_dense(dense, a_lo + b_lo, a_hi + b_hi).data
 
 
 def tridiag_ref(dl, d, du, rhs):

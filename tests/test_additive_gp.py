@@ -20,7 +20,13 @@ from repro.core import exact
 from repro.core.backfitting import mhat_matvec, solve_mhat
 
 
-def _problem(n=60, D=3, seed=0):
+# one shared config for the fast (tier-1) tests below: identical GPConfig +
+# problem shapes let jit reuse the compiled `fit` across tests in one process
+CFG_FAST = GPConfig(q=0, solver="pcg", solver_iters=80, logdet_order=150,
+                    logdet_probes=32)
+
+
+def _problem(n=36, D=3, seed=0):
     rng = np.random.default_rng(seed)
     X = jnp.asarray(rng.random((n, D)) * 5)
     Y = jnp.asarray(np.sin(np.asarray(X)).sum(1) + 0.1 * rng.standard_normal(n))
@@ -28,12 +34,19 @@ def _problem(n=60, D=3, seed=0):
     return X, Y, omega, 0.3
 
 
-@pytest.mark.parametrize("q", [0, 1])
-@pytest.mark.parametrize("solver", ["pcg", "gauss_seidel"])
+@pytest.mark.parametrize("q,solver", [
+    (0, "pcg"),
+    pytest.param(1, "pcg", marks=pytest.mark.slow),
+    pytest.param(0, "gauss_seidel", marks=pytest.mark.slow),
+    pytest.param(1, "gauss_seidel", marks=pytest.mark.slow),
+])
 def test_posterior_matches_dense(q, solver):
     X, Y, omega, sigma = _problem()
-    iters = 80 if solver == "pcg" else 200
-    cfg = GPConfig(q=q, solver=solver, solver_iters=iters)
+    if (q, solver) == (0, "pcg"):
+        cfg = CFG_FAST
+    else:
+        iters = 80 if solver == "pcg" else 200
+        cfg = GPConfig(q=q, solver=solver, solver_iters=iters)
     gp = fit(cfg, X, Y, omega, sigma)
     rng = np.random.default_rng(1)
     Xq = jnp.asarray(rng.random((9, X.shape[1])) * 5)
@@ -45,6 +58,7 @@ def test_posterior_matches_dense(q, solver):
     assert np.abs(np.array(var - var_ref)).max() < tol
 
 
+@pytest.mark.slow
 def test_jacobi_solver_converges():
     """Damped block-Jacobi (model-parallel variant) reduces the residual."""
     from repro.core.backfitting import SolveConfig, mhat_matvec, solve_mhat
@@ -59,11 +73,15 @@ def test_jacobi_solver_converges():
     assert rel < 0.05, rel
 
 
-@pytest.mark.parametrize("q", [0, 1])
+@pytest.mark.parametrize("q", [pytest.param(0, marks=pytest.mark.slow),
+                               pytest.param(1, marks=pytest.mark.slow)])
 def test_loglik_matches_dense(q):
-    X, Y, omega, sigma = _problem(n=50)
-    cfg = GPConfig(q=q, solver="pcg", solver_iters=80, logdet_order=300,
-                   logdet_probes=64, logdet_method="taylor_pc")
+    X, Y, omega, sigma = _problem()
+    if q == 0:
+        cfg = CFG_FAST  # taylor_pc default; order 150 is ample for q=0
+    else:
+        cfg = GPConfig(q=q, solver="pcg", solver_iters=80, logdet_order=300,
+                       logdet_probes=64, logdet_method="taylor_pc")
     gp = fit(cfg, X, Y, omega, sigma)
     ll = float(log_likelihood(gp, jax.random.PRNGKey(0)))
     ll_ref = float(exact.log_marginal_likelihood(q, omega, sigma, X, Y))
@@ -71,6 +89,7 @@ def test_loglik_matches_dense(q):
     assert abs(ll - ll_ref) < 0.05 * abs(ll_ref) + 2.0
 
 
+@pytest.mark.slow
 def test_preconditioned_logdet_beats_paper_taylor():
     """Beyond-paper check: taylor_pc is far more accurate at equal order."""
     X, Y, omega, sigma = _problem(n=50)
@@ -85,6 +104,7 @@ def test_preconditioned_logdet_beats_paper_taylor():
     assert errs["taylor_pc"] < 0.2 * errs["taylor"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("q", [0, 1])
 def test_mll_gradients_match_dense(q):
     X, Y, omega, sigma = _problem(n=50)
@@ -98,12 +118,13 @@ def test_mll_gradients_match_dense(q):
     assert abs(float(g_sg - g_sg_ref)) < 0.15 * (abs(float(g_sg_ref)) + 1.0)
 
 
+@pytest.mark.slow
 def test_mhat_operator_matches_dense():
     from repro.core import matern as mk
 
-    X, Y, omega, sigma = _problem(n=35, D=2)
+    X, Y, omega, sigma = _problem()
     q = 0
-    cfg = GPConfig(q=q, solver="pcg", solver_iters=100)
+    cfg = CFG_FAST
     gp = fit(cfg, X, Y, omega, sigma)
     n, D = gp.n, gp.D
     Mhat = np.zeros((D * n, D * n))
@@ -125,6 +146,7 @@ def test_mhat_operator_matches_dense():
     assert np.abs(sol - ref_sol).max() < 1e-6
 
 
+@pytest.mark.slow
 def test_posterior_mean_grad_fd():
     X, Y, omega, sigma = _problem(n=40)
     cfg = GPConfig(q=1, solver="pcg", solver_iters=80)
@@ -140,9 +162,10 @@ def test_posterior_mean_grad_fd():
         assert np.abs(g[:, j] - fd).max() < 1e-5
 
 
+@pytest.mark.slow
 def test_dtype_float32_path():
     """The library must run in float32 (TPU-first) without NaNs."""
-    X, Y, omega, sigma = _problem(n=80)
+    X, Y, omega, sigma = _problem()
     X32, Y32, om32 = X.astype(jnp.float32), Y.astype(jnp.float32), omega.astype(jnp.float32)
     cfg = GPConfig(q=0, solver="pcg", solver_iters=60)
     gp = fit(cfg, X32, Y32, om32, np.float32(sigma))
@@ -156,11 +179,12 @@ def test_dtype_float32_path():
     assert np.abs(np.array(mu) - np.array(mu_ref)).max() < 5e-2
 
 
+@pytest.mark.slow
 def test_duplicate_boundary_points_are_handled():
     """BO proposals clipped to the box create exact ties; the KP construction
     requires distinct points — fit() separates ties by a span-relative eps."""
     rng = np.random.default_rng(0)
-    n, D = 40, 3
+    n, D = 30, 3
     Xn = np.asarray(rng.uniform(-500, 500, (n, D)))
     Xn[5] = Xn[9] = 500.0
     Xn[11, 0] = Xn[17, 0] = -500.0

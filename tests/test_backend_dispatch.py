@@ -1,0 +1,358 @@
+"""Backend dispatch parity: pallas(interpret) == ref == jax scan.
+
+The archetype centerpiece: every op served by ``repro.kernels.ops`` is
+checked across bandwidths, dtypes, batch shapes and RHS forms.
+
+Structure (keeps tier-1 fast — compile count is the real cost on CPU):
+  * per-op sweeps compare the pallas kernel against the dense ``ref.py``
+    oracle (cheap compiles) over widths x dtypes x batch shapes;
+  * one three-way test per op additionally pins ``jax scan == ref`` at a
+    representative width (the scan paths get their own dense-oracle sweeps
+    in ``test_banded.py``);
+  * the widest/exotic bandwidths run in the slow-marked full sweep
+    (``-m "slow or not slow"`` / ``scripts/check.sh --slow``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import banded as bd
+from repro.kernels import ops, ref
+
+WIDTHS_FAST = [(0, 0), (1, 1), (2, 1), (1, 2), (3, 3)]
+WIDTHS_FULL = [(0, 2), (2, 0), (4, 2), (2, 4)]
+DTYPES = [jnp.float32, jnp.float64]
+F32_FAST = {(1, 1), (3, 3)}  # f32 widths kept in tier-1 (rest slow-marked)
+
+
+def _sweep_params():
+    out = []
+    for lo, hi in WIDTHS_FAST:
+        out.append(pytest.param(jnp.float64, lo, hi,
+                                 marks=() if (lo, hi) != (0, 0)
+                                 else (pytest.mark.slow,)))
+        out.append(pytest.param(
+            jnp.float32, lo, hi,
+            marks=() if (lo, hi) in F32_FAST else (pytest.mark.slow,)))
+    return out
+
+
+def _tol(dtype):
+    return 2e-4 if dtype == jnp.float32 else 1e-9
+
+
+def _rand_band(rng, n, lo, hi, dtype, batch=(), boost=4.0):
+    """Masked band data with a boosted diagonal (stable no-pivot LU)."""
+    data = rng.standard_normal(batch + (n, lo + hi + 1))
+    data[..., :, lo] += boost
+    i = np.arange(n)[:, None]
+    m = np.arange(-lo, hi + 1)[None, :]
+    mask = ((i + m) >= 0) & ((i + m) < n)
+    return jnp.asarray(data * mask, dtype)
+
+
+def _assert_close(got, want, dtype, label):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(want, np.float64),
+        rtol=_tol(dtype), atol=_tol(dtype), err_msg=label)
+
+
+def _check_matvec(lo, hi, dtype, n=40):
+    rng = np.random.default_rng(lo * 10 + hi)
+    band = _rand_band(rng, n, lo, hi, dtype, (2,))
+    x = jnp.asarray(rng.standard_normal((2, n, 2)), dtype)
+    got = ops.banded_matvec(band, x, lo, hi, block=32, backend="pallas")
+    for b in range(2):
+        want = ref.banded_matvec_ref(band[b], x[b], lo, hi)
+        _assert_close(got[b], want, dtype, f"pallas!=ref batch {b}")
+    # vector-RHS form, unbatched
+    v = jnp.asarray(rng.standard_normal(n), dtype)
+    got_v = ops.banded_matvec(band[0], v, lo, hi, block=32, backend="pallas")
+    _assert_close(got_v, ref.banded_matvec_ref(band[0], v, lo, hi), dtype,
+                  "vec pallas!=ref")
+
+
+def _check_solve(lo, hi, dtype, n=40):
+    rng = np.random.default_rng(100 + lo * 10 + hi)
+    band = _rand_band(rng, n, lo, hi, dtype, (2,))
+    rhs = jnp.asarray(rng.standard_normal((2, n, 2)), dtype)
+    got = ops.banded_solve(band, rhs, lo, hi, pivot=False, backend="pallas")
+    for b in range(2):
+        want = ref.banded_solve_ref(band[b], rhs[b], lo, hi)
+        _assert_close(got[b], want, dtype, f"pallas!=ref batch {b}")
+    v = jnp.asarray(rng.standard_normal(n), dtype)
+    got_v = ops.banded_solve(band[0], v, lo, hi, pivot=False, backend="pallas")
+    _assert_close(got_v, ref.banded_solve_ref(band[0], v, lo, hi), dtype,
+                  "vec pallas!=ref")
+
+
+def _check_logdet(lo, hi, dtype, n=40):
+    rng = np.random.default_rng(200 + lo * 10 + hi)
+    band = _rand_band(rng, n, lo, hi, dtype, (3,))
+    got = ops.banded_logdet(band, lo, hi, backend="pallas")
+    assert got.shape == (3,)
+    for b in range(3):
+        want = ref.banded_logdet_ref(band[b], lo, hi)
+        _assert_close(got[b], want, dtype, f"pallas!=ref batch {b}")
+
+
+def _check_band_matmul(wa, wb, dtype, n=40):
+    (a_lo, a_hi), (b_lo, b_hi) = wa, wb
+    rng = np.random.default_rng(300 + a_lo + 7 * b_hi)
+    a = _rand_band(rng, n, a_lo, a_hi, dtype, (2,))
+    b = _rand_band(rng, n, b_lo, b_hi, dtype, (2,))
+    got = ops.band_band_matmul(a, b, a_lo, a_hi, b_lo, b_hi, block=32,
+                               backend="pallas")
+    for i in range(2):
+        want = ref.band_matmul_ref(a[i], b[i], a_lo, a_hi, b_lo, b_hi)
+        _assert_close(got[i], want, dtype, f"pallas!=ref batch {i}")
+
+
+@pytest.mark.parametrize("dtype,lo,hi", _sweep_params())
+def test_matvec_parity(lo, hi, dtype):
+    _check_matvec(lo, hi, dtype)
+
+
+@pytest.mark.parametrize("dtype,lo,hi", _sweep_params())
+def test_solve_parity(lo, hi, dtype):
+    _check_solve(lo, hi, dtype)
+
+
+@pytest.mark.parametrize("lo,hi", WIDTHS_FAST)
+def test_logdet_parity(lo, hi):
+    _check_logdet(lo, hi, jnp.float64)
+
+
+@pytest.mark.parametrize("wa,wb", [((1, 1), (1, 1)), ((2, 1), (1, 2))])
+def test_band_matmul_parity(wa, wb):
+    _check_band_matmul(wa, wb, jnp.float64)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("lo,hi", WIDTHS_FULL)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_full_width_sweep(lo, hi, dtype):
+    """Exotic / wide bandwidths across every op (opt-in full sweep)."""
+    _check_matvec(lo, hi, dtype, n=64)
+    _check_solve(lo, hi, dtype, n=64)
+    _check_logdet(lo, hi, dtype, n=64)
+    _check_band_matmul((lo, hi), (hi, lo), dtype, n=64)
+
+
+@pytest.mark.parametrize("op", ["matvec", "solve", "logdet", "band_matmul"])
+def test_three_way_parity(op):
+    """pallas == jax scan == dense ref at a representative width."""
+    lo, hi, n = 2, 1, 40
+    dtype = jnp.float64
+    rng = np.random.default_rng(7)
+    band = _rand_band(rng, n, lo, hi, dtype)
+    rhs = jnp.asarray(rng.standard_normal((n, 2)), dtype)
+    if op == "matvec":
+        j = ops.banded_matvec(band, rhs, lo, hi, backend="jax")
+        p = ops.banded_matvec(band, rhs, lo, hi, block=32, backend="pallas")
+        r = ref.banded_matvec_ref(band, rhs, lo, hi)
+    elif op == "solve":
+        j = ops.banded_solve(band, rhs, lo, hi, pivot=False, backend="jax")
+        p = ops.banded_solve(band, rhs, lo, hi, pivot=False, backend="pallas")
+        r = ref.banded_solve_ref(band, rhs, lo, hi)
+    elif op == "logdet":
+        j = ops.banded_logdet(band, lo, hi, backend="jax")
+        p = ops.banded_logdet(band, lo, hi, backend="pallas")
+        r = ref.banded_logdet_ref(band, lo, hi)
+    else:
+        j = ops.band_band_matmul(band, band, lo, hi, lo, hi, backend="jax")
+        p = ops.band_band_matmul(band, band, lo, hi, lo, hi, block=32,
+                                 backend="pallas")
+        r = ref.band_matmul_ref(band, band, lo, hi, lo, hi)
+    _assert_close(j, r, dtype, f"{op}: jax!=ref")
+    _assert_close(p, r, dtype, f"{op}: pallas!=ref")
+
+
+@pytest.mark.parametrize(
+    "dtype", [jnp.float64, pytest.param(jnp.float32, marks=pytest.mark.slow)])
+def test_tridiag_parity(dtype):
+    rng = np.random.default_rng(42)
+    n = 128
+    d = jnp.asarray(rng.standard_normal(n) + 4.0, dtype)
+    dl = jnp.asarray(rng.standard_normal(n), dtype).at[0].set(0.0)
+    du = jnp.asarray(rng.standard_normal(n), dtype).at[-1].set(0.0)
+    rhs = jnp.asarray(rng.standard_normal((n, 2)), dtype)
+    got_j = ops.tridiag_solve(dl, d, du, rhs, backend="jax")
+    got_p = ops.tridiag_solve(dl, d, du, rhs, backend="pallas")
+    tol = 1e-3 if dtype == jnp.float32 else 1e-8
+    np.testing.assert_allclose(np.asarray(got_p, np.float64),
+                               np.asarray(got_j, np.float64),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("q", [0, pytest.param(1, marks=pytest.mark.slow)])
+def test_kp_gram_parity(q):
+    from repro.core.kernel_packets import kp_factors
+
+    rng = np.random.default_rng(q)
+    n = 100
+    xs = jnp.asarray(np.sort(rng.random(n) * 8), jnp.float32)
+    A, _ = kp_factors(q, 1.1, xs)
+    a32 = A.data.astype(jnp.float32)
+    got_j = ops.kp_gram(q, 1.1, xs, a32, backend="jax")
+    got_p = ops.kp_gram(q, 1.1, xs, a32, block=64, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got_p, np.float64),
+                               np.asarray(got_j, np.float64),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_pivot_always_routes_to_scan():
+    """pivot=True must produce the pivoted-scan result on every backend."""
+    rng = np.random.default_rng(5)
+    n, lo, hi = 30, 2, 2
+    band = _rand_band(rng, n, lo, hi, jnp.float64, boost=0.0)
+    band = band.at[5, lo].set(0.0)  # dead diagonal -> no-pivot LU blows up
+    rhs = jnp.asarray(rng.standard_normal((n, 2)))
+    want = ref.banded_solve_ref(band, rhs, lo, hi)
+    want_ld = ref.banded_logdet_ref(band, lo, hi)
+    for backend in ("pallas",):  # jax/auto trivially route to the same scan
+        got = ops.banded_solve(band, rhs, lo, hi, pivot=True, backend=backend)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-8, atol=1e-8)
+        # logdet has the same escape hatch: no-pivot LU would hit log(0) here
+        ld = ops.banded_logdet(band, lo, hi, pivot=True, backend=backend)
+        assert np.isfinite(float(ld))
+        np.testing.assert_allclose(float(ld), float(want_ld), rtol=1e-8)
+
+
+def test_backend_selection_rules():
+    """set_backend / use_backend / env override / validation."""
+    assert ops.resolve_backend("jax") == "jax"
+    assert ops.resolve_backend("pallas") == "pallas"
+    # auto resolves by platform
+    expected_auto = "pallas" if ops.on_tpu() else "jax"
+    assert ops.resolve_backend("auto") == expected_auto
+    prev = ops.get_backend()
+    try:
+        ops.set_backend("pallas")
+        assert ops.resolve_backend() == "pallas"
+        # config-level "auto" (the GPConfig/SolveConfig default) defers to
+        # the process default — REPRO_BACKEND/set_backend must reach the core
+        assert ops.resolve_backend("auto") == "pallas"
+        with ops.use_backend("jax"):
+            assert ops.resolve_backend() == "jax"
+            assert ops.resolve_backend("auto") == "jax"
+        assert ops.resolve_backend() == "pallas"  # context restored
+        with pytest.raises(ValueError):
+            ops.set_backend("tpu-go-brrr")
+        with pytest.raises(ValueError):
+            ops.resolve_backend("nope")
+    finally:
+        ops.set_backend(prev)
+
+
+def test_invalid_env_default_raises_on_auto(monkeypatch):
+    """A typo'd REPRO_BACKEND must raise, not silently pick a backend, even
+    through the config-level "auto" deferral path."""
+    monkeypatch.setattr(ops, "_backend", "jaxx")  # as seeded by a bad env var
+    with pytest.raises(ValueError, match="jaxx"):
+        ops.resolve_backend("auto")
+    with pytest.raises(ValueError, match="jaxx"):
+        ops.resolve_backend()
+
+
+def test_env_override_is_read_at_import(monkeypatch):
+    """REPRO_BACKEND seeds the module default (checked via a fresh reload)."""
+    import importlib
+    import os
+
+    monkeypatch.setenv(ops.ENV_VAR, "pallas")
+    try:
+        mod = importlib.reload(ops)
+        assert mod.get_backend() == "pallas"
+    finally:
+        # restore the real environment *before* the re-seeding reload, so a
+        # developer-set REPRO_BACKEND survives for the rest of the session
+        monkeypatch.undo()
+        mod = importlib.reload(ops)
+        assert mod.get_backend() == os.environ.get(mod.ENV_VAR, "auto")
+
+
+def test_core_banded_dispatch_equivalence():
+    """core.banded public API with backend= matches both underlying paths."""
+    rng = np.random.default_rng(8)
+    n, lo, hi = 36, 2, 1
+    band = _rand_band(rng, n, lo, hi, jnp.float64)
+    b = bd.Banded(band, lo, hi)
+    rhs = jnp.asarray(rng.standard_normal((n, 3)))
+    dense = np.asarray(bd.to_dense(b))
+    for backend in ("jax", "pallas"):
+        assert np.allclose(np.asarray(bd.matvec(b, rhs, backend=backend)),
+                           dense @ np.asarray(rhs))
+        assert np.allclose(
+            np.asarray(bd.solve(b, rhs, pivot=False, backend=backend)),
+            np.linalg.solve(dense, np.asarray(rhs)), atol=1e-8)
+        assert abs(float(bd.logdet(b, backend=backend))
+                   - np.linalg.slogdet(dense)[1]) < 1e-8
+
+
+@pytest.mark.slow
+def test_fit_resolves_backend_into_config():
+    """fit() bakes the resolved backend into the GP, so the jit cache keys on
+    it and a later set_backend cannot silently reuse a stale trace."""
+    from repro.core import GPConfig, fit
+
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.random((12, 2)))
+    Y = jnp.asarray(rng.random(12))
+    om = jnp.ones(2)
+    with ops.use_backend("pallas"):
+        gp = fit(GPConfig(q=0, solver_iters=5), X, Y, om, 0.5)
+    assert gp.config.backend == "pallas"
+    gp2 = fit(GPConfig(q=0, solver_iters=5), X, Y, om, 0.5)
+    assert gp2.config.backend == ("pallas" if ops.on_tpu() else "jax")
+
+
+def test_gp_end_to_end_backend_parity():
+    """fit + posterior mean produce identical numbers through both backends.
+
+    (Variance and MLL parity are covered per-op by the sweeps above and
+    end-to-end by the slow-marked variant below.)"""
+    from repro.core import GPConfig, fit, posterior_mean
+
+    rng = np.random.default_rng(0)
+    n, D = 20, 2
+    X = jnp.asarray(rng.random((n, D)) * 5)
+    Y = jnp.asarray(np.sin(np.asarray(X)).sum(1) + 0.1 * rng.standard_normal(n))
+    omega = jnp.asarray(0.7 + rng.random(D))
+    Xq = jnp.asarray(rng.random((4, D)) * 5)
+    out = {}
+    for backend in ("jax", "pallas"):
+        cfg = GPConfig(q=0, solver="pcg", solver_iters=30, logdet_probes=2,
+                       logdet_order=10, power_iters=5, backend=backend)
+        gp = fit(cfg, X, Y, omega, 0.3)
+        out[backend] = np.asarray(posterior_mean(gp, Xq))
+    assert np.abs(out["jax"] - out["pallas"]).max() < 1e-7
+
+
+@pytest.mark.slow
+def test_gp_mll_backend_parity():
+    """log-likelihood, MLL gradients and posterior variance match across
+    backends end to end."""
+    from repro.core import GPConfig, fit, log_likelihood, mll_gradients, \
+        posterior_var
+
+    rng = np.random.default_rng(0)
+    n, D = 24, 2
+    X = jnp.asarray(rng.random((n, D)) * 5)
+    Y = jnp.asarray(np.sin(np.asarray(X)).sum(1) + 0.1 * rng.standard_normal(n))
+    omega = jnp.asarray(0.7 + rng.random(D))
+    out = {}
+    for backend in ("jax", "pallas"):
+        cfg = GPConfig(q=0, solver="pcg", solver_iters=40, logdet_probes=4,
+                       logdet_order=20, trace_probes=8, backend=backend)
+        gp = fit(cfg, X, Y, omega, 0.3)
+        g_om, g_sg = mll_gradients(gp, jax.random.PRNGKey(1))
+        out[backend] = (float(log_likelihood(gp, jax.random.PRNGKey(0))),
+                        np.asarray(g_om), float(g_sg),
+                        np.asarray(posterior_var(gp, X[:4])))
+    assert abs(out["jax"][0] - out["pallas"][0]) < 1e-6
+    assert np.abs(out["jax"][1] - out["pallas"][1]).max() < 1e-6
+    assert abs(out["jax"][2] - out["pallas"][2]) < 1e-6
+    assert np.abs(out["jax"][3] - out["pallas"][3]).max() < 1e-7

@@ -15,17 +15,21 @@ from repro.core.bayesopt import (
 )
 
 
-def _gp(q=0, n=50, D=3, seed=0):
+def _gp(q=0, n=32, D=2, seed=0):
     rng = np.random.default_rng(seed)
     X = jnp.asarray(rng.random((n, D)) * 5)
     Y = jnp.asarray(np.sin(np.asarray(X)).sum(1) + 0.1 * rng.standard_normal(n))
     omega = jnp.asarray(0.8 + rng.random(D))
-    cfg = GPConfig(q=q, solver="pcg", solver_iters=80)
+    cfg = GPConfig(q=q, solver="pcg", solver_iters=40)
     return fit(cfg, X, Y, omega, 0.3), X, Y
 
 
-@pytest.mark.parametrize("q", [0, 1])
-@pytest.mark.parametrize("kind", ["ucb", "ei"])
+@pytest.mark.parametrize("q,kind", [
+    pytest.param(0, "ucb", marks=pytest.mark.slow),
+    pytest.param(1, "ucb", marks=pytest.mark.slow),
+    pytest.param(0, "ei", marks=pytest.mark.slow),
+    pytest.param(1, "ei", marks=pytest.mark.slow),
+])
 def test_acquisition_grad_finite_diff(q, kind):
     gp, X, Y = _gp(q=q)
     rng = np.random.default_rng(1)
@@ -50,6 +54,7 @@ def test_acquisition_grad_finite_diff(q, kind):
         assert np.abs(np.array(grad[:, j]) - fd).max() < 1e-4
 
 
+@pytest.mark.slow
 def test_local_cache_matches_operator_path():
     gp, X, Y = _gp(q=1, n=40)
     cache = build_local_cache(gp)
@@ -63,6 +68,7 @@ def test_local_cache_matches_operator_path():
         assert np.abs(np.array(g_loc - g_op[0])).max() < 1e-8
 
 
+@pytest.mark.slow
 def test_propose_next_in_bounds():
     gp, X, Y = _gp()
     bounds = jnp.asarray([[0.0, 5.0]] * gp.D)
@@ -72,6 +78,7 @@ def test_propose_next_in_bounds():
     assert (np.array(x) >= 0).all() and (np.array(x) <= 5).all()
 
 
+@pytest.mark.slow
 def test_bo_loop_improves_on_additive_objective():
     D = 2
     bounds = jnp.asarray([[-2.0, 2.0]] * D, jnp.float64)

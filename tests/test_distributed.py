@@ -2,12 +2,17 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import batch_pspecs, cache_pspecs, spec_for_axes
+from repro.distributed.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    make_abstract_mesh,
+    spec_for_axes,
+)
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = make_abstract_mesh((16, 16), ("data", "model"))
+MESH3 = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_spec_for_axes_basic():

@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import banded as bd
 from repro.core import matern as mk
@@ -26,7 +25,12 @@ def test_matern_derivatives(q):
     assert abs(float(mk.matern(q, om, x, x)) - 1.0) < 1e-12
 
 
-@pytest.mark.parametrize("q,n", [(0, 10), (0, 64), (1, 12), (1, 64), (2, 20), (3, 30)])
+@pytest.mark.parametrize("q,n", [
+    (0, 10), (1, 12), (2, 20),
+    pytest.param(0, 64, marks=pytest.mark.slow),
+    pytest.param(1, 64, marks=pytest.mark.slow),
+    pytest.param(3, 30, marks=pytest.mark.slow),
+])
 def test_kp_factorization(q, n):
     rng = np.random.default_rng(q * 100 + n)
     xs = _sorted_points(rng, n)
@@ -44,7 +48,7 @@ def test_kp_factorization(q, n):
     assert np.abs(rec - K).max() < 1e-7
 
 
-@pytest.mark.parametrize("q", [0, 1])
+@pytest.mark.parametrize("q", [0, pytest.param(1, marks=pytest.mark.slow)])
 def test_gkp_factorization(q):
     rng = np.random.default_rng(7)
     n = 40
@@ -59,16 +63,17 @@ def test_gkp_factorization(q):
     assert np.abs(rec - dK).max() < 1e-7
 
 
-@settings(max_examples=10, deadline=None)
-@given(
-    q=st.integers(0, 2),
-    n=st.integers(9, 80),
-    omega=st.floats(0.2, 4.0),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_kp_property(q, n, omega, seed):
-    """Property: for any scattered points & scale, A K is banded and invertible."""
+@pytest.mark.parametrize("seed", [0, pytest.param(1, marks=pytest.mark.slow),
+                                  pytest.param(2, marks=pytest.mark.slow)])
+def test_kp_property(seed):
+    """Property: for any scattered points & scale, A K is banded and invertible.
+
+    Seeded sweep (ex-hypothesis): q, n, omega drawn from the same ranges.
+    """
     rng = np.random.default_rng(seed)
+    q = int(rng.integers(0, 3))
+    n = int(rng.integers(9, 81))
+    omega = float(0.2 + rng.random() * 3.8)
     xs = _sorted_points(rng, n, span=5.0)
     A, Phi = kp.kp_factors(q, omega, xs)
     K = np.array(mk.gram(q, omega, xs))
@@ -79,7 +84,8 @@ def test_kp_property(q, n, omega, seed):
     assert np.isfinite(float(bd.logdet(A)))
 
 
-@pytest.mark.parametrize("q", [0, 1, 2])
+@pytest.mark.parametrize("q", [0, pytest.param(1, marks=pytest.mark.slow),
+                               pytest.param(2, marks=pytest.mark.slow)])
 def test_phi_at_matches_dense(q):
     """Sparse phi(x*) window equals the dense product A k(X, x*)."""
     rng = np.random.default_rng(11)

@@ -29,6 +29,9 @@ def _batch(model, B=2, S=32):
     return {"tokens": tok, "labels": tok}
 
 
+# the model-architecture sweep is orthogonal to the GP core and entirely
+# slow-marked (opt in with -m "slow or not slow" / scripts/check.sh --slow)
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", sorted(ARCHS.keys()))
 def test_forward_and_loss(arch):
     cfg = reduced(ARCHS[arch], layers=2, width=64)
@@ -48,6 +51,7 @@ def test_forward_and_loss(arch):
     assert np.isfinite(float(loss)), "NaN loss"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", sorted(ARCHS.keys()))
 def test_train_step_grads(arch):
     cfg = reduced(ARCHS[arch], layers=2, width=64)
@@ -61,6 +65,7 @@ def test_train_step_grads(arch):
     assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all()) for g in flat)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", sorted(ARCHS.keys()))
 def test_decode_step(arch):
     cfg = reduced(ARCHS[arch], layers=2, width=64)
@@ -87,6 +92,7 @@ def test_decode_step(arch):
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_dense():
     """Greedy decode logits == teacher-forced forward logits (dense arch)."""
     cfg = reduced(ARCHS["smollm-360m"], layers=2, width=64)
@@ -109,6 +115,7 @@ def test_decode_matches_forward_dense():
     assert float(err) < 0.15, float(err)  # bf16 accumulation-order tolerance
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_ssm():
     cfg = reduced(ARCHS["xlstm-1.3b"], layers=2, width=64)
     model = build(cfg)

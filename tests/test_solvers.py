@@ -19,7 +19,11 @@ def _spd_banded(rng, n, hw):
     return dense
 
 
-@pytest.mark.parametrize("n,hw,want", [(30, 1, 3), (47, 2, 5), (64, 3, 3)])
+@pytest.mark.parametrize("n,hw,want", [
+    (30, 1, 3),
+    pytest.param(47, 2, 5, marks=pytest.mark.slow),
+    pytest.param(64, 3, 3, marks=pytest.mark.slow),
+])
 def test_inverse_band_matches_dense(n, hw, want):
     rng = np.random.default_rng(n)
     dense = _spd_banded(rng, n, hw)

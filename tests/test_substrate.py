@@ -31,6 +31,7 @@ def test_pipeline_deterministic_skip():
     assert np.array_equal(np.array(batches[3]["tokens"]), np.array(b3["tokens"]))
 
 
+@pytest.mark.slow
 def test_adamw_descends_quadratic():
     cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=100, weight_decay=0.0)
     params = {"w": jnp.asarray([3.0, -2.0])}
@@ -73,6 +74,7 @@ def test_grad_compressor_error_feedback():
     assert np.abs(total_true - total_comp).mean() < 0.05 * denom + 0.05
 
 
+@pytest.mark.slow
 def test_end_to_end_training_loss_decreases(tmp_path):
     from repro.launch.train import main
 
@@ -85,6 +87,7 @@ def test_end_to_end_training_loss_decreases(tmp_path):
     assert loss < 4.5, loss
 
 
+@pytest.mark.slow
 def test_checkpoint_resume_continues(tmp_path):
     from repro.launch.train import main
 
