@@ -25,7 +25,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import backend_ablation, fig5_prediction, fig6_bayesopt, \
-        table1_complexity
+        streaming_updates, table1_complexity
 
     rows: list[dict] = []
     print("== Fig 5: prediction RMSE/time vs n ==", flush=True)
@@ -51,9 +51,22 @@ def main() -> None:
     print("== Backend ablation: jax scan vs Pallas kernels ==", flush=True)
     backend_ablation.run(full=args.full, out_rows=rows)
 
+    print("== Streaming: incremental insert vs refit ==", flush=True)
+    streaming_rows: list[dict] = []
+    streaming_updates.run(
+        ns=(1000, 10000, 100000) if args.full else (500, 1000),
+        reps=3 if args.full else 2, out_rows=streaming_rows)
+    rows += streaming_rows
+
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {len(rows)} rows to {args.out}", flush=True)
+
+    # machine-readable perf-trajectory artifact for the streaming path
+    stream_out = os.path.join(os.path.dirname(args.out), "BENCH_streaming.json")
+    with open(stream_out, "w") as f:
+        json.dump(streaming_rows, f, indent=1)
+    print(f"wrote {len(streaming_rows)} rows to {stream_out}", flush=True)
 
 
 if __name__ == "__main__":

@@ -29,8 +29,14 @@ from .banded import Banded, add, logdet, matvec, scale, solve, transpose
 from .kernel_packets import gkp_factors, kp_factors, phi_at, phi_grad_at
 from .stochastic import logdet_taylor
 
-__all__ = ["GPConfig", "AdditiveGP", "fit", "posterior_mean", "posterior_var",
-           "log_likelihood", "mll_gradients", "fit_hyperparams"]
+__all__ = ["GPConfig", "AdditiveGP", "fit", "posterior_caches",
+           "posterior_mean", "posterior_var", "log_likelihood",
+           "mll_gradients", "fit_hyperparams", "TIE_EPS"]
+
+# Span-relative separation applied to exactly-tied sorted coordinates (KP
+# construction needs distinct points); streaming inserts reuse it so an
+# incrementally grown GP matches a from-scratch fit.
+TIE_EPS = 1e-9
 
 
 @partial(
@@ -116,6 +122,26 @@ def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma) -
     return _fit_impl(config, X, Y, omega, sigma)
 
 
+def posterior_caches(config: GPConfig, ops: DimOps, Y: jax.Array,
+                     x0: jax.Array | None = None, iters: int | None = None):
+    """(u_sy, bY, Gband) posterior caches from assembled banded factors.
+
+    Shared by ``fit`` (cold start) and ``repro.streaming`` inserts, which pass
+    ``x0`` — the pre-insert ``Mhat^{-1} S Y`` spliced at the new point — to
+    warm-start the backfitting solve and ``iters`` to cap it.
+    """
+    cfg = config.solve_cfg()
+    if iters is not None:
+        cfg = dataclasses.replace(cfg, iters=iters)
+    D, n = ops.D, ops.n
+    SY = jnp.broadcast_to(Y[None, :], (D, n))
+    u_sy = solve_mhat(ops, SY, cfg, x0=x0)  # Mhat^{-1} S Y, original order
+    bY = solve(transpose(ops.Phi), ops.to_sorted(u_sy) / ops.sigma2,
+               pivot=config.pivot, backend=config.backend)
+    Gband = variance_band(ops.A, ops.Phi, backend=config.backend)
+    return u_sy, bY, Gband
+
+
 @partial(jax.jit, static_argnums=(0,))
 def _fit_impl(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array,
               sigma) -> AdditiveGP:
@@ -130,18 +156,13 @@ def _fit_impl(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array,
     # span-relative epsilon (preserves order; perturbation ~1e-9 of range).
     span = xs[:, -1:] - xs[:, :1] + 1.0
     gaps = jnp.diff(xs, axis=1)
-    bump = jnp.cumsum(jnp.where(gaps <= 0, span * 1e-9, 0.0), axis=1)
+    bump = jnp.cumsum(jnp.where(gaps <= 0, span * TIE_EPS, 0.0), axis=1)
     xs = xs.at[:, 1:].add(bump)
     A, Phi, B, Psi = _build_factors(q, omega, xs)
     SAPhi = add(scale(A, sigma**2), Phi)
     ops = DimOps(A=A, Phi=Phi, SAPhi=SAPhi, sort_idx=sort_idx, rank_idx=rank_idx,
                  sigma2=sigma**2)
-    cfg = config.solve_cfg()
-    SY = jnp.broadcast_to(Y[None, :], (D, n))
-    u_sy = solve_mhat(ops, SY, cfg)  # Mhat^{-1} S Y, original order
-    bY = solve(transpose(Phi), ops.to_sorted(u_sy) / sigma**2,
-               pivot=config.pivot, backend=config.backend)
-    Gband = variance_band(A, Phi, backend=config.backend)
+    u_sy, bY, Gband = posterior_caches(config, ops, Y)
     return AdditiveGP(X=X, Y=Y, omega=omega, sigma=sigma, xs=xs, ops=ops, B=B,
                       Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband, config=config)
 

@@ -114,10 +114,11 @@ def mhat_matvec(ops: DimOps, u: jax.Array, pivot: bool = False,
     return ops.khat_inv_mv(u, pivot=pivot, backend=backend) + ssT / ops.sigma2
 
 
-def _gauss_seidel(ops: DimOps, v: jax.Array, cfg: SolveConfig) -> jax.Array:
+def _gauss_seidel(ops: DimOps, v: jax.Array, cfg: SolveConfig,
+                  x0: jax.Array | None = None) -> jax.Array:
     """Algorithm 4: block Gauss-Seidel sweeps, sequential over dimensions."""
     D = ops.D
-    vt = jnp.zeros_like(v)
+    vt = jnp.zeros_like(v) if x0 is None else x0
 
     def solve_one_dim(d, r_d):
         # single-dim block solve (r_d: (n, B))
@@ -142,13 +143,14 @@ def _gauss_seidel(ops: DimOps, v: jax.Array, cfg: SolveConfig) -> jax.Array:
     return jax.lax.fori_loop(0, cfg.iters, sweep, vt)
 
 
-def _jacobi(ops: DimOps, v: jax.Array, cfg: SolveConfig) -> jax.Array:
+def _jacobi(ops: DimOps, v: jax.Array, cfg: SolveConfig,
+            x0: jax.Array | None = None) -> jax.Array:
     """Damped block Jacobi: all D dims in parallel (one batched banded solve).
 
     The block-Jacobi iteration matrix for Mhat has eigenvalues in
     (-(D-1), 1]; damping alpha <= 2/D guarantees convergence — auto uses 1/D.
     """
-    vt = jnp.zeros_like(v)
+    vt = jnp.zeros_like(v) if x0 is None else x0
     alpha = cfg.damping if cfg.damping > 0 else 1.0 / ops.D
 
     def sweep(_, vt):
@@ -160,7 +162,8 @@ def _jacobi(ops: DimOps, v: jax.Array, cfg: SolveConfig) -> jax.Array:
     return jax.lax.fori_loop(0, cfg.iters, sweep, vt)
 
 
-def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig) -> jax.Array:
+def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
+         x0: jax.Array | None = None) -> jax.Array:
     """Preconditioned CG on the SPD system Mhat x = v, M_pre = block solve."""
 
     def amv(u):
@@ -169,7 +172,7 @@ def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig) -> jax.Array:
     def pre(u):
         return ops.block_solve(u, pivot=cfg.pivot, backend=cfg.backend)
 
-    x = jnp.zeros_like(v)
+    x = jnp.zeros_like(v) if x0 is None else x0
     r = v - amv(x)
     z = pre(r)
     p = z
@@ -192,17 +195,28 @@ def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig) -> jax.Array:
     return x
 
 
-def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig()) -> jax.Array:
-    """Apply Mhat^{-1} to v: (D, n) or (D, n, B), original point order."""
+def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig(),
+               x0: jax.Array | None = None) -> jax.Array:
+    """Apply Mhat^{-1} to v: (D, n) or (D, n, B), original point order.
+
+    ``x0`` optionally warm-starts the iteration from a previous solution
+    (same shape as ``v``). All three methods are fixed-point/Krylov schemes
+    whose iterate *is* the solution estimate, so a near-converged ``x0`` —
+    e.g. the pre-insert solution spliced at a streamed point — cuts the
+    iteration count to O(1) (paper Sec. 6; Kernel Multigrid's warm-started
+    back-fitting argument).
+    """
     vec_in = v.ndim == 2
     if vec_in:
         v = v[..., None]
+        if x0 is not None:
+            x0 = x0[..., None]
     if cfg.method == "gauss_seidel":
-        out = _gauss_seidel(ops, v, cfg)
+        out = _gauss_seidel(ops, v, cfg, x0)
     elif cfg.method == "jacobi":
-        out = _jacobi(ops, v, cfg)
+        out = _jacobi(ops, v, cfg, x0)
     elif cfg.method == "pcg":
-        out = _pcg(ops, v, cfg)
+        out = _pcg(ops, v, cfg, x0)
     else:
         raise ValueError(f"unknown method {cfg.method!r}")
     return out[..., 0] if vec_in else out

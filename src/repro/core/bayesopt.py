@@ -27,6 +27,7 @@ from .kernel_packets import phi_grad_at
 __all__ = [
     "BOConfig",
     "acquisition_value_and_grad",
+    "acquisition_stats",
     "propose_next",
     "bayes_opt_loop",
     "LocalAcqCache",
@@ -39,7 +40,8 @@ __all__ = [
     jax.tree_util.register_dataclass,
     data_fields=(),
     meta_fields=("kind", "beta", "ascent_steps", "lr", "n_starts", "refit_every",
-                 "hyper_steps", "hyper_lr"),
+                 "hyper_steps", "hyper_lr", "incremental", "use_engine",
+                 "insert_iters"),
 )
 @dataclasses.dataclass(frozen=True)
 class BOConfig:
@@ -51,6 +53,12 @@ class BOConfig:
     refit_every: int = 10  # hyperparameter re-learning cadence (0 = never)
     hyper_steps: int = 10
     hyper_lr: float = 0.05
+    # Sec. 6 streaming path (repro.streaming): grow the posterior by
+    # O(q)-window inserts between refit rounds / serve the acquisition ascent
+    # from the slot-batched engine. False = legacy refit-every-round loop.
+    incremental: bool = True
+    use_engine: bool = True
+    insert_iters: int = 0  # warm backfitting iters per insert (0 = auto)
 
 
 def _grad_windows(gp: AdditiveGP, Xq: jax.Array):
@@ -63,10 +71,8 @@ def _grad_windows(gp: AdditiveGP, Xq: jax.Array):
     return jax.vmap(per_dim)(gp.omega, gp.xs, gp.ops.A.data, Xq.T)
 
 
-@partial(jax.jit, static_argnames=("kind",))
-def acquisition_value_and_grad(gp: AdditiveGP, Xq: jax.Array, beta, best_y,
-                               kind: str = "ucb"):
-    """(A(x*), grad A(x*)) for a batch Xq (m, D) — Eq. (28)-(29)."""
+def _acq_core(gp: AdditiveGP, Xq: jax.Array, beta, best_y, kind: str):
+    """Shared acquisition math: (value, grad, mean, variance) for Xq (m, D)."""
     q = gp.config.q
     D, n = gp.D, gp.n
     m = Xq.shape[0]
@@ -123,7 +129,29 @@ def acquisition_value_and_grad(gp: AdditiveGP, Xq: jax.Array, beta, best_y,
         grad = dval_dmu[:, None] * dmu + dval_ds[:, None] * dvar
     else:
         raise ValueError(kind)
+    return val, grad, mu, var
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def acquisition_value_and_grad(gp: AdditiveGP, Xq: jax.Array, beta, best_y,
+                               kind: str = "ucb"):
+    """(A(x*), grad A(x*)) for a batch Xq (m, D) — Eq. (28)-(29)."""
+    val, grad, _, _ = _acq_core(gp, Xq, beta, best_y, kind)
     return val, grad
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def acquisition_stats(gp: AdditiveGP, Xq: jax.Array, beta, best_y,
+                      kind: str = "ucb"):
+    """(value, grad, mean, variance) in one pass — the serving-engine step."""
+    return _acq_core(gp, Xq, beta, best_y, kind)
+
+
+def ascent_step(X: jax.Array, grad: jax.Array, lo, hi, step_len) -> jax.Array:
+    """One normalized projected-gradient ascent update (shared with the
+    serving engine, which must reproduce ``propose_next`` tick-for-tick)."""
+    gn = jnp.linalg.norm(grad, axis=1, keepdims=True)
+    return jnp.clip(X + step_len * grad / jnp.maximum(gn, 1e-12), lo, hi)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -138,9 +166,7 @@ def propose_next(gp: AdditiveGP, bounds: jax.Array, key: jax.Array,
 
     def body(_, X):
         _, g = acquisition_value_and_grad(gp, X, cfg.beta, best_y, kind=cfg.kind)
-        gn = jnp.linalg.norm(g, axis=1, keepdims=True)
-        X = X + cfg.lr * span * g / jnp.maximum(gn, 1e-12)
-        return jnp.clip(X, lo, hi)
+        return ascent_step(X, g, lo, hi, cfg.lr * span)
 
     X = jax.lax.fori_loop(0, cfg.ascent_steps, body, X0)
     val, _ = acquisition_value_and_grad(gp, X, cfg.beta, best_y, kind=cfg.kind)
@@ -159,7 +185,18 @@ def bayes_opt_loop(
     sigma0: float = 0.5,
     verbose: bool = False,
 ):
-    """Algorithm 1 with sparse posteriors; maximizes ``f``. Returns history."""
+    """Algorithm 1 with sparse posteriors; maximizes ``f``. Returns history.
+
+    Sec. 6 streaming path (the default): between hyperparameter refits the
+    posterior is grown by ``repro.streaming.insert`` — O(q)-window factor
+    updates plus a warm-started backfitting solve — instead of a full
+    O(n log n) refit, and the acquisition ascent is served by the
+    slot-batched ``GPServeEngine``. Hyperparameter refits always re-seed the
+    optimizer from the previously *learned* ``(omega, sigma)``, never the
+    config defaults; the per-round values are recorded in
+    ``hist["omega"]``/``hist["sigma"]``. Set
+    ``BOConfig(incremental=False, use_engine=False)`` for the legacy loop.
+    """
     D = bounds.shape[0]
     key, sub = jax.random.split(key)
     lo, hi = bounds[:, 0], bounds[:, 1]
@@ -168,23 +205,46 @@ def bayes_opt_loop(
     omega = (jnp.ones((D,), bounds.dtype) * (4.0 / (hi - lo))
              if omega0 is None else jnp.asarray(omega0))
     sigma = jnp.asarray(sigma0, bounds.dtype)
-    hist = {"x": [], "y": [], "best": []}
+    hist = {"x": [], "y": [], "best": [], "omega": [], "sigma": []}
     gp = fit(gp_config, X, Y, omega, sigma)
+    engine = None
+    if bo_config.use_engine or bo_config.incremental:
+        from ..streaming import GPServeEngine, insert as stream_insert, \
+            propose_via_engine
+    if bo_config.use_engine:
+        engine = GPServeEngine(gp, bounds, batch_slots=bo_config.n_starts,
+                               kind=bo_config.kind, beta=bo_config.beta,
+                               lr=bo_config.lr)
     for t in range(budget):
         key, k1, k2 = jax.random.split(key, 3)
         if bo_config.refit_every and t % bo_config.refit_every == 0 and t > 0:
+            # warm init: the previously learned (omega, sigma) seed the refit
             gp, (omega, sigma), _ = fit_hyperparams(
                 gp_config, X, Y, omega, sigma, k2,
                 steps=bo_config.hyper_steps, lr=bo_config.hyper_lr,
             )
-        x_new = propose_next(gp, bounds, k1, bo_config, jnp.max(Y))
+            if engine is not None:
+                engine.set_posterior(gp)
+        best_y = jnp.max(Y)
+        if engine is not None:
+            x_new = propose_via_engine(engine, k1, bo_config, best_y)
+        else:
+            x_new = propose_next(gp, bounds, k1, bo_config, best_y)
         y_new = f(x_new)
         X = jnp.concatenate([X, x_new[None]], axis=0)
         Y = jnp.concatenate([Y, jnp.asarray([y_new], Y.dtype)])
-        gp = fit(gp_config, X, Y, omega, sigma)
+        if bo_config.incremental:
+            gp = stream_insert(gp, x_new, jnp.asarray(y_new, Y.dtype),
+                               iters=bo_config.insert_iters or None)
+        else:
+            gp = fit(gp_config, X, Y, omega, sigma)
+        if engine is not None:
+            engine.set_posterior(gp)
         hist["x"].append(x_new)
         hist["y"].append(float(y_new))
         hist["best"].append(float(jnp.max(Y)))
+        hist["omega"].append(omega)
+        hist["sigma"].append(float(sigma))
         if verbose and (t + 1) % 10 == 0:
             print(f"  BO iter {t+1}/{budget} best={hist['best'][-1]:.4f}")
     return gp, X, Y, hist

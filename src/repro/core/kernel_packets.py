@@ -27,6 +27,8 @@ from .banded import Banded, mask_band
 
 __all__ = [
     "kp_coefficients",
+    "kp_coefficient_rows",
+    "gram_band_rows",
     "kp_factors",
     "gkp_factors",
     "phi_at",
@@ -35,13 +37,94 @@ __all__ = [
 ]
 
 
-def _window_indices(n: int, q: int):
-    """Window offsets t in [-(q+1), q+1] and validity for each row i."""
-    i = jnp.arange(n)[:, None]
+def _kp_row_inputs(n: int, q: int, rows: jax.Array):
+    """Per-row window gather indices + Algorithm-2 category for ``rows``.
+
+    Returns (window indices (r, 2q+3), validity, primary sign, aux sign,
+    number of valid auxiliary equations) — everything ``_kp_build_row`` needs,
+    for an arbitrary subset of row indices (streaming updates rebuild only the
+    O(q) window around an inserted point).
+    """
     t = jnp.arange(-(q + 1), q + 2)[None, :]
-    j = i + t
+    j = rows[:, None] + t
     valid = (j >= 0) & (j < n)
-    return jnp.clip(j, 0, n - 1), valid
+    j_idx = jnp.clip(j, 0, n - 1)
+    # row category: number of *valid* auxiliary equations and signs
+    # left rows (i <= q): primary sign +1, aux sign -1, n_aux = i
+    # central: both signs, all q+1 "aux" rows are the delta=-1 primary set
+    # right rows (i >= n-q-1): primary sign -1, aux sign +1, n_aux = n-1-i
+    is_left = rows <= q
+    is_right = rows >= n - q - 1
+    # For ties in tiny-n cases a row can be both; treat left first (matches Alg 2).
+    primary_sign = jnp.where(is_left, 1.0, jnp.where(is_right, -1.0, 1.0))
+    aux_sign = -primary_sign
+    n_aux = jnp.where(is_left, rows, jnp.where(is_right, n - 1 - rows, q + 1))
+    n_aux = jnp.minimum(n_aux, q + 1)
+    return j_idx, valid, primary_sign, aux_sign, n_aux
+
+
+def _kp_build_row(q: int, omega, xrow, vrow, psign, asign, naux):
+    """One KP coefficient row from its window points + Algorithm-2 category."""
+    P = 2 * q + 3  # window size (central rows)
+    # center & scale for conditioning (shift/scale invariance of Eq. (9))
+    c = jnp.sum(jnp.where(vrow, xrow, 0.0)) / jnp.maximum(jnp.sum(vrow), 1)
+    xt = jnp.where(vrow, xrow - c, 0.0)
+    s = jnp.maximum(jnp.max(jnp.abs(xt)), 1e-30)
+    xh = xt / s
+    # column scaling to bound exp terms: factor exp(-omega |xt|)
+    col_log = -omega * jnp.abs(xt)
+    ls = jnp.arange(q + 1)[:, None]  # (q+1, 1)
+    # primary block rows l=0..q, sign psign
+    prim = (xh[None, :] ** ls) * jnp.exp(psign * omega * xt[None, :] + col_log)
+    # aux block rows r=0..q, sign asign (mask to first naux rows)
+    aux = (xh[None, :] ** ls) * jnp.exp(asign * omega * xt[None, :] + col_log)
+    aux_valid = jnp.arange(q + 1)[:, None] < naux
+    aux = jnp.where(aux_valid, aux, 0.0)
+    E = jnp.concatenate([prim, aux], axis=0)  # (2q+2, P)
+    # invalid columns: pin a_j = 0 by pairing each masked aux row with a
+    # unit row selecting one invalid column.
+    inv_cols = ~vrow  # (P,)
+    # rank of invalid columns among themselves
+    inv_rank = jnp.cumsum(inv_cols) - 1  # index among invalid
+    pin_rows = jnp.zeros((q + 1, P), E.dtype)
+    # aux row (q+1+r) is masked for r >= naux; use masked slot index r-naux... we
+    # instead build: for each invalid column p, add unit row at slot inv_rank[p].
+    pin_rows = pin_rows.at[jnp.clip(inv_rank, 0, q), jnp.arange(P)].add(
+        jnp.where(inv_cols, 1.0, 0.0)
+    )
+    aux_slots = jnp.arange(q + 1)[:, None] >= naux  # masked aux slots
+    # place pin rows into masked aux slots: slot r (>= naux) takes pin row (r - naux)
+    shift = jnp.arange(q + 1) - naux
+    pin_for_slot = jnp.where(
+        (shift >= 0)[:, None] & aux_slots,
+        pin_rows[jnp.clip(shift, 0, q)],
+        0.0,
+    )
+    E = E.at[q + 1 :].add(pin_for_slot)
+    # null space via SVD (smallest right singular vector)
+    _, _, vt = jnp.linalg.svd(E, full_matrices=True)
+    a_tilde = vt[-1]
+    # undo column scaling
+    a = a_tilde * jnp.exp(col_log)
+    a = jnp.where(vrow, a, 0.0)
+    a = a / jnp.maximum(jnp.linalg.norm(a), 1e-30)
+    sign = jnp.sign(a[q + 1]) + (a[q + 1] == 0)
+    return a * sign
+
+
+@partial(jax.jit, static_argnums=0)
+def kp_coefficient_rows(q: int, omega, xs: jax.Array, rows: jax.Array) -> jax.Array:
+    """KP coefficient rows (len(rows), 2q+3) for a subset of row indices.
+
+    Each row is computed exactly as ``kp_coefficients`` would for the full
+    matrix — streaming inserts use this to rebuild only the O(q) window of
+    rows whose point windows (or boundary category) changed.
+    """
+    n = xs.shape[0]
+    j_idx, valid, psign, asign, naux = _kp_row_inputs(n, q, rows)
+    xw = xs[j_idx]
+    return jax.vmap(partial(_kp_build_row, q, omega))(xw, valid, psign, asign,
+                                                      naux)
 
 
 @partial(jax.jit, static_argnums=0)
@@ -54,93 +137,39 @@ def kp_coefficients(q: int, omega, xs: jax.Array) -> Banded:
     the window-center coefficient fixed positive.
     """
     n = xs.shape[0]
-    P = 2 * q + 3  # window size (central rows)
-    E_rows = 2 * q + 2  # equations per window = P - 1
-    j_idx, valid = _window_indices(n, q)  # (n, P)
-    xw = xs[j_idx]  # (n, P) window points (clipped)
-
-    i_arr = jnp.arange(n)
-    # row category: number of *valid* auxiliary equations and signs
-    # left rows (i <= q): primary sign +1, aux sign -1, n_aux = i
-    # central: both signs, all q+1 "aux" rows are the delta=-1 primary set
-    # right rows (i >= n-q-1): primary sign -1, aux sign +1, n_aux = n-1-i
-    is_left = i_arr <= q
-    is_right = i_arr >= n - q - 1
-    # For ties in tiny-n cases a row can be both; treat left first (matches Alg 2).
-    primary_sign = jnp.where(is_left, 1.0, jnp.where(is_right, -1.0, 1.0))
-    aux_sign = -primary_sign
-    n_aux = jnp.where(is_left, i_arr, jnp.where(is_right, n - 1 - i_arr, q + 1))
-    n_aux = jnp.minimum(n_aux, q + 1)
-
-    def build_row(xrow, vrow, psign, asign, naux):
-        # center & scale for conditioning (shift/scale invariance of Eq. (9))
-        c = jnp.sum(jnp.where(vrow, xrow, 0.0)) / jnp.maximum(jnp.sum(vrow), 1)
-        xt = jnp.where(vrow, xrow - c, 0.0)
-        s = jnp.maximum(jnp.max(jnp.abs(xt)), 1e-30)
-        xh = xt / s
-        # column scaling to bound exp terms: factor exp(-omega |xt|)
-        col_log = -omega * jnp.abs(xt)
-        ls = jnp.arange(q + 1)[:, None]  # (q+1, 1)
-        # primary block rows l=0..q, sign psign
-        prim = (xh[None, :] ** ls) * jnp.exp(psign * omega * xt[None, :] + col_log)
-        # aux block rows r=0..q, sign asign (mask to first naux rows)
-        aux = (xh[None, :] ** ls) * jnp.exp(asign * omega * xt[None, :] + col_log)
-        aux_valid = jnp.arange(q + 1)[:, None] < naux
-        aux = jnp.where(aux_valid, aux, 0.0)
-        E = jnp.concatenate([prim, aux], axis=0)  # (2q+2, P)
-        # invalid columns: pin a_j = 0 by pairing each masked aux row with a
-        # unit row selecting one invalid column.
-        inv_cols = ~vrow  # (P,)
-        # rank of invalid columns among themselves
-        inv_rank = jnp.cumsum(inv_cols) - 1  # index among invalid
-        pin_rows = jnp.zeros((q + 1, P), E.dtype)
-        # aux row (q+1+r) is masked for r >= naux; use masked slot index r-naux... we
-        # instead build: for each invalid column p, add unit row at slot inv_rank[p].
-        pin_rows = pin_rows.at[jnp.clip(inv_rank, 0, q), jnp.arange(P)].add(
-            jnp.where(inv_cols, 1.0, 0.0)
-        )
-        aux_slots = jnp.arange(q + 1)[:, None] >= naux  # masked aux slots
-        # place pin rows into masked aux slots: slot r (>= naux) takes pin row (r - naux)
-        shift = jnp.arange(q + 1) - naux
-        pin_for_slot = jnp.where(
-            (shift >= 0)[:, None] & aux_slots,
-            pin_rows[jnp.clip(shift, 0, q)],
-            0.0,
-        )
-        E = E.at[q + 1 :].add(pin_for_slot)
-        # null space via SVD (smallest right singular vector)
-        _, _, vt = jnp.linalg.svd(E, full_matrices=True)
-        a_tilde = vt[-1]
-        # undo column scaling
-        a = a_tilde * jnp.exp(col_log)
-        a = jnp.where(vrow, a, 0.0)
-        a = a / jnp.maximum(jnp.linalg.norm(a), 1e-30)
-        sign = jnp.sign(a[q + 1]) + (a[q + 1] == 0)
-        return a * sign
-
-    data = jax.vmap(build_row)(xw, valid, primary_sign, aux_sign, n_aux)
+    data = kp_coefficient_rows(q, omega, xs, jnp.arange(n))
     return mask_band(Banded(data, q + 1, q + 1))
+
+
+def gram_band_rows(kfun, xs: jax.Array, a_rows: jax.Array, rows: jax.Array,
+                   loA: int, hiA: int, hw: int) -> jax.Array:
+    """Rows of the band of Phi = A @ K restricted to ``rows``.
+
+    ``a_rows`` are the matching coefficient rows of A (len(rows), loA+hiA+1);
+    K[i, j] = kfun(xs[i], xs[j]). Row i only touches xs within
+    i ± (max(loA, hiA) + hw), so a window rebuild is O(q) per row.
+    """
+    n = xs.shape[0]
+    t = jnp.arange(-loA, hiA + 1)[None, :]
+    j = rows[:, None] + t
+    vv = (j >= 0) & (j < n)
+    jj = jnp.clip(j, 0, n - 1)
+    xw = xs[jj]  # (r, wA) points of each window
+    m = jnp.arange(-hw, hw + 1)[None, :]
+    jm_raw = rows[:, None] + m
+    vm = (jm_raw >= 0) & (jm_raw < n)
+    xm = xs[jnp.clip(jm_raw, 0, n - 1)]  # (r, wPhi) evaluation points
+    # phi[i, m] = sum_t A[i,t] k(x_{i+m}, x_{i+t})
+    kv = kfun(xm[:, :, None], xw[:, None, :])  # (r, wPhi, wA)
+    kv = kv * vv[:, None, :]
+    data = jnp.einsum("nmt,nt->nm", kv, a_rows)
+    return data * vm
 
 
 def _phi_band_from_A(q: int, kfun, xs: jax.Array, A: Banded, hw: int) -> Banded:
     """Band of Phi = A @ K where K[i,j] = kfun(xs[i], xs[j]); half-bw ``hw``."""
     n = xs.shape[0]
-    j_idx, valid = _window_indices(n, A.lo - 1)  # window matches A's band
-    # A window offsets: t in [-(A.lo), A.lo]; rebuild indices for A's width
-    i = jnp.arange(n)[:, None]
-    t = jnp.arange(-A.lo, A.hi + 1)[None, :]
-    jj = jnp.clip(i + t, 0, n - 1)
-    vv = ((i + t) >= 0) & ((i + t) < n)
-    xw = xs[jj]  # (n, wA) points of each window
-    m = jnp.arange(-hw, hw + 1)[None, :]
-    jm = jnp.clip(i + m, 0, n - 1)
-    vm = ((i + m) >= 0) & ((i + m) < n)
-    xm = xs[jm]  # (n, wPhi) evaluation points
-    # phi[i, m] = sum_t A[i,t] k(x_{i+m}, x_{i+t})
-    kv = kfun(xm[:, :, None], xw[:, None, :])  # (n, wPhi, wA)
-    kv = kv * vv[:, None, :]
-    data = jnp.einsum("nmt,nt->nm", kv, A.data)
-    data = data * vm
+    data = gram_band_rows(kfun, xs, A.data, jnp.arange(n), A.lo, A.hi, hw)
     return Banded(data, hw, hw)
 
 

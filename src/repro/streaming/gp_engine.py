@@ -1,0 +1,200 @@
+"""Slot-batched GP query serving engine over a streaming posterior.
+
+Modeled on ``repro.serving.engine`` (the LM decode engine): a fixed pool of
+B request slots, one shape-stable jit'd step, and an admit/retire lifecycle.
+Each tick evaluates the batched posterior mean / variance / acquisition
+(+gradient) for every occupied slot against one shared fitted GP; multi-tick
+"ascend" requests run projected gradient ascent on the acquisition, so many
+concurrent acquisition maximizations — at different stages — share each
+batched evaluation.
+
+Consistency / versioning: the posterior carries a version counter. Mutations
+(``insert`` — the Sec. 6 incremental update — or ``set_posterior``) are
+*staged* and act as a fence: admission pauses, running slots drain, then the
+mutations apply, the version bumps once per mutation, and admission resumes.
+A query is pinned to the version current at *admit* time and is served by
+that posterior for its whole lifetime; its result carries the version. The
+jit'd step recompiles per posterior size n (shapes change on insert) but is
+reused across every tick and query at that size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.additive_gp import AdditiveGP
+from ..core.bayesopt import BOConfig, acquisition_stats, ascent_step
+from .updates import insert as stream_insert
+
+__all__ = ["GPServeEngine", "Query", "propose_via_engine"]
+
+
+@dataclasses.dataclass
+class Query:
+    """One posterior request; ``kind`` selects what retires into ``result``.
+
+    kinds "mean" / "var" / "acq" retire after a single tick with the
+    posterior mean / variance / acquisition value (+gradient) at ``x``;
+    "ascend" first runs ``steps`` acquisition-ascent ticks from ``x``.
+    ``result`` holds x, mean, var, value, grad, and the serving version.
+    """
+
+    rid: int
+    x: np.ndarray
+    kind: str = "acq"
+    steps: int = 0
+    version: int = -1
+    result: dict | None = None
+    done: bool = False
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def _engine_step(gp: AdditiveGP, X: jax.Array, beta, best_y, lo, hi, step_len,
+                 kind: str):
+    """One batched tick: stats at X plus the next ascent iterate."""
+    val, grad, mu, var = acquisition_stats(gp, X, beta, best_y, kind=kind)
+    return val, grad, mu, var, ascent_step(X, grad, lo, hi, step_len)
+
+
+class GPServeEngine:
+    """Fixed-slot batched server for posterior/acquisition queries."""
+
+    def __init__(self, gp: AdditiveGP, bounds, batch_slots: int = 8,
+                 kind: str = "ucb", beta: float = 2.0, lr: float = 0.05,
+                 insert_iters: int | None = None):
+        self.gp = gp
+        self.bounds = jnp.asarray(bounds)
+        self.B = batch_slots
+        self.kind = kind
+        self.beta = beta
+        self.lr = lr
+        self.insert_iters = insert_iters
+        self.version = 0
+        self.slots: list[Query | None] = [None] * batch_slots
+        self.pending: deque[Query] = deque()
+        self._staged: list[tuple] = []
+        self._xs = np.zeros((batch_slots, gp.D), np.asarray(gp.X).dtype)
+        # per-slot best_y, pinned at admit time like the posterior version —
+        # a mid-flight change to engine.best_y must not bend in-flight EI
+        # trajectories
+        self._besty = np.zeros(batch_slots, np.asarray(gp.Y).dtype)
+        self._next_rid = 0
+        self.best_y = float(jnp.max(gp.Y))
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, x, kind: str = "acq", steps: int = 0) -> Query:
+        """Queue a query; returns its handle (mutated in place on retire)."""
+        if kind not in ("mean", "var", "acq", "ascend"):
+            raise ValueError(f"unknown query kind {kind!r}")
+        q = Query(rid=self._next_rid, x=np.asarray(x, self._xs.dtype),
+                  kind=kind, steps=steps if kind == "ascend" else 0)
+        self._next_rid += 1
+        self.pending.append(q)
+        return q
+
+    def step(self) -> list[Query]:
+        """One engine tick; returns the queries retired this tick."""
+        if self._staged and all(s is None for s in self.slots):
+            self._apply_staged()
+        if not self._staged:  # staged mutations fence admission
+            for i in range(self.B):
+                if self.slots[i] is None and self.pending:
+                    q = self.pending.popleft()
+                    q.version = self.version
+                    self.slots[i] = q
+                    self._xs[i] = q.x
+                    self._besty[i] = self.best_y
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return []
+        lo, hi = self.bounds[:, 0], self.bounds[:, 1]
+        out = _engine_step(self.gp, jnp.asarray(self._xs), self.beta,
+                           jnp.asarray(self._besty), lo, hi,
+                           self.lr * (hi - lo), self.kind)
+        val, grad, mu, var, Xn = map(np.asarray, out)
+        finished = []
+        for i in active:
+            q = self.slots[i]
+            if q.kind == "ascend" and q.steps > 0:
+                self._xs[i] = Xn[i]
+                q.steps -= 1
+                continue
+            q.result = {"x": self._xs[i].copy(), "mean": float(mu[i]),
+                        "var": float(var[i]), "value": float(val[i]),
+                        "grad": grad[i].copy(), "version": q.version}
+            q.done = True
+            finished.append(q)
+            self.slots[i] = None
+        return finished
+
+    def run_until_done(self, max_ticks: int = 10_000) -> list[Query]:
+        done: list[Query] = []
+        for _ in range(max_ticks):
+            done += self.step()
+            if (not self.pending and not self._staged
+                    and all(s is None for s in self.slots)):
+                break
+        return done
+
+    # -- posterior mutations (versioned, fence semantics) ----------------------
+
+    def insert(self, x_new, y_new) -> None:
+        """Stage an incremental observation insert (applied at the fence)."""
+        self._staged.append(("insert", np.asarray(x_new), float(y_new)))
+
+    def set_posterior(self, gp: AdditiveGP) -> None:
+        """Stage a full posterior replacement (e.g. a hyperparameter refit)."""
+        self._staged.append(("set", gp))
+
+    def _apply_staged(self) -> None:
+        for op in self._staged:
+            if op[0] == "insert":
+                self.gp = stream_insert(self.gp, op[1], op[2],
+                                        iters=self.insert_iters)
+            else:
+                self.gp = op[1]
+            self.version += 1
+        self._staged.clear()
+        self.best_y = float(jnp.max(self.gp.Y))
+
+
+def propose_via_engine(engine: GPServeEngine, key: jax.Array, cfg: BOConfig,
+                       best_y=None) -> jax.Array:
+    """Multi-start acquisition ascent routed through the engine slots.
+
+    Same start sampling and update rule as ``propose_next``, served
+    tick-by-tick so concurrent queries (and staged inserts) interleave.
+    The acquisition settings live on the engine (its jit'd step is
+    specialized on them), so ``cfg`` must agree with them.
+    """
+    if (cfg.kind, cfg.beta, cfg.lr) != (engine.kind, engine.beta, engine.lr):
+        raise ValueError(
+            f"BOConfig(kind={cfg.kind!r}, beta={cfg.beta}, lr={cfg.lr}) does "
+            f"not match the engine's (kind={engine.kind!r}, "
+            f"beta={engine.beta}, lr={engine.lr}); construct the engine from "
+            "the same config")
+    bounds = engine.bounds
+    lo, hi = bounds[:, 0], bounds[:, 1]
+    starts = jax.random.uniform(key, (cfg.n_starts, engine.gp.D),
+                                dtype=bounds.dtype)
+    X0 = lo + starts * (hi - lo)
+    if best_y is not None:
+        engine.best_y = float(best_y)
+    qs = [engine.submit(np.asarray(x), kind="ascend", steps=cfg.ascent_steps)
+          for x in X0]
+    # each request needs steps+1 ticks; admission waves add B-sized rounds,
+    # and queries already queued ahead of ours occupy slots first
+    waves = -(-len(engine.pending) // engine.B) + 1  # +1: occupied slots
+    engine.run_until_done(max_ticks=waves * (cfg.ascent_steps + 2) + 8)
+    if not all(q.done for q in qs):
+        raise RuntimeError("engine tick budget exhausted before all ascent "
+                           "requests retired (staged mutations fencing "
+                           "admission, or external queries hogging slots?)")
+    best = max(qs, key=lambda q: q.result["value"])
+    return jnp.asarray(best.result["x"], bounds.dtype)
