@@ -65,6 +65,57 @@ def run_ops(ns=(1000, 4000), q=1, reps=3, out_rows=None):
     return rows
 
 
+def run_solve_algs(ns=(1024, 4096), w=2, B=8, reps=3, out_rows=None):
+    """Solve-kernel ablation: jax scan vs LU kernel vs block-CR kernel.
+
+    Off-TPU both kernels run in interpret mode, so the rows measure the
+    *structural* cost: the LU kernel executes 2n sequential row recurrences
+    per solve while block CR executes 2*ceil(log2(n/w))+1 vectorized levels.
+    The op-count columns record that gap — ``seq_steps`` (critical-path
+    length) and ``rows_per_seq_step`` (rows retired per sequential step, the
+    vector-unit throughput an in-order interpreter exposes). Wall time rides
+    along for transparency, but on CPU it tracks total flops (CR does
+    O(w^3 log) redundant masked work), not the parallel depth a TPU executes
+    per level; on TPU the same harness gives the real wall-clock ablation.
+    """
+    rows = out_rows if out_rows is not None else []
+    for n in ns:
+        rng = np.random.default_rng(n)
+        xs = jnp.asarray(np.sort(rng.random(n) * 10))
+        A, Phi = kp_factors(1, 1.3, xs)
+        S = bd.add(bd.scale(A, 0.09), Phi)  # lo = hi = 2 KP system
+        rhs = jnp.asarray(rng.standard_normal((n, B)))
+        nb = -(-n // w) if w else n
+        variants = {
+            "scan": dict(backend="jax", alg=None,
+                         seq_steps=2 * n),        # row-sequential fwd + bwd
+            "lu": dict(backend="pallas", alg="lu",
+                       seq_steps=2 * n),          # same recurrence, in-kernel
+            "cr": dict(backend="pallas", alg="cr",
+                       seq_steps=2 * max((nb - 1).bit_length(), 0) + 1),
+        }
+        for name, v in variants.items():
+            t_solve = _time(lambda: bd.solve(S, rhs, pivot=False,
+                                             backend=v["backend"],
+                                             alg=v["alg"]), reps)
+            t_ld = _time(lambda: bd.logdet(S, pivot=False,
+                                           backend=v["backend"],
+                                           alg=v["alg"]), reps)
+            for op, t in (("solve", t_solve), ("logdet", t_ld)):
+                rows.append({
+                    "bench": "block_cr_ablation", "alg": name, "op": op,
+                    "n": n, "w": w, "rhs_B": B, "time_s": t,
+                    "seq_steps": v["seq_steps"],
+                    "rows_per_seq_step": n / v["seq_steps"],
+                    "throughput_rows_s": n / t,
+                })
+                print(f"block_cr_ablation,{name},{op},n={n},"
+                      f"us_per_call={t*1e6:.0f},seq_steps={v['seq_steps']},"
+                      f"rows_per_seq_step={n / v['seq_steps']:.1f}",
+                      flush=True)
+    return rows
+
+
 def run_gp(ns=(500, 1000), D=5, q=0, reps=3, out_rows=None):
     """End-to-end ablation: posterior mean/var/MLL through each backend."""
     rows = out_rows if out_rows is not None else []
@@ -101,6 +152,8 @@ def run(full=False, out_rows=None):
     op_ns = (1000, 10_000, 100_000) if full else (1000, 2000)
     gp_ns = (1000, 4000, 16_000) if full else (300,)
     run_ops(ns=op_ns, out_rows=rows)
+    run_solve_algs(ns=(1024, 4096, 16_384) if full else (1024, 4096),
+                   out_rows=rows)
     run_gp(ns=gp_ns, out_rows=rows)
     return rows
 

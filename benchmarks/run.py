@@ -68,6 +68,13 @@ def main() -> None:
         json.dump(streaming_rows, f, indent=1)
     print(f"wrote {len(streaming_rows)} rows to {stream_out}", flush=True)
 
+    # perf artifact for the block-CR solve kernel (CR vs LU vs scan rows)
+    cr_rows = [r for r in rows if r.get("bench") == "block_cr_ablation"]
+    cr_out = os.path.join(os.path.dirname(args.out), "BENCH_block_cr.json")
+    with open(cr_out, "w") as f:
+        json.dump(cr_rows, f, indent=1)
+    print(f"wrote {len(cr_rows)} rows to {cr_out}", flush=True)
+
 
 if __name__ == "__main__":
     main()

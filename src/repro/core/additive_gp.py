@@ -44,7 +44,7 @@ TIE_EPS = 1e-9
     data_fields=(),
     meta_fields=("q", "solver", "solver_iters", "pivot", "logdet_order",
                  "logdet_probes", "trace_probes", "power_iters", "logdet_method",
-                 "backend"),
+                 "backend", "solve_alg"),
 )
 @dataclasses.dataclass(frozen=True)
 class GPConfig:
@@ -55,6 +55,9 @@ class GPConfig:
     # banded-algebra backend: "auto" (pallas on TPU, jax elsewhere) | "jax" |
     # "pallas"; threaded through every matvec/solve/logdet via kernels.ops
     backend: str = "auto"
+    # pallas solve/logdet kernel: "auto" (block CR when lo == hi, else LU) |
+    # "lu" | "cr"; also settable process-wide via REPRO_SOLVE_ALG
+    solve_alg: str = "auto"
     logdet_order: int = 30
     logdet_probes: int = 16
     trace_probes: int = 16
@@ -67,7 +70,8 @@ class GPConfig:
 
     def solve_cfg(self) -> SolveConfig:
         return SolveConfig(method=self.solver, iters=self.solver_iters,
-                           pivot=self.pivot, backend=self.backend)
+                           pivot=self.pivot, backend=self.backend,
+                           alg=self.solve_alg)
 
 
 @partial(
@@ -114,11 +118,18 @@ def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma) -
     "jax"/"pallas" via the process default / REPRO_BACKEND / platform) and
     baked into the returned GP, so the jit cache keys on the *resolved*
     backend and later ``set_backend`` calls can't silently hit a stale trace.
+    The solve algorithm gets the same treatment: a config-level "auto"
+    captures the process default (REPRO_SOLVE_ALG / set_solve_alg) at fit
+    time ("auto" then means the static bandwidth-based choice: CR when
+    lo == hi, LU otherwise).
     """
     from ..kernels import ops as _kops
 
-    config = dataclasses.replace(config,
-                                 backend=_kops.resolve_backend(config.backend))
+    config = dataclasses.replace(
+        config,
+        backend=_kops.resolve_backend(config.backend),
+        solve_alg=(config.solve_alg if config.solve_alg != "auto"
+                   else _kops.get_solve_alg()))
     return _fit_impl(config, X, Y, omega, sigma)
 
 
@@ -137,7 +148,8 @@ def posterior_caches(config: GPConfig, ops: DimOps, Y: jax.Array,
     SY = jnp.broadcast_to(Y[None, :], (D, n))
     u_sy = solve_mhat(ops, SY, cfg, x0=x0)  # Mhat^{-1} S Y, original order
     bY = solve(transpose(ops.Phi), ops.to_sorted(u_sy) / ops.sigma2,
-               pivot=config.pivot, backend=config.backend)
+               pivot=config.pivot, backend=config.backend,
+               alg=config.solve_alg)
     Gband = variance_band(ops.A, ops.Phi, backend=config.backend)
     return u_sy, bY, Gband
 
@@ -221,7 +233,8 @@ def posterior_var(gp: AdditiveGP, Xq: jax.Array) -> jax.Array:
         jnp.broadcast_to(m_idx, rows.shape),
     ].add(vals)
     w_sorted = solve(gp.ops.Phi, phi_dense, pivot=gp.config.pivot,
-                     backend=gp.config.backend)  # (D, n, m)
+                     backend=gp.config.backend,
+                     alg=gp.config.solve_alg)  # (D, n, m)
     w = gp.ops.from_sorted(w_sorted)
     z = solve_mhat(gp.ops, w, gp.config.solve_cfg())
     term3 = jnp.sum(w * z, axis=(0, 1))
@@ -248,7 +261,8 @@ def _logdet_mhat(gp: AdditiveGP, key: jax.Array) -> jax.Array:
     c = gp.config
     n, D = gp.n, gp.D
     if c.logdet_method == "taylor":
-        mv = lambda u: mhat_matvec(gp.ops, u, pivot=c.pivot, backend=c.backend)
+        mv = lambda u: mhat_matvec(gp.ops, u, pivot=c.pivot, backend=c.backend,
+                                   alg=c.solve_alg)
         return logdet_taylor(
             mv, D * n, (D, n), key, order=c.logdet_order, probes=c.logdet_probes,
             power_iters=c.power_iters, dtype=gp.Y.dtype,
@@ -256,11 +270,13 @@ def _logdet_mhat(gp: AdditiveGP, key: jax.Array) -> jax.Array:
     # taylor_pc: C = Khat^{-1} + sigma^{-2} I (block diag). log|C| is exact:
     # log|K_d^{-1} + s^{-2} I| = log|A_d + s^{-2} Phi_d| - log|Phi_d|.
     APhi = add(gp.ops.A, scale(gp.ops.Phi, 1.0 / gp.sigma**2))
-    ld_c = jnp.sum(logdet(APhi, pivot=c.pivot, backend=c.backend)) - jnp.sum(
-        logdet(gp.ops.Phi, pivot=c.pivot, backend=c.backend))
+    ld_c = jnp.sum(logdet(APhi, pivot=c.pivot, backend=c.backend,
+                          alg=c.solve_alg)) - jnp.sum(
+        logdet(gp.ops.Phi, pivot=c.pivot, backend=c.backend, alg=c.solve_alg))
     nv = lambda u: gp.ops.block_solve(
-        mhat_matvec(gp.ops, u, pivot=c.pivot, backend=c.backend),
-        pivot=c.pivot, backend=c.backend)
+        mhat_matvec(gp.ops, u, pivot=c.pivot, backend=c.backend,
+                    alg=c.solve_alg),
+        pivot=c.pivot, backend=c.backend, alg=c.solve_alg)
     ld_n = logdet_taylor(
         nv, D * n, (D, n), key, order=c.logdet_order, probes=c.logdet_probes,
         power_iters=c.power_iters, dtype=gp.Y.dtype,
@@ -274,9 +290,9 @@ def log_likelihood(gp: AdditiveGP, key: jax.Array) -> jax.Array:
     n = gp.n
     quad = gp.Y @ gp.Y / gp.sigma**2 - (gp.Y @ jnp.sum(gp.u_sy, axis=0)) / gp.sigma**4
     ld_mhat = _logdet_mhat(gp, key)
-    be, pv = gp.config.backend, gp.config.pivot
-    ld_k = jnp.sum(logdet(gp.ops.Phi, pivot=pv, backend=be)) - jnp.sum(
-        logdet(gp.ops.A, pivot=pv, backend=be))
+    be, pv, sa = gp.config.backend, gp.config.pivot, gp.config.solve_alg
+    ld_k = jnp.sum(logdet(gp.ops.Phi, pivot=pv, backend=be, alg=sa)) - jnp.sum(
+        logdet(gp.ops.A, pivot=pv, backend=be, alg=sa))
     return -0.5 * (
         quad + ld_mhat + ld_k + 2.0 * n * jnp.log(gp.sigma) + n * jnp.log(2.0 * jnp.pi)
     )
@@ -289,7 +305,7 @@ def _dk_apply(gp: AdditiveGP, v: jax.Array) -> jax.Array:
     vs = gp.ops.to_sorted(vb)
     be = gp.config.backend
     w = solve(gp.B, matvec(gp.Psi, vs, backend=be), pivot=gp.config.pivot,
-              backend=be)
+              backend=be, alg=gp.config.solve_alg)
     return gp.ops.from_sorted(w)
 
 

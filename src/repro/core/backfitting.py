@@ -30,7 +30,8 @@ __all__ = ["SolveConfig", "DimOps", "solve_mhat", "mhat_matvec"]
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=(),
-    meta_fields=("method", "iters", "damping", "pivot", "tol", "backend"),
+    meta_fields=("method", "iters", "damping", "pivot", "tol", "backend",
+                 "alg"),
 )
 @dataclasses.dataclass(frozen=True)
 class SolveConfig:
@@ -40,6 +41,7 @@ class SolveConfig:
     pivot: bool = False  # banded LU pivoting
     tol: float = 0.0  # 0 -> fixed iteration count (jit-friendly)
     backend: str = "auto"  # banded-algebra backend ("auto" | "jax" | "pallas")
+    alg: str = "auto"  # pallas solve kernel ("auto" | "lu" | "cr")
 
 
 @partial(
@@ -83,35 +85,40 @@ class DimOps:
         return jnp.take_along_axis(u, jnp.broadcast_to(idx, u.shape), axis=1)
 
     def khat_inv_mv(self, u: jax.Array, pivot: bool = False,
-                    backend: str | None = None) -> jax.Array:
+                    backend: str | None = None,
+                    alg: str | None = None) -> jax.Array:
         """Khat^{-1} u = P^T Phi^{-1} A P u (per dim), u: (D, n, B)."""
         us = self.to_sorted(u)
         w = solve(self.Phi, matvec(self.A, us, backend=backend), pivot=pivot,
-                  backend=backend)
+                  backend=backend, alg=alg)
         return self.from_sorted(w)
 
     def khat_mv(self, u: jax.Array, pivot: bool = False,
-                backend: str | None = None) -> jax.Array:
+                backend: str | None = None,
+                alg: str | None = None) -> jax.Array:
         """Khat u = P^T A^{-1} Phi P u (per dim)."""
         us = self.to_sorted(u)
         w = solve(self.A, matvec(self.Phi, us, backend=backend), pivot=pivot,
-                  backend=backend)
+                  backend=backend, alg=alg)
         return self.from_sorted(w)
 
     def block_solve(self, r: jax.Array, pivot: bool = False,
-                    backend: str | None = None) -> jax.Array:
+                    backend: str | None = None,
+                    alg: str | None = None) -> jax.Array:
         """(Khat^{-1} + sigma^{-2} I)^{-1} r = sigma^2 P^T (s^2 A + Phi)^{-1} Phi P r."""
         rs = self.to_sorted(r)
         w = self.sigma2 * solve(self.SAPhi, matvec(self.Phi, rs, backend=backend),
-                                pivot=pivot, backend=backend)
+                                pivot=pivot, backend=backend, alg=alg)
         return self.from_sorted(w)
 
 
 def mhat_matvec(ops: DimOps, u: jax.Array, pivot: bool = False,
-                backend: str | None = None) -> jax.Array:
+                backend: str | None = None,
+                alg: str | None = None) -> jax.Array:
     """Mhat u = Khat^{-1} u + sigma^{-2} S S^T u; u: (D, n, B)."""
     ssT = jnp.sum(u, axis=0, keepdims=True)
-    return ops.khat_inv_mv(u, pivot=pivot, backend=backend) + ssT / ops.sigma2
+    return ops.khat_inv_mv(u, pivot=pivot, backend=backend,
+                           alg=alg) + ssT / ops.sigma2
 
 
 def _gauss_seidel(ops: DimOps, v: jax.Array, cfg: SolveConfig,
@@ -127,7 +134,8 @@ def _gauss_seidel(ops: DimOps, v: jax.Array, cfg: SolveConfig,
         idx = ops.sort_idx[d][:, None]
         rs = jnp.take_along_axis(r_d, jnp.broadcast_to(idx, r_d.shape), axis=0)
         w = ops.sigma2 * solve(saphi, matvec(phi, rs, backend=cfg.backend),
-                               pivot=cfg.pivot, backend=cfg.backend)
+                               pivot=cfg.pivot, backend=cfg.backend,
+                               alg=cfg.alg)
         ridx = ops.rank_idx[d][:, None]
         return jnp.take_along_axis(w, jnp.broadcast_to(ridx, w.shape), axis=0)
 
@@ -156,7 +164,8 @@ def _jacobi(ops: DimOps, v: jax.Array, cfg: SolveConfig,
     def sweep(_, vt):
         total = jnp.sum(vt, axis=0, keepdims=True)
         r = v - (total - vt) / ops.sigma2
-        new = ops.block_solve(r, pivot=cfg.pivot, backend=cfg.backend)
+        new = ops.block_solve(r, pivot=cfg.pivot, backend=cfg.backend,
+                              alg=cfg.alg)
         return (1.0 - alpha) * vt + alpha * new
 
     return jax.lax.fori_loop(0, cfg.iters, sweep, vt)
@@ -167,10 +176,12 @@ def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
     """Preconditioned CG on the SPD system Mhat x = v, M_pre = block solve."""
 
     def amv(u):
-        return mhat_matvec(ops, u, pivot=cfg.pivot, backend=cfg.backend)
+        return mhat_matvec(ops, u, pivot=cfg.pivot, backend=cfg.backend,
+                           alg=cfg.alg)
 
     def pre(u):
-        return ops.block_solve(u, pivot=cfg.pivot, backend=cfg.backend)
+        return ops.block_solve(u, pivot=cfg.pivot, backend=cfg.backend,
+                               alg=cfg.alg)
 
     x = jnp.zeros_like(v) if x0 is None else x0
     r = v - amv(x)

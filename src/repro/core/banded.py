@@ -385,16 +385,18 @@ def solve_nopivot(b: Banded, rhs: jax.Array) -> jax.Array:
 
 
 def solve(b: Banded, rhs: jax.Array, pivot: bool = True,
-          *, backend: str | None = None) -> jax.Array:
+          *, backend: str | None = None, alg: str | None = None) -> jax.Array:
     """Solve M x = rhs. Default uses partial pivoting (robust).
 
-    Dispatches through ``repro.kernels.ops``; pivot=True always takes the
-    jax scan path (no pivoted Pallas kernel).
+    Dispatches through ``repro.kernels.ops``. On the pallas backend ``alg``
+    selects the kernel ("cr" block cyclic reduction — the lo == hi default —
+    vs the sequential "lu"); pivot=True runs the pivoted block-CR kernel when
+    "cr" applies and falls back to the jax scan otherwise.
     """
     from ..kernels import ops as _ops
 
     return _ops.banded_solve(b.data, rhs, b.lo, b.hi, pivot=pivot,
-                             backend=backend)
+                             backend=backend, alg=alg)
 
 
 def _solve_scan(b: Banded, rhs: jax.Array, pivot: bool = True) -> jax.Array:
@@ -421,18 +423,18 @@ def _tridiag_solve(b: Banded, rhs: jax.Array) -> jax.Array:
 
 
 def logdet(b: Banded, pivot: bool = True,
-           *, backend: str | None = None) -> jax.Array:
+           *, backend: str | None = None, alg: str | None = None) -> jax.Array:
     """log |det M|; dispatches through ``repro.kernels.ops``.
 
-    Defaults to pivot=True like ``solve`` — the robust path on every backend
-    (the scan implementation is always pivoted; the flag only constrains
-    dispatch). Callers on stably-factorizable bands (the GP core's KP
-    systems) pass pivot=False to unlock the no-pivot Pallas kernel.
+    Defaults to pivot=True like ``solve`` — the robust path on every backend.
+    With the block-CR kernel ("cr", the lo == hi default) pivot=True stays on
+    pallas (block partial pivoting); only the forced-"lu"/asymmetric pivoted
+    case constrains dispatch to the jax scan.
     """
     from ..kernels import ops as _ops
 
     return _ops.banded_logdet(b.data, b.lo, b.hi, pivot=pivot,
-                              backend=backend)
+                              backend=backend, alg=alg)
 
 
 def _logdet_scan(b: Banded) -> jax.Array:

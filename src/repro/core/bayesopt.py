@@ -100,7 +100,8 @@ def _acq_core(gp: AdditiveGP, Xq: jax.Array, beta, best_y, kind: str):
     m_idx = jnp.broadcast_to(jnp.arange(m)[None, :, None], rows.shape)
     phi_dense = phi_dense.at[d_idx, rows, m_idx].add(vals)
     ws = solve(gp.ops.Phi, phi_dense, pivot=gp.config.pivot,
-               backend=gp.config.backend)                       # sorted
+               backend=gp.config.backend,
+               alg=gp.config.solve_alg)                         # sorted
     w = gp.ops.from_sorted(ws)
     z = solve_mhat(gp.ops, w, gp.config.solve_cfg())
     term3 = jnp.sum(w * z, axis=(0, 1))
@@ -108,7 +109,8 @@ def _acq_core(gp: AdditiveGP, Xq: jax.Array, beta, best_y, kind: str):
 
     # variance gradient: dvar/dx_d = -2 dphi^T (G phi) + 2 dphi^T Phi^{-T} z
     y_s = solve(transpose(gp.ops.Phi), gp.ops.to_sorted(z),
-                pivot=gp.config.pivot, backend=gp.config.backend)
+                pivot=gp.config.pivot, backend=gp.config.backend,
+                alg=gp.config.solve_alg)
     ywin = y_s[d_idx, rows, m_idx]  # (D, m, W): y_s[d, rows[d,m,w], m]
     dvar = (-2.0 * jnp.einsum("dma,dma->dm", dvals, g_phi)
             + 2.0 * jnp.einsum("dma,dma->dm", dvals, ywin)).T    # (m, D)
@@ -275,11 +277,12 @@ def build_local_cache(gp: AdditiveGP) -> LocalAcqCache:
     for d in range(D):
         rhs = jnp.zeros((D, n, n), gp.Y.dtype).at[d].set(eye)  # Phi^{-1} e_i batch
         ws = solve(gp.ops.Phi, rhs, pivot=gp.config.pivot,
-                   backend=gp.config.backend)
+                   backend=gp.config.backend, alg=gp.config.solve_alg)
         w = gp.ops.from_sorted(ws)
         z = solve_mhat(gp.ops, w, gp.config.solve_cfg())
         y = solve(transpose(gp.ops.Phi), gp.ops.to_sorted(z),
-                  pivot=gp.config.pivot, backend=gp.config.backend)
+                  pivot=gp.config.pivot, backend=gp.config.backend,
+                  alg=gp.config.solve_alg)
         cols.append(y)  # (D, n, n): row block d', cols for dim d
     M = jnp.stack(cols, axis=2)  # (D', n', D, n) -> index [d_row, i_row, d_col, i_col]
     M = M.transpose(0, 1, 2, 3)

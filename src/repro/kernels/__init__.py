@@ -2,6 +2,9 @@
 
 banded_matvec — banded y = Bx (backfitting / power-method / Hutchinson inner op)
 banded_lu     — banded LU solve (fwd/bwd substitution) + log-determinant
+block_cr      — block cyclic-reduction solve + logdet for lo = hi = w (the
+                default pallas solve path: log2-depth vectorized elimination,
+                (D,)-batch in the kernel grid, block partial-pivot mode)
 band_matmul   — band x band product in band form (Algorithm 5 input H = A Phi^T)
 tridiag_pcr   — parallel-cyclic-reduction tridiagonal solve (Matérn-1/2 path;
                 TPU replacement for the paper's sequential banded LU)
@@ -23,5 +26,10 @@ from .banded_lu import (  # noqa: F401
     banded_solve_pallas,
 )
 from .banded_matvec import banded_matvec_pallas  # noqa: F401
+from .block_cr import (  # noqa: F401
+    block_cr_logdet_pallas,
+    block_cr_pallas,
+    block_cr_solve_pallas,
+)
 from .kp_gram import kp_gram_pallas  # noqa: F401
 from .tridiag_pcr import tridiag_pcr_pallas  # noqa: F401

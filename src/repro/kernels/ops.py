@@ -23,8 +23,20 @@ Selection precedence (first wins):
 Backend choice is a trace-time static, so jitted GP entry points specialize
 per backend (``GPConfig`` is a static/meta field throughout).
 
-The pivoted banded solve has no Pallas kernel; ``pivot=True`` always takes
-the jax scan path regardless of backend (documented dispatch rule).
+The pallas solve/logdet path additionally selects between two kernel
+algorithms (``REPRO_SOLVE_ALG`` env / ``set_solve_alg`` / the per-op
+``alg=`` argument threaded from ``GPConfig.solve_alg``/``SolveConfig.alg``):
+
+  * ``"cr"`` — block cyclic reduction (``block_cr.py``): fully vectorized
+    ceil(log2(n/w)) elimination levels, batched into the kernel grid, with a
+    block partial-pivot mode. Requires ``lo == hi`` (every KP system has it).
+  * ``"lu"`` — the sequential row-recurrence LU kernel (``banded_lu.py``).
+  * ``"auto"`` (default) — ``"cr"`` whenever ``lo == hi >= 1``, else ``"lu"``
+    (diagonal bands stay on the already-loop-free LU path).
+
+``pivot=True`` routes to the pivoted block-CR kernel when the resolved
+algorithm is ``"cr"``; only the asymmetric-bandwidth (or forced-``"lu"``)
+pivoted case still falls back to the jax gbsv-style scan.
 """
 from __future__ import annotations
 
@@ -37,19 +49,25 @@ import jax.numpy as jnp
 from .band_matmul import band_matmul_pallas
 from .banded_lu import banded_logdet_pallas, banded_solve_pallas
 from .banded_matvec import banded_matvec_pallas
+from .block_cr import block_cr_logdet_pallas, block_cr_solve_pallas
 from .kp_gram import kp_gram_pallas
 from .tridiag_pcr import tridiag_pcr_pallas
 
 __all__ = [
-    "BACKENDS", "on_tpu", "get_backend", "set_backend", "use_backend",
-    "resolve_backend", "banded_matvec", "banded_solve", "banded_logdet",
-    "band_band_matmul", "tridiag_solve", "kp_gram",
+    "BACKENDS", "SOLVE_ALGS", "on_tpu", "get_backend", "set_backend",
+    "use_backend", "resolve_backend", "get_solve_alg", "set_solve_alg",
+    "use_solve_alg", "resolve_solve_alg", "banded_matvec", "banded_solve",
+    "banded_logdet", "band_band_matmul", "tridiag_solve", "kp_gram",
 ]
 
 BACKENDS = ("auto", "jax", "pallas")
 ENV_VAR = "REPRO_BACKEND"
 
+SOLVE_ALGS = ("auto", "lu", "cr")
+ENV_SOLVE_ALG = "REPRO_SOLVE_ALG"
+
 _backend = os.environ.get(ENV_VAR, "auto")
+_solve_alg = os.environ.get(ENV_SOLVE_ALG, "auto")
 
 
 def on_tpu() -> bool:
@@ -103,6 +121,66 @@ def resolve_backend(backend: str | None = None) -> str:
     return b
 
 
+def get_solve_alg() -> str:
+    """Current process-wide pallas solve algorithm (may be "auto")."""
+    return _solve_alg
+
+
+def set_solve_alg(name: str) -> None:
+    """Set the process-wide pallas solve algorithm ("auto" | "lu" | "cr")."""
+    global _solve_alg
+    if name not in SOLVE_ALGS:
+        raise ValueError(
+            f"unknown solve alg {name!r}; expected one of {SOLVE_ALGS}")
+    _solve_alg = name
+
+
+@contextlib.contextmanager
+def use_solve_alg(name: str):
+    """Temporarily override the pallas solve algorithm (trace-time scope)."""
+    prev = _solve_alg
+    set_solve_alg(name)
+    try:
+        yield
+    finally:
+        set_solve_alg(prev)
+
+
+def resolve_solve_alg(alg: str | None, lo: int, hi: int) -> str:
+    """Resolve the pallas solve/logdet kernel algorithm to "lu" | "cr".
+
+    An explicit "lu"/"cr" ``alg`` wins; "auto" (the GPConfig/SolveConfig
+    default) and None defer to the process default (set_solve_alg /
+    REPRO_SOLVE_ALG). "auto" selects block cyclic reduction whenever the
+    bandwidth is symmetric (``lo == hi`` — true for every KP system the GP
+    core builds) and the sequential LU kernel otherwise. Forcing "cr" on an
+    asymmetric band is an error (CR's block-tridiagonal view needs lo == hi).
+    """
+    explicit = alg is not None and alg != "auto"
+    a = alg if alg is not None else _solve_alg
+    if a not in SOLVE_ALGS:
+        raise ValueError(
+            f"unknown solve alg {a!r} (from {ENV_SOLVE_ALG} or "
+            f"set_solve_alg); expected one of {SOLVE_ALGS}")
+    if a == "auto":
+        a = _solve_alg
+        if a not in SOLVE_ALGS:
+            raise ValueError(
+                f"unknown solve alg {a!r} (from {ENV_SOLVE_ALG} or "
+                f"set_solve_alg); expected one of {SOLVE_ALGS}")
+    if a == "auto":
+        return "cr" if lo == hi and lo > 0 else "lu"
+    if a == "cr" and lo == hi == 0:
+        return "lu"  # diagonal: the LU kernel is already loop-free there
+    if a == "cr" and lo != hi:
+        if explicit:
+            raise ValueError(
+                f"solve alg 'cr' requires a symmetric bandwidth (lo == hi); "
+                f"got lo={lo}, hi={hi}")
+        return "lu"  # process-default "cr" means prefer-CR-where-applicable
+    return a
+
+
 def _interpret() -> bool:
     return not on_tpu()
 
@@ -154,37 +232,74 @@ def banded_matvec(band, x, lo: int, hi: int, block: int = 512,
     return out if mat_form else out[..., 0]
 
 
+def _flatten_batch(arrs, core_dims):
+    """Broadcast leading batch dims and flatten them to one G axis.
+
+    The block-CR kernel takes the batch as its grid, so the whole stack is a
+    single ``pallas_call`` (no trace-time unroll). Returns (batch, flats).
+    """
+    batch = jnp.broadcast_shapes(*[a.shape[:-d] for a, d in zip(arrs, core_dims)])
+    flats = [
+        jnp.broadcast_to(a, batch + a.shape[-d:]).reshape((-1,) + a.shape[-d:])
+        for a, d in zip(arrs, core_dims)
+    ]
+    return batch, flats
+
+
 def banded_solve(band, rhs, lo: int, hi: int, pivot: bool = False,
-                 backend: str | None = None):
+                 backend: str | None = None, alg: str | None = None):
     """Solve M x = rhs. band (..., n, w); rhs (..., n) or (..., n, k).
 
-    ``pivot=True`` always takes the jax scan path (no pivoted Pallas kernel).
+    On the pallas backend ``alg`` picks the kernel ("cr" block cyclic
+    reduction when ``lo == hi`` — the default — vs "lu" row recurrence).
+    ``pivot=True`` runs the pivoted block-CR kernel when the resolved
+    algorithm is "cr"; otherwise it falls back to the jax gbsv-style scan
+    (there is no pivoted LU kernel).
     """
     bd = _core()
     b = bd.Banded(band, lo, hi)
-    if pivot or resolve_backend(backend) == "jax":
+    if resolve_backend(backend) == "jax":
         return bd._solve_scan(b, rhs, pivot=pivot)
+    use_cr = resolve_solve_alg(alg, lo, hi) == "cr"
+    if pivot and not use_cr:
+        return bd._solve_scan(b, rhs, pivot=True)
     n = band.shape[-2]
     vec_in = rhs.shape[-1] == n and rhs.ndim == band.ndim - 1
     rb = rhs[..., None] if vec_in else rhs
-    out = _map_batched(
-        lambda d, r: banded_solve_pallas(d, r, lo, hi, interpret=_interpret()),
-        (band, rb), (2, 2),
-    )
+    if use_cr:
+        batch, (bf, rf) = _flatten_batch((band, rb), (2, 2))
+        x = block_cr_solve_pallas(bf, rf, lo, pivot=pivot,
+                                  interpret=_interpret())
+        out = x.reshape(batch + x.shape[-2:])
+    else:
+        out = _map_batched(
+            lambda d, r: banded_solve_pallas(d, r, lo, hi,
+                                             interpret=_interpret()),
+            (band, rb), (2, 2),
+        )
     return out[..., 0] if vec_in else out
 
 
 def banded_logdet(band, lo: int, hi: int, pivot: bool = False,
-                  backend: str | None = None):
+                  backend: str | None = None, alg: str | None = None):
     """log |det M|, batched over leading dims of band.
 
-    ``pivot=True`` always takes the (pivoted) jax scan path — the Pallas
-    kernel's no-pivot elimination would hit log(0) on a dead leading pivot
-    (same dispatch rule as ``banded_solve``).
+    Same algorithm selection as ``banded_solve``: block CR (with its exact
+    Schur-telescoped log-determinant, pivoted or not) when the resolved alg
+    is "cr"; the LU kernel otherwise, whose no-pivot elimination sends
+    ``pivot=True`` callers to the pivoted jax scan.
     """
     bd = _core()
-    if pivot or resolve_backend(backend) == "jax":
+    if resolve_backend(backend) == "jax":
         return bd._logdet_scan(bd.Banded(band, lo, hi))
+    use_cr = resolve_solve_alg(alg, lo, hi) == "cr"
+    if pivot and not use_cr:
+        return bd._logdet_scan(bd.Banded(band, lo, hi))
+    if use_cr:
+        batch, (bf,) = _flatten_batch((band,), (2,))
+        ld = block_cr_logdet_pallas(bf, lo, pivot=pivot,
+                                    interpret=_interpret())
+        return ld.reshape(batch)
     return _map_batched(
         lambda d: banded_logdet_pallas(d, lo, hi, interpret=_interpret()),
         (band,), (2,),

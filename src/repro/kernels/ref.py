@@ -37,6 +37,53 @@ def band_matmul_ref(a_band: jax.Array, b_band: jax.Array,
     return from_dense(dense, a_lo + b_lo, a_hi + b_hi).data
 
 
+def band_to_blocks_ref(band: jax.Array, w: int):
+    """Block-tridiagonal triples (A, B, C), each (nb, w, w), from a band.
+
+    Conversion oracle for ``block_cr``'s in-kernel view: goes through the
+    *dense* matrix (padded with decoupled identity rows to a multiple of w)
+    and slices blocks out of it, so it shares no gather arithmetic with the
+    kernel. A[0] and C[-1] are zero.
+    """
+    n = band.shape[0]
+    nb = max(1, -(-n // w))
+    npad = nb * w
+    dense = jnp.eye(npad, dtype=band.dtype)
+    dense = dense.at[:n, :n].set(to_dense(Banded(band, w, w)))
+    blocks = dense.reshape(nb, w, nb, w)
+    i = jnp.arange(nb)
+    B = blocks[i, :, i, :]
+    A = jnp.zeros_like(B).at[1:].set(blocks[i[1:], :, i[1:] - 1, :])
+    C = jnp.zeros_like(B).at[:-1].set(blocks[i[:-1], :, i[:-1] + 1, :])
+    return A, B, C
+
+
+def _blocks_to_dense(A, B, C):
+    """Reassemble block-tridiagonal triples (nb, w, w) into a dense matrix."""
+    nb, w = B.shape[0], B.shape[1]
+    dense = jnp.zeros((nb, w, nb, w), B.dtype)
+    i = jnp.arange(nb)
+    dense = dense.at[i, :, i, :].set(B)
+    dense = dense.at[i[1:], :, i[1:] - 1, :].set(A[1:])
+    dense = dense.at[i[:-1], :, i[:-1] + 1, :].set(C[:-1])
+    return dense.reshape(nb * w, nb * w)
+
+
+def block_cr_solve_ref(band: jax.Array, rhs: jax.Array, w: int):
+    """Dense solve oracle reassembled from the block-tridiagonal view."""
+    n = band.shape[0]
+    dense = _blocks_to_dense(*band_to_blocks_ref(band, w))
+    npad = dense.shape[0]
+    rhs_p = jnp.zeros((npad,) + rhs.shape[1:], rhs.dtype).at[:n].set(rhs)
+    return jnp.linalg.solve(dense, rhs_p)[:n]
+
+
+def block_cr_logdet_ref(band: jax.Array, w: int):
+    """log |det M| via dense slogdet of the reassembled block system."""
+    return jnp.linalg.slogdet(
+        _blocks_to_dense(*band_to_blocks_ref(band, w)))[1]
+
+
 def tridiag_ref(dl, d, du, rhs):
     from jax.lax.linalg import tridiagonal_solve
 

@@ -10,7 +10,10 @@ observation without the O(n log n) refit:
     updated only in the O(q) window of rows whose point windows — or
     Algorithm-2 boundary category — contain the insertion point; every other
     row is a shifted copy of the pre-insert band (Thm 3 locality);
-  * the posterior caches are rebuilt with a *warm-started* backfitting solve:
+  * the posterior caches are rebuilt with a *warm-started* backfitting solve
+    (on the pallas backend this runs the block cyclic-reduction kernel —
+    ``GPConfig.solve_alg`` — so the insert hot path is log2-depth, not
+    row-sequential):
     the pre-insert ``Mhat^{-1} S Y`` spliced at the new point is an
     O(sigma^2)-accurate initial iterate, so a handful of PCG iterations
     reconverge it (the Kernel Multigrid warm-start argument).
@@ -196,11 +199,12 @@ def refresh_local_cache(gp: AdditiveGP, cache: LocalAcqCache, *,
     rhs = jnp.zeros((D, n, K), M.dtype)
     rhs = rhs.at[jnp.repeat(jnp.arange(D), W), c_idx.reshape(-1),
                  jnp.arange(K)].set(1.0)
-    pv, be = gp.config.pivot, gp.config.backend
-    ws = solve(gp.ops.Phi, rhs, pivot=pv, backend=be)
+    pv, be, sa = gp.config.pivot, gp.config.backend, gp.config.solve_alg
+    ws = solve(gp.ops.Phi, rhs, pivot=pv, backend=be, alg=sa)
     w = gp.ops.from_sorted(ws)
     z = solve_mhat(gp.ops, w, gp.config.solve_cfg())
-    y = solve(transpose(gp.ops.Phi), gp.ops.to_sorted(z), pivot=pv, backend=be)
+    y = solve(transpose(gp.ops.Phi), gp.ops.to_sorted(z), pivot=pv, backend=be,
+              alg=sa)
     cols = y.reshape(D, n, D, W)  # cols[d, i, e, k] = M_new[d, i, e, c_idx[e, k]]
     M1 = M1.at[d_i, jnp.arange(n)[None, :, None, None], e_i,
                c_idx[None, None, :, :]].set(cols)

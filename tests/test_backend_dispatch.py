@@ -202,8 +202,14 @@ def test_kp_gram_parity(q):
                                rtol=2e-4, atol=2e-4)
 
 
-def test_pivot_always_routes_to_scan():
-    """pivot=True must produce the pivoted-scan result on every backend."""
+def test_pivot_routes_to_pallas_block_cr(monkeypatch):
+    """pivot=True on a symmetric band now runs ON the pallas backend (the
+    pivoted block-CR kernel) — the old always-fall-back-to-scan rule is gone.
+
+    The jax scans are monkeypatched to raise, so any silent fallback fails
+    loudly; correctness is pinned against the dense ref oracle on a band with
+    a dead diagonal entry (where no-pivot elimination would blow up).
+    """
     rng = np.random.default_rng(5)
     n, lo, hi = 30, 2, 2
     band = _rand_band(rng, n, lo, hi, jnp.float64, boost=0.0)
@@ -211,14 +217,29 @@ def test_pivot_always_routes_to_scan():
     rhs = jnp.asarray(rng.standard_normal((n, 2)))
     want = ref.banded_solve_ref(band, rhs, lo, hi)
     want_ld = ref.banded_logdet_ref(band, lo, hi)
-    for backend in ("pallas",):  # jax/auto trivially route to the same scan
-        got = ops.banded_solve(band, rhs, lo, hi, pivot=True, backend=backend)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                                   rtol=1e-8, atol=1e-8)
-        # logdet has the same escape hatch: no-pivot LU would hit log(0) here
-        ld = ops.banded_logdet(band, lo, hi, pivot=True, backend=backend)
-        assert np.isfinite(float(ld))
-        np.testing.assert_allclose(float(ld), float(want_ld), rtol=1e-8)
+
+    def boom(*a, **k):
+        raise AssertionError("pivot=True fell back to the jax scan")
+
+    monkeypatch.setattr(bd, "_solve_scan", boom)
+    monkeypatch.setattr(bd, "_logdet_scan", boom)
+    got = ops.banded_solve(band, rhs, lo, hi, pivot=True, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-8, atol=1e-8)
+    ld = ops.banded_logdet(band, lo, hi, pivot=True, backend="pallas")
+    assert np.isfinite(float(ld))
+    np.testing.assert_allclose(float(ld), float(want_ld), rtol=1e-8)
+    # asymmetric bandwidth has no CR view: pivot=True still needs the scan
+    with pytest.raises(AssertionError, match="fell back"):
+        ops.banded_solve(band[:, :4], rhs, 2, 1, pivot=True,
+                         backend="pallas")
+    monkeypatch.undo()
+    got_asym = ops.banded_solve(band[:, :4], rhs, 2, 1, pivot=True,
+                                backend="pallas")
+    np.testing.assert_allclose(
+        np.asarray(got_asym),
+        np.asarray(ref.banded_solve_ref(band[:, :4], rhs, 2, 1)),
+        rtol=1e-8, atol=1e-8)
 
 
 def test_backend_selection_rules():
