@@ -25,7 +25,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import backend_ablation, fig5_prediction, fig6_bayesopt, \
-        streaming_updates, table1_complexity
+        fused_sweep, streaming_updates, table1_complexity
 
     rows: list[dict] = []
     print("== Fig 5: prediction RMSE/time vs n ==", flush=True)
@@ -51,6 +51,13 @@ def main() -> None:
     print("== Backend ablation: jax scan vs Pallas kernels ==", flush=True)
     backend_ablation.run(full=args.full, out_rows=rows)
 
+    print("== Fused backfitting sweep: 1 dispatch/iteration vs 4 ==",
+          flush=True)
+    fused_rows: list[dict] = []
+    fused_sweep.run(ns=(1000, 4096, 16_384) if args.full else (1000, 4096),
+                    out_rows=fused_rows)
+    rows += fused_rows
+
     print("== Streaming: incremental insert vs refit ==", flush=True)
     streaming_rows: list[dict] = []
     streaming_updates.run(
@@ -74,6 +81,13 @@ def main() -> None:
     with open(cr_out, "w") as f:
         json.dump(cr_rows, f, indent=1)
     print(f"wrote {len(cr_rows)} rows to {cr_out}", flush=True)
+
+    # perf artifact for the fused backfitting-sweep kernel (fused vs unfused)
+    fused_out = os.path.join(os.path.dirname(args.out),
+                             "BENCH_fused_sweep.json")
+    with open(fused_out, "w") as f:
+        json.dump(fused_rows, f, indent=1)
+    print(f"wrote {len(fused_rows)} rows to {fused_out}", flush=True)
 
 
 if __name__ == "__main__":

@@ -16,7 +16,13 @@ from .additive_gp import (  # noqa: F401
     posterior_mean_grad,
     posterior_var,
 )
-from .backfitting import DimOps, SolveConfig, mhat_matvec, solve_mhat  # noqa: F401
+from .backfitting import (  # noqa: F401
+    DimOps,
+    SolveConfig,
+    SolveInfo,
+    mhat_matvec,
+    solve_mhat,
+)
 from .band_inverse import inverse_band, variance_band  # noqa: F401
 from .banded import Banded  # noqa: F401
 from .kernel_packets import gkp_factors, kp_factors, phi_at, phi_grad_at  # noqa: F401

@@ -44,7 +44,7 @@ TIE_EPS = 1e-9
     data_fields=(),
     meta_fields=("q", "solver", "solver_iters", "pivot", "logdet_order",
                  "logdet_probes", "trace_probes", "power_iters", "logdet_method",
-                 "backend", "solve_alg"),
+                 "backend", "solve_alg", "fused"),
 )
 @dataclasses.dataclass(frozen=True)
 class GPConfig:
@@ -58,6 +58,10 @@ class GPConfig:
     # pallas solve/logdet kernel: "auto" (block CR when lo == hi, else LU) |
     # "lu" | "cr"; also settable process-wide via REPRO_SOLVE_ALG
     solve_alg: str = "auto"
+    # fused backfitting-sweep kernel: "auto" (fuse on pallas when the state
+    # fits VMEM) | "on" | "off"; also settable process-wide via REPRO_FUSED.
+    # Reaches every solve_mhat — fit, MLL, gradients, streaming inserts.
+    fused: str = "auto"
     logdet_order: int = 30
     logdet_probes: int = 16
     trace_probes: int = 16
@@ -71,7 +75,7 @@ class GPConfig:
     def solve_cfg(self) -> SolveConfig:
         return SolveConfig(method=self.solver, iters=self.solver_iters,
                            pivot=self.pivot, backend=self.backend,
-                           alg=self.solve_alg)
+                           alg=self.solve_alg, fused=self.fused)
 
 
 @partial(
@@ -121,7 +125,10 @@ def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma) -
     The solve algorithm gets the same treatment: a config-level "auto"
     captures the process default (REPRO_SOLVE_ALG / set_solve_alg) at fit
     time ("auto" then means the static bandwidth-based choice: CR when
-    lo == hi, LU otherwise).
+    lo == hi, LU otherwise). Likewise the fused-sweep mode: "auto" captures
+    the REPRO_FUSED / set_fused process default; the residual "auto" is the
+    per-solve shape check (pallas backend + symmetric bands + VMEM fit) in
+    ``backfitting._maybe_fused``.
     """
     from ..kernels import ops as _kops
 
@@ -129,7 +136,9 @@ def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma) -
         config,
         backend=_kops.resolve_backend(config.backend),
         solve_alg=(config.solve_alg if config.solve_alg != "auto"
-                   else _kops.get_solve_alg()))
+                   else _kops.get_solve_alg()),
+        fused=(config.fused if config.fused != "auto"
+               else _kops.get_fused()))
     return _fit_impl(config, X, Y, omega, sigma)
 
 

@@ -12,26 +12,34 @@ Three variants:
                        (damped); maps onto the ``model`` mesh axis.
   * ``pcg``          — beyond-paper: conjugate gradients preconditioned by the
                        block solve; fastest convergence per banded solve.
+
+On the pallas backend each iteration can run as ONE fused ``pallas_call``
+(``kernels/fused_sweep.py``): the permutation gathers, banded matvecs, the
+block-CR solve and the sum-over-D coupling all stay in VMEM instead of
+round-tripping the (D, n, B) state through HBM between 4+ dispatched ops.
+``SolveConfig.fused`` ("auto" | "on" | "off", default auto: fuse on pallas
+when every bandwidth is symmetric and the state fits VMEM) selects it; the
+fused and unfused paths are numerically interchangeable (bit-level at f64).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from .banded import Banded, matvec, solve
 
-__all__ = ["SolveConfig", "DimOps", "solve_mhat", "mhat_matvec"]
+__all__ = ["SolveConfig", "SolveInfo", "DimOps", "solve_mhat", "mhat_matvec"]
 
 
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=(),
     meta_fields=("method", "iters", "damping", "pivot", "tol", "backend",
-                 "alg"),
+                 "alg", "fused"),
 )
 @dataclasses.dataclass(frozen=True)
 class SolveConfig:
@@ -39,9 +47,19 @@ class SolveConfig:
     iters: int = 30
     damping: float = 0.0  # jacobi under-relaxation; 0 -> auto (1/D, provably safe)
     pivot: bool = False  # banded LU pivoting
-    tol: float = 0.0  # 0 -> fixed iteration count (jit-friendly)
+    # pcg-only early exit: stop once sqrt(rz_k / rz_0) <= tol in the
+    # preconditioned residual norm (jit-friendly bounded lax.while_loop);
+    # 0 -> fixed iteration count. gauss_seidel/jacobi always run `iters`.
+    tol: float = 0.0
     backend: str = "auto"  # banded-algebra backend ("auto" | "jax" | "pallas")
     alg: str = "auto"  # pallas solve kernel ("auto" | "lu" | "cr")
+    fused: str = "auto"  # fused-sweep kernel ("auto" | "on" | "off")
+
+
+class SolveInfo(NamedTuple):
+    """Diagnostics from ``solve_mhat(..., return_info=True)``."""
+
+    iters: jax.Array  # iterations executed (== cfg.iters unless tol fired)
 
 
 @partial(
@@ -121,11 +139,54 @@ def mhat_matvec(ops: DimOps, u: jax.Array, pivot: bool = False,
                            alg=alg) + ssT / ops.sigma2
 
 
+def _maybe_fused(ops: DimOps, v: jax.Array, cfg: SolveConfig):
+    """Resolve ``cfg.fused`` against this solve; FusedSweep or None.
+
+    Trace-time decision (shapes, backend and bandwidths are all static): the
+    fused path needs the pallas backend and symmetric bandwidths on every
+    factor, and "auto" additionally requires the state + factor stack to fit
+    the fused kernel's VMEM residency model (see ``fused_sweep``).
+    """
+    from ..kernels import ops as _kops
+    from ..kernels.fused_sweep import FusedSweep
+
+    need_a = cfg.method == "pcg"
+    widths = ((ops.Phi.lo, ops.Phi.hi), (ops.SAPhi.lo, ops.SAPhi.hi))
+    if need_a:
+        widths = ((ops.A.lo, ops.A.hi),) + widths
+    # the fused kernel solves via block CR only (w = 0 degenerates to
+    # division); an explicit/process alg="lu" must keep the unfused path
+    cr_ok = all(
+        b.lo != b.hi or b.lo == 0
+        or _kops.resolve_solve_alg(cfg.alg, b.lo, b.hi) == "cr"
+        for b in (ops.Phi, ops.SAPhi))
+    # v is already promoted to the compute dtype (solve_mhat entry), which
+    # is what the fused kernel runs in — size the VMEM estimate by it
+    if not _kops.resolve_fused(cfg.fused, cfg.backend, widths=widths,
+                               n=ops.n, D=ops.D, B=v.shape[-1],
+                               itemsize=v.dtype.itemsize,
+                               method=cfg.method, cr_ok=cr_ok):
+        return None
+    return FusedSweep(
+        ops.Phi.data, ops.SAPhi.data, ops.sort_idx, ops.rank_idx, ops.sigma2,
+        w_p=ops.Phi.lo, w_s=ops.SAPhi.lo,
+        a=ops.A.data if need_a else None, w_a=ops.A.lo, pivot=cfg.pivot,
+        interpret=not _kops.on_tpu(), dtype=v.dtype)
+
+
 def _gauss_seidel(ops: DimOps, v: jax.Array, cfg: SolveConfig,
                   x0: jax.Array | None = None) -> jax.Array:
     """Algorithm 4: block Gauss-Seidel sweeps, sequential over dimensions."""
     D = ops.D
     vt = jnp.zeros_like(v) if x0 is None else x0
+
+    fs = _maybe_fused(ops, v, cfg)
+    if fs is not None:
+        v_p = fs.pad_state(v)
+        out = jax.lax.fori_loop(0, cfg.iters,
+                                lambda _, u: fs.gauss_seidel_iter(v_p, u),
+                                fs.pad_state(vt))
+        return fs.unpad(out)
 
     def solve_one_dim(d, r_d):
         # single-dim block solve (r_d: (n, B))
@@ -161,6 +222,14 @@ def _jacobi(ops: DimOps, v: jax.Array, cfg: SolveConfig,
     vt = jnp.zeros_like(v) if x0 is None else x0
     alpha = cfg.damping if cfg.damping > 0 else 1.0 / ops.D
 
+    fs = _maybe_fused(ops, v, cfg)
+    if fs is not None:
+        v_p = fs.pad_state(v)
+        out = jax.lax.fori_loop(
+            0, cfg.iters, lambda _, u: fs.jacobi_iter(v_p, u, alpha),
+            fs.pad_state(vt))
+        return fs.unpad(out)
+
     def sweep(_, vt):
         total = jnp.sum(vt, axis=0, keepdims=True)
         r = v - (total - vt) / ops.sigma2
@@ -172,8 +241,14 @@ def _jacobi(ops: DimOps, v: jax.Array, cfg: SolveConfig,
 
 
 def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
-         x0: jax.Array | None = None) -> jax.Array:
-    """Preconditioned CG on the SPD system Mhat x = v, M_pre = block solve."""
+         x0: jax.Array | None = None):
+    """Preconditioned CG on the SPD system Mhat x = v, M_pre = block solve.
+
+    Returns ``(x, iters_used)``. With ``cfg.tol > 0`` the loop is a bounded
+    ``lax.while_loop`` that exits once every RHS column satisfies
+    ``sqrt(rz_k / rz_0) <= tol`` (rz = r^T M_pre^{-1} r, the quantity PCG
+    already carries — no extra reductions on the hot path).
+    """
 
     def amv(u):
         return mhat_matvec(ops, u, pivot=cfg.pivot, backend=cfg.backend,
@@ -184,30 +259,56 @@ def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
                                alg=cfg.alg)
 
     x = jnp.zeros_like(v) if x0 is None else x0
-    r = v - amv(x)
+    # amv(0) == 0 exactly: skip the two dispatches on a cold start
+    r = v if x0 is None else v - amv(x0)
     z = pre(r)
     p = z
     rz = jnp.sum(r * z, axis=(0, 1))
 
-    def body(_, state):
-        x, r, p, rz = state
-        ap = amv(p)
-        denom = jnp.sum(p * ap, axis=(0, 1))
-        alpha = rz / jnp.where(denom == 0, 1.0, denom)
-        x = x + alpha * p
-        r = r - alpha * ap
-        z = pre(r)
-        rz_new = jnp.sum(r * z, axis=(0, 1))
-        beta = rz_new / jnp.where(rz == 0, 1.0, rz)
-        p = z + beta * p
-        return (x, r, p, rz_new)
+    fs = _maybe_fused(ops, v, cfg)
+    if fs is not None:
+        x, r, p = fs.pad_state(x), fs.pad_state(r), fs.pad_state(p)
 
-    x, r, p, rz = jax.lax.fori_loop(0, cfg.iters, body, (x, r, p, rz))
-    return x
+        def body(state):
+            x, r, p, rz = state
+            x, r, p, rz1 = fs.pcg_iter(x, r, p, rz[None])
+            return (x, r, p, rz1[0])
+    else:
+
+        def body(state):
+            x, r, p, rz = state
+            ap = amv(p)
+            denom = jnp.sum(p * ap, axis=(0, 1))
+            alpha = rz / jnp.where(denom == 0, 1.0, denom)
+            x = x + alpha * p
+            r = r - alpha * ap
+            z = pre(r)
+            rz_new = jnp.sum(r * z, axis=(0, 1))
+            beta = rz_new / jnp.where(rz == 0, 1.0, rz)
+            p = z + beta * p
+            return (x, r, p, rz_new)
+
+    state = (x, r, p, rz)
+    if cfg.tol > 0:
+        rz0 = rz
+        thresh = cfg.tol**2 * rz0
+
+        def cond(carry):
+            i, state = carry
+            return (i < cfg.iters) & jnp.any(state[3] > thresh)
+
+        iters_used, state = jax.lax.while_loop(
+            cond, lambda c: (c[0] + 1, body(c[1])),
+            (jnp.asarray(0, jnp.int32), state))
+    else:
+        state = jax.lax.fori_loop(0, cfg.iters, lambda _, s: body(s), state)
+        iters_used = jnp.asarray(cfg.iters, jnp.int32)
+    x = state[0]
+    return (x if fs is None else fs.unpad(x)), iters_used
 
 
 def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig(),
-               x0: jax.Array | None = None) -> jax.Array:
+               x0: jax.Array | None = None, return_info: bool = False):
     """Apply Mhat^{-1} to v: (D, n) or (D, n, B), original point order.
 
     ``x0`` optionally warm-starts the iteration from a previous solution
@@ -215,19 +316,29 @@ def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig(),
     whose iterate *is* the solution estimate, so a near-converged ``x0`` —
     e.g. the pre-insert solution spliced at a streamed point — cuts the
     iteration count to O(1) (paper Sec. 6; Kernel Multigrid's warm-started
-    back-fitting argument).
+    back-fitting argument). Combined with ``cfg.tol > 0`` (pcg) the solve
+    then actually *exits* after those few iterations; ``return_info=True``
+    additionally returns a :class:`SolveInfo` with the realized count.
     """
     vec_in = v.ndim == 2
     if vec_in:
         v = v[..., None]
         if x0 is not None:
             x0 = x0[..., None]
+    # iterate in the dtype the banded ops produce (mixed-dtype RHS would
+    # otherwise promote mid-iteration and break the loop carry)
+    dtype = jnp.result_type(v, ops.SAPhi.data)
+    v = v.astype(dtype)
+    if x0 is not None:
+        x0 = x0.astype(dtype)
+    iters_used = jnp.asarray(cfg.iters, jnp.int32)
     if cfg.method == "gauss_seidel":
         out = _gauss_seidel(ops, v, cfg, x0)
     elif cfg.method == "jacobi":
         out = _jacobi(ops, v, cfg, x0)
     elif cfg.method == "pcg":
-        out = _pcg(ops, v, cfg, x0)
+        out, iters_used = _pcg(ops, v, cfg, x0)
     else:
         raise ValueError(f"unknown method {cfg.method!r}")
-    return out[..., 0] if vec_in else out
+    out = out[..., 0] if vec_in else out
+    return (out, SolveInfo(iters=iters_used)) if return_info else out

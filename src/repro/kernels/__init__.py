@@ -6,6 +6,10 @@ block_cr      — block cyclic-reduction solve + logdet for lo = hi = w (the
                 default pallas solve path: log2-depth vectorized elimination,
                 (D,)-batch in the kernel grid, block partial-pivot mode)
 band_matmul   — band x band product in band form (Algorithm 5 input H = A Phi^T)
+fused_sweep   — ONE pallas_call per backfitting iteration: permutation
+                gathers, A/Phi matvecs, the SAPhi block-CR solve and the
+                sum-over-D coupling fused in VMEM for all three solvers
+                (pcg / jacobi / gauss_seidel)
 tridiag_pcr   — parallel-cyclic-reduction tridiagonal solve (Matérn-1/2 path;
                 TPU replacement for the paper's sequential banded LU)
 kp_gram       — fused Phi = A·K band assembly (Algorithm 2) without forming K
@@ -30,6 +34,14 @@ from .block_cr import (  # noqa: F401
     block_cr_logdet_pallas,
     block_cr_pallas,
     block_cr_solve_pallas,
+    cr_solve_values,
+)
+from .fused_sweep import (  # noqa: F401
+    FusedSweep,
+    fused_gauss_seidel_iter_pallas,
+    fused_jacobi_iter_pallas,
+    fused_pcg_iter_pallas,
+    fused_vmem_bytes,
 )
 from .kp_gram import kp_gram_pallas  # noqa: F401
 from .tridiag_pcr import tridiag_pcr_pallas  # noqa: F401

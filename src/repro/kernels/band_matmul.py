@@ -7,7 +7,9 @@ Same tiling as ``banded_matvec``: row blocks in VMEM, the B-band halo
 (|t| <= a_lo/a_hi <= block) provided by passing the zero-padded B band three
 times with shifted index maps (previous / current / next block). Each tile is
 a static double loop over (t) with a fused shift-multiply-accumulate into the
-output band — one read of A and B, one write of C.
+output band — one read of A and B, one write of C. The flattened operand
+batch G rides the kernel grid (one ``pallas_call`` for the whole stack;
+2-D inputs are treated as G = 1).
 
 Out-of-range band entries are exact zeros on input (the ``repro.core.banded``
 storage invariant), and the zero halo blocks extend that across tile edges,
@@ -48,32 +50,36 @@ def _kernel(a_ref, bp_ref, bc_ref, bn_ref, o_ref, *, a_lo, a_hi, b_lo, b_hi,
 def band_matmul_pallas(a_band: jax.Array, b_band: jax.Array,
                        a_lo: int, a_hi: int, b_lo: int, b_hi: int,
                        block: int = DEF_BLOCK, interpret: bool = True):
-    """a_band: (n, a_lo+a_hi+1), b_band: (n, b_lo+b_hi+1) ->
-    C band (n, a_lo+b_lo+a_hi+b_hi+1)."""
-    n, wa = a_band.shape
-    wb = b_band.shape[1]
+    """a_band: (G, n, a_lo+a_hi+1), b_band: (G, n, b_lo+b_hi+1) ->
+    C band (G, n, a_lo+b_lo+a_hi+b_hi+1)."""
+    squeeze = a_band.ndim == 2
+    if squeeze:
+        a_band, b_band = a_band[None], b_band[None]
+    G, n, wa = a_band.shape
+    wb = b_band.shape[-1]
     assert wa == a_lo + a_hi + 1 and wb == b_lo + b_hi + 1
     assert max(a_lo, a_hi) <= block
     wc = wa + wb - 1
     dtype = jnp.result_type(a_band, b_band)
     npad = -(-n // block) * block
-    a_p = jnp.zeros((npad, wa), dtype).at[:n].set(a_band.astype(dtype))
-    b_p = jnp.zeros((npad, wb), dtype).at[:n].set(b_band.astype(dtype))
-    bz = jnp.concatenate([jnp.zeros((block, wb), dtype), b_p,
-                          jnp.zeros((block, wb), dtype)], axis=0)
-    grid = (npad // block,)
+    a_p = jnp.zeros((G, npad, wa), dtype).at[:, :n].set(a_band.astype(dtype))
+    b_p = jnp.zeros((G, npad, wb), dtype).at[:, :n].set(b_band.astype(dtype))
+    zblk = jnp.zeros((G, block, wb), dtype)
+    bz = jnp.concatenate([zblk, b_p, zblk], axis=1)
+    grid = (G, npad // block)
     out = pl.pallas_call(
         functools.partial(_kernel, a_lo=a_lo, a_hi=a_hi, b_lo=b_lo, b_hi=b_hi,
                           block=block),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block, wa), lambda i: (i, 0)),
-            pl.BlockSpec((block, wb), lambda i: (i, 0)),      # prev (bz off 0)
-            pl.BlockSpec((block, wb), lambda i: (i + 1, 0)),  # cur
-            pl.BlockSpec((block, wb), lambda i: (i + 2, 0)),  # next
+            pl.BlockSpec((None, block, wa), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((None, block, wb), lambda g, i: (g, i, 0)),      # prev
+            pl.BlockSpec((None, block, wb), lambda g, i: (g, i + 1, 0)),  # cur
+            pl.BlockSpec((None, block, wb), lambda g, i: (g, i + 2, 0)),  # next
         ],
-        out_specs=pl.BlockSpec((block, wc), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((npad, wc), dtype),
+        out_specs=pl.BlockSpec((None, block, wc), lambda g, i: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, npad, wc), dtype),
         interpret=interpret,
     )(a_p, bz, bz, bz)
-    return out[:n]
+    out = out[:, :n]
+    return out[0] if squeeze else out

@@ -13,6 +13,11 @@ emits both the solution and the log-determinant; the ``ops`` dispatch layer
 exposes them as separate entry points (``banded_solve`` discards the logdet,
 ``banded_logdet`` passes a width-1 dummy RHS and discards the solution).
 
+The flattened operand batch G rides the kernel grid (one ``pallas_call`` for
+the whole factor stack, as in ``block_cr``; 2-D inputs are treated as G = 1).
+The VMEM scratch is reused across grid steps — each step fully rewrites the
+regions it reads, so no cross-step state leaks.
+
 No pivoting: callers needing the pivoted path route to the pure-jax scan in
 ``repro.core.banded`` (see ``repro/kernels/README.md`` dispatch rules).
 """
@@ -85,30 +90,35 @@ def _kernel(band_ref, rhs_ref, x_ref, ld_ref, u_ref, y_ref, xp_ref,
 @functools.partial(jax.jit, static_argnames=("lo", "hi", "interpret", "solve"))
 def banded_lu_pallas(band: jax.Array, rhs: jax.Array, lo: int, hi: int,
                      interpret: bool = True, solve: bool = True):
-    """band: (n, lo+hi+1) row-aligned; rhs: (n, B). Returns (x (n, B), logdet).
+    """band: (G, n, lo+hi+1) row-aligned; rhs: (G, n, B).
+    Returns (x (G, n, B), logdet (G,)); 2-D inputs squeeze the G axis.
 
     No-pivot LU; requires a stably-factorizable band (e.g. the diagonally
     dominant KP systems). Whole system in VMEM — n bounded by ~VMEM size.
     ``solve=False`` skips the sequential back-substitution (logdet-only
     callers; x comes back zero-filled).
     """
-    n, w = band.shape
+    squeeze = band.ndim == 2
+    if squeeze:
+        band, rhs = band[None], rhs[None]
+    G, n, w = band.shape
     assert w == lo + hi + 1, (band.shape, lo, hi)
-    B = rhs.shape[1]
+    B = rhs.shape[-1]
     dtype = jnp.result_type(band, rhs)
     x, ld = pl.pallas_call(
         functools.partial(_kernel, lo=lo, hi=hi, n=n, solve=solve),
+        grid=(G,),
         in_specs=[
-            pl.BlockSpec((n, w), lambda: (0, 0)),
-            pl.BlockSpec((n, B), lambda: (0, 0)),
+            pl.BlockSpec((None, n, w), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, n, B), lambda g: (g, 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((n, B), lambda: (0, 0)),
-            pl.BlockSpec((1, 1), lambda: (0, 0)),
+            pl.BlockSpec((None, n, B), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, 1), lambda g: (g, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, B), dtype),
-            jax.ShapeDtypeStruct((1, 1), dtype),
+            jax.ShapeDtypeStruct((G, n, B), dtype),
+            jax.ShapeDtypeStruct((G, 1), dtype),
         ],
         scratch_shapes=[
             pltpu.VMEM((n + lo, hi + 1), dtype),   # U rows (+ identity padding)
@@ -117,19 +127,20 @@ def banded_lu_pallas(band: jax.Array, rhs: jax.Array, lo: int, hi: int,
         ],
         interpret=interpret,
     )(band.astype(dtype), rhs.astype(dtype))
-    return x, ld[0, 0]
+    ld = ld[:, 0]
+    return (x[0], ld[0]) if squeeze else (x, ld)
 
 
 def banded_solve_pallas(band, rhs, lo: int, hi: int, interpret: bool = True):
-    """Solve M x = rhs (no pivoting); rhs (n, B)."""
+    """Solve M x = rhs (no pivoting); rhs (G, n, B) or (n, B)."""
     x, _ = banded_lu_pallas(band, rhs, lo, hi, interpret=interpret)
     return x
 
 
 def banded_logdet_pallas(band, lo: int, hi: int, interpret: bool = True):
     """log|det M| from the same elimination (width-1 dummy RHS, no back-sub)."""
-    n = band.shape[0]
-    dummy = jnp.zeros((n, 1), band.dtype)
+    n = band.shape[-2]
+    dummy = jnp.zeros(band.shape[:-2] + (n, 1), band.dtype)
     _, ld = banded_lu_pallas(band, dummy, lo, hi, interpret=interpret,
                              solve=False)
     return ld

@@ -8,8 +8,10 @@ into VMEM blocks and streams the band. The off-tile halo (|m| <= lo/hi <= 8)
 is handled by passing x three times with shifted index maps (previous /
 current / next block), avoiding overlapping BlockSpecs.
 
-Layout: band (n, w) float32, x (n, B) — the RHS batch dim B rides along the
-VPU lanes.
+Layout: band (G, n, w), x (G, n, B) — the RHS batch dim B rides along the
+VPU lanes and the flattened operand batch G rides the kernel grid (one
+``pallas_call`` for the whole stack, as in ``block_cr``; 2-D inputs are
+treated as G = 1).
 """
 from __future__ import annotations
 
@@ -38,41 +40,39 @@ def _kernel(band_ref, xp_ref, xc_ref, xn_ref, o_ref, *, lo, hi, block):
 @functools.partial(jax.jit, static_argnames=("lo", "hi", "block", "interpret"))
 def banded_matvec_pallas(band: jax.Array, x: jax.Array, lo: int, hi: int,
                          block: int = DEF_BLOCK, interpret: bool = True):
-    """band: (n, lo+hi+1); x: (n, B) -> (n, B). n is padded to `block`."""
-    n, w = band.shape
+    """band: (G, n, lo+hi+1); x: (G, n, B) -> (G, n, B). n padded to `block`."""
+    squeeze = band.ndim == 2
+    if squeeze:
+        band, x = band[None], x[None]
+    G, n, w = band.shape
     assert w == lo + hi + 1
-    B = x.shape[1]
+    B = x.shape[-1]
+    # promote like the jax scan path (band * x), so mixed-dtype operands
+    # store cleanly into the output ref
+    dtype = jnp.result_type(band, x)
     npad = -(-n // block) * block
-    band_p = jnp.zeros((npad, w), band.dtype).at[:n].set(band)
-    x_p = jnp.zeros((npad, B), x.dtype).at[:n].set(x)
-    grid = (npad // block,)
+    band_p = jnp.zeros((G, npad, w), dtype).at[:, :n].set(band.astype(dtype))
+    x_p = jnp.zeros((G, npad, B), dtype).at[:, :n].set(x.astype(dtype))
+    grid = (G, npad // block)
 
-    def idx_prev(i):
-        return (jnp.maximum(i - 1, 0), 0)
-
-    def idx_cur(i):
-        return (i, 0)
-
-    def idx_next(i):
-        return (jnp.minimum(i + 1, npad // block - 1), 0)
-
-    # zero the wrap-around contributions by masking: rows < block in the first
-    # tile must not read x_prev; handled by zero-padding x at the boundaries
-    # via explicit zero blocks appended front/back.
-    xz = jnp.concatenate([jnp.zeros((block, B), x.dtype), x_p,
-                          jnp.zeros((block, B), x.dtype)], axis=0)
+    # zero the wrap-around contributions: the halo tiles past either edge are
+    # explicit zero blocks appended front/back, and the shifted index maps
+    # (i / i+1 / i+2 into the extended array) select prev/cur/next.
+    zblk = jnp.zeros((G, block, B), dtype)
+    xz = jnp.concatenate([zblk, x_p, zblk], axis=1)
 
     out = pl.pallas_call(
         functools.partial(_kernel, lo=lo, hi=hi, block=block),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block, w), lambda i: (i, 0)),
-            pl.BlockSpec((block, B), lambda i: (i, 0)),      # prev (xz offset 0)
-            pl.BlockSpec((block, B), lambda i: (i + 1, 0)),  # cur
-            pl.BlockSpec((block, B), lambda i: (i + 2, 0)),  # next
+            pl.BlockSpec((None, block, w), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((None, block, B), lambda g, i: (g, i, 0)),      # prev
+            pl.BlockSpec((None, block, B), lambda g, i: (g, i + 1, 0)),  # cur
+            pl.BlockSpec((None, block, B), lambda g, i: (g, i + 2, 0)),  # next
         ],
-        out_specs=pl.BlockSpec((block, B), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((npad, B), x.dtype),
+        out_specs=pl.BlockSpec((None, block, B), lambda g, i: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, npad, B), dtype),
         interpret=interpret,
     )(band_p, xz, xz, xz)
-    return out[:n]
+    out = out[:, :n]
+    return out[0] if squeeze else out

@@ -48,7 +48,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["block_cr_pallas", "block_cr_solve_pallas", "block_cr_logdet_pallas"]
+__all__ = ["cr_solve_values", "block_cr_pallas", "block_cr_solve_pallas",
+           "block_cr_logdet_pallas"]
 
 
 def _nbr(x, d):
@@ -120,12 +121,19 @@ def _band_to_blocks(data, w, nb):
     return tri(0), tri(w), tri(2 * w)
 
 
-def _kernel(band_ref, rhs_ref, x_ref, ld_ref, *, w, nb, steps, pivot, solve):
-    data = band_ref[0]  # (nb*w, 2w+1)
-    B = rhs_ref.shape[-1]
+def cr_solve_values(data, rhs, *, w, nb, steps, pivot, solve=True):
+    """Block cyclic reduction on plain values (no refs) — the kernel body.
+
+    ``data``: (nb*w, 2w+1) row-aligned band, identity-padded past the real
+    rows; ``rhs``: (nb*w, B). Returns ``(x (nb*w, B), logdet scalar)``.
+    Shared by the ``block_cr`` kernel and the fused backfitting-sweep kernel
+    (``fused_sweep.py``), which runs this elimination on VMEM-resident
+    intermediates instead of dispatched operands.
+    """
+    B = rhs.shape[-1]
     dtype = data.dtype
     Ab, Bb, Cb = _band_to_blocks(data, w, nb)
-    R = rhs_ref[0].reshape(nb, w, B)
+    R = rhs.reshape(nb, w, B)
     idx = jnp.arange(nb)
     eye = jnp.broadcast_to(jnp.eye(w, dtype=dtype), (nb, w, w))
 
@@ -148,11 +156,10 @@ def _kernel(band_ref, rhs_ref, x_ref, ld_ref, *, w, nb, steps, pivot, solve):
     # Every row now holds its elimination-level (frozen) blocks; row 0 holds
     # the fully reduced system. det(M) telescopes over the Schur complements:
     X0, ld_all = _small_solve(Bb, R, pivot=pivot)
-    ld_ref[0, 0] = jnp.sum(ld_all)
+    ld = jnp.sum(ld_all)
 
     if not solve:
-        x_ref[0] = jnp.zeros((nb * w, B), dtype)
-        return
+        return jnp.zeros((nb * w, B), dtype), ld
 
     x = jnp.where(idx[:, None, None] == 0, X0, jnp.zeros_like(X0))
     # --- back substitution: replay levels in reverse, all rows vectorized ---
@@ -164,7 +171,14 @@ def _kernel(band_ref, rhs_ref, x_ref, ld_ref, *, w, nb, steps, pivot, solve):
                  - jnp.einsum("nij,njk->nik", Cb, _nbr(x, s)))
         Xk, _ = _small_solve(Bb, rhs_k, pivot=pivot)
         x = jnp.where(odd[:, None, None], Xk, x)
-    x_ref[0] = x.reshape(nb * w, B)
+    return x.reshape(nb * w, B), ld
+
+
+def _kernel(band_ref, rhs_ref, x_ref, ld_ref, *, w, nb, steps, pivot, solve):
+    x, ld = cr_solve_values(band_ref[0], rhs_ref[0], w=w, nb=nb, steps=steps,
+                            pivot=pivot, solve=solve)
+    x_ref[0] = x
+    ld_ref[0, 0] = ld
 
 
 @functools.partial(

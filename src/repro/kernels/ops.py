@@ -37,6 +37,24 @@ algorithms (``REPRO_SOLVE_ALG`` env / ``set_solve_alg`` / the per-op
 ``pivot=True`` routes to the pivoted block-CR kernel when the resolved
 algorithm is ``"cr"``; only the asymmetric-bandwidth (or forced-``"lu"``)
 pivoted case still falls back to the jax gbsv-style scan.
+
+Batched operands (the GP's stacked per-dimension factors, leading dims)
+are flattened and folded into the kernel **grid** for every pallas kernel
+(``_flatten_batch`` -> one ``pallas_call``); no op unrolls its batch at
+trace time any more.
+
+Orthogonally to the per-op backends, the backfitting solvers can fuse one
+*whole* iteration — permutation gathers, matvecs, block-CR solve and the
+cross-dimension coupling — into a single ``pallas_call``
+(``kernels/fused_sweep.py``). The ``REPRO_FUSED`` env / ``set_fused`` /
+``SolveConfig.fused`` / ``GPConfig.fused`` switch controls it:
+
+  * ``"auto"`` (default) — fuse when the resolved backend is pallas, every
+    factor has a symmetric bandwidth (lo == hi — true for every KP system),
+    and the estimated VMEM footprint fits (``fused_sweep.fused_vmem_bytes``
+    vs ``REPRO_FUSED_VMEM_CAP``); otherwise run the unfused dispatch path.
+  * ``"on"`` — require fusion (raises if the backend/bandwidths can't).
+  * ``"off"`` — never fuse.
 """
 from __future__ import annotations
 
@@ -50,14 +68,17 @@ from .band_matmul import band_matmul_pallas
 from .banded_lu import banded_logdet_pallas, banded_solve_pallas
 from .banded_matvec import banded_matvec_pallas
 from .block_cr import block_cr_logdet_pallas, block_cr_solve_pallas
+from .fused_sweep import fused_vmem_bytes
 from .kp_gram import kp_gram_pallas
 from .tridiag_pcr import tridiag_pcr_pallas
 
 __all__ = [
-    "BACKENDS", "SOLVE_ALGS", "on_tpu", "get_backend", "set_backend",
-    "use_backend", "resolve_backend", "get_solve_alg", "set_solve_alg",
-    "use_solve_alg", "resolve_solve_alg", "banded_matvec", "banded_solve",
-    "banded_logdet", "band_band_matmul", "tridiag_solve", "kp_gram",
+    "BACKENDS", "SOLVE_ALGS", "FUSED_MODES", "on_tpu", "get_backend",
+    "set_backend", "use_backend", "resolve_backend", "get_solve_alg",
+    "set_solve_alg", "use_solve_alg", "resolve_solve_alg", "get_fused",
+    "set_fused", "use_fused", "resolve_fused", "banded_matvec",
+    "banded_solve", "banded_logdet", "band_band_matmul", "tridiag_solve",
+    "kp_gram",
 ]
 
 BACKENDS = ("auto", "jax", "pallas")
@@ -66,8 +87,12 @@ ENV_VAR = "REPRO_BACKEND"
 SOLVE_ALGS = ("auto", "lu", "cr")
 ENV_SOLVE_ALG = "REPRO_SOLVE_ALG"
 
+FUSED_MODES = ("auto", "on", "off")
+ENV_FUSED = "REPRO_FUSED"
+
 _backend = os.environ.get(ENV_VAR, "auto")
 _solve_alg = os.environ.get(ENV_SOLVE_ALG, "auto")
+_fused = os.environ.get(ENV_FUSED, "auto")
 
 
 def on_tpu() -> bool:
@@ -181,6 +206,83 @@ def resolve_solve_alg(alg: str | None, lo: int, hi: int) -> str:
     return a
 
 
+def get_fused() -> str:
+    """Current process-wide fused-sweep mode (may be "auto")."""
+    return _fused
+
+
+def set_fused(name: str) -> None:
+    """Set the process-wide fused-sweep mode ("auto" | "on" | "off")."""
+    global _fused
+    if name not in FUSED_MODES:
+        raise ValueError(
+            f"unknown fused mode {name!r}; expected one of {FUSED_MODES}")
+    _fused = name
+
+
+@contextlib.contextmanager
+def use_fused(name: str):
+    """Temporarily override the fused-sweep mode (trace-time scope)."""
+    prev = _fused
+    set_fused(name)
+    try:
+        yield
+    finally:
+        set_fused(prev)
+
+
+def resolve_fused(fused: str | None, backend: str | None, *, widths,
+                  n: int = 0, D: int = 1, B: int = 1, itemsize: int = 8,
+                  method: str = "pcg", cr_ok: bool = True) -> bool:
+    """Decide whether a backfitting solve runs the fused-sweep kernel.
+
+    ``widths``: the (lo, hi) pairs of every band the sweep touches. An
+    explicit ``"on"``/``"off"`` wins (``"on"`` raises if fusion is
+    impossible: jax backend, asymmetric bandwidths, or a solve-alg override
+    that forbids block CR — the only solve the fused kernel implements;
+    callers pass that as ``cr_ok``); ``"auto"``/None defer to the process
+    default (``set_fused`` / ``REPRO_FUSED``), and a final "auto" fuses
+    exactly when the resolved backend is pallas, every band is symmetric,
+    CR is allowed, and the estimated VMEM footprint of one fused call fits
+    under ``fused_sweep.VMEM_CAP_BYTES`` (env ``REPRO_FUSED_VMEM_CAP``).
+    """
+    from . import fused_sweep
+
+    f = fused if fused is not None else _fused
+    if f not in FUSED_MODES:
+        raise ValueError(
+            f"unknown fused mode {f!r}; expected one of {FUSED_MODES}")
+    if f == "auto":
+        f = _fused
+        if f not in FUSED_MODES:
+            raise ValueError(
+                f"unknown fused mode {f!r} (from {ENV_FUSED} or set_fused); "
+                f"expected one of {FUSED_MODES}")
+    if f == "off":
+        return False
+    be = resolve_backend(backend)
+    symmetric = all(lo == hi for lo, hi in widths)
+    if f == "on":
+        if be != "pallas":
+            raise ValueError(
+                "fused='on' requires the pallas backend (got "
+                f"backend={be!r}); the fused sweep is a Pallas kernel")
+        if not symmetric:
+            raise ValueError(
+                "fused='on' requires symmetric bandwidths (lo == hi) on "
+                f"every factor; got {tuple(widths)}")
+        if not cr_ok:
+            raise ValueError(
+                "fused='on' conflicts with solve alg 'lu': the fused sweep "
+                "solves via block cyclic reduction only")
+        return True
+    if be != "pallas" or not symmetric or not cr_ok:
+        return False
+    est = fused_vmem_bytes(n, D, B, [lo for lo, _ in widths], itemsize,
+                           method=method)
+    return est <= fused_sweep.VMEM_CAP_BYTES
+
+
 def _interpret() -> bool:
     return not on_tpu()
 
@@ -193,26 +295,24 @@ def _core():
     return bd
 
 
-def _map_batched(fn, arrs, core_dims):
-    """Broadcast leading batch dims of ``arrs`` and map ``fn`` over them.
+# ---------------------------------------------------------------------------
+# dispatched ops
+# ---------------------------------------------------------------------------
 
-    Pallas kernels are written for single operands; batch sizes here are the
-    GP's D (or D*probes) — small, so a trace-time unrolled loop beats relying
-    on vmap-of-pallas_call across jax versions.
+
+def _flatten_batch(arrs, core_dims):
+    """Broadcast leading batch dims and flatten them to one G axis.
+
+    Every pallas kernel takes the flattened batch as its grid, so the whole
+    stack is a single ``pallas_call`` (no trace-time unroll). Returns
+    (batch, flats).
     """
     batch = jnp.broadcast_shapes(*[a.shape[:-d] for a, d in zip(arrs, core_dims)])
     flats = [
         jnp.broadcast_to(a, batch + a.shape[-d:]).reshape((-1,) + a.shape[-d:])
         for a, d in zip(arrs, core_dims)
     ]
-    outs = [fn(*[f[i] for f in flats]) for i in range(flats[0].shape[0])]
-    out = jnp.stack(outs)
-    return out.reshape(batch + out.shape[1:])
-
-
-# ---------------------------------------------------------------------------
-# dispatched ops
-# ---------------------------------------------------------------------------
+    return batch, flats
 
 
 def banded_matvec(band, x, lo: int, hi: int, block: int = 512,
@@ -224,26 +324,11 @@ def banded_matvec(band, x, lo: int, hi: int, block: int = 512,
     n = band.shape[-2]
     mat_form = x.ndim >= 2 and x.shape[-2] == n and x.ndim == band.ndim
     xb = x if mat_form else x[..., None]
-    out = _map_batched(
-        lambda d, r: banded_matvec_pallas(d, r, lo, hi, block=block,
-                                          interpret=_interpret()),
-        (band, xb), (2, 2),
-    )
+    batch, (bf, xf) = _flatten_batch((band, xb), (2, 2))
+    out = banded_matvec_pallas(bf, xf, lo, hi, block=block,
+                               interpret=_interpret())
+    out = out.reshape(batch + out.shape[-2:])
     return out if mat_form else out[..., 0]
-
-
-def _flatten_batch(arrs, core_dims):
-    """Broadcast leading batch dims and flatten them to one G axis.
-
-    The block-CR kernel takes the batch as its grid, so the whole stack is a
-    single ``pallas_call`` (no trace-time unroll). Returns (batch, flats).
-    """
-    batch = jnp.broadcast_shapes(*[a.shape[:-d] for a, d in zip(arrs, core_dims)])
-    flats = [
-        jnp.broadcast_to(a, batch + a.shape[-d:]).reshape((-1,) + a.shape[-d:])
-        for a, d in zip(arrs, core_dims)
-    ]
-    return batch, flats
 
 
 def banded_solve(band, rhs, lo: int, hi: int, pivot: bool = False,
@@ -266,17 +351,13 @@ def banded_solve(band, rhs, lo: int, hi: int, pivot: bool = False,
     n = band.shape[-2]
     vec_in = rhs.shape[-1] == n and rhs.ndim == band.ndim - 1
     rb = rhs[..., None] if vec_in else rhs
+    batch, (bf, rf) = _flatten_batch((band, rb), (2, 2))
     if use_cr:
-        batch, (bf, rf) = _flatten_batch((band, rb), (2, 2))
         x = block_cr_solve_pallas(bf, rf, lo, pivot=pivot,
                                   interpret=_interpret())
-        out = x.reshape(batch + x.shape[-2:])
     else:
-        out = _map_batched(
-            lambda d, r: banded_solve_pallas(d, r, lo, hi,
-                                             interpret=_interpret()),
-            (band, rb), (2, 2),
-        )
+        x = banded_solve_pallas(bf, rf, lo, hi, interpret=_interpret())
+    out = x.reshape(batch + x.shape[-2:])
     return out[..., 0] if vec_in else out
 
 
@@ -295,15 +376,13 @@ def banded_logdet(band, lo: int, hi: int, pivot: bool = False,
     use_cr = resolve_solve_alg(alg, lo, hi) == "cr"
     if pivot and not use_cr:
         return bd._logdet_scan(bd.Banded(band, lo, hi))
+    batch, (bf,) = _flatten_batch((band,), (2,))
     if use_cr:
-        batch, (bf,) = _flatten_batch((band,), (2,))
         ld = block_cr_logdet_pallas(bf, lo, pivot=pivot,
                                     interpret=_interpret())
-        return ld.reshape(batch)
-    return _map_batched(
-        lambda d: banded_logdet_pallas(d, lo, hi, interpret=_interpret()),
-        (band,), (2,),
-    )
+    else:
+        ld = banded_logdet_pallas(bf, lo, hi, interpret=_interpret())
+    return ld.reshape(batch)
 
 
 def band_band_matmul(a_band, b_band, a_lo: int, a_hi: int, b_lo: int,
@@ -314,11 +393,10 @@ def band_band_matmul(a_band, b_band, a_lo: int, a_hi: int, b_lo: int,
         return bd._band_band_matmul_scan(
             bd.Banded(a_band, a_lo, a_hi), bd.Banded(b_band, b_lo, b_hi)
         ).data
-    out = _map_batched(
-        lambda a, b: band_matmul_pallas(a, b, a_lo, a_hi, b_lo, b_hi,
-                                        block=block, interpret=_interpret()),
-        (a_band, b_band), (2, 2),
-    )
+    batch, (af, bf) = _flatten_batch((a_band, b_band), (2, 2))
+    out = band_matmul_pallas(af, bf, a_lo, a_hi, b_lo, b_hi, block=block,
+                             interpret=_interpret())
+    out = out.reshape(batch + out.shape[-2:])
     n = a_band.shape[-2]
     return out * bd._band_mask(n, a_lo + b_lo, a_hi + b_hi)
 

@@ -13,7 +13,9 @@ observation without the O(n log n) refit:
   * the posterior caches are rebuilt with a *warm-started* backfitting solve
     (on the pallas backend this runs the block cyclic-reduction kernel —
     ``GPConfig.solve_alg`` — so the insert hot path is log2-depth, not
-    row-sequential):
+    row-sequential; with ``GPConfig.fused`` — default "auto" — each warm
+    iteration is additionally ONE fused ``pallas_call``, gathers + matvecs +
+    block solve + coupling all in VMEM, see ``kernels/fused_sweep.py``):
     the pre-insert ``Mhat^{-1} S Y`` spliced at the new point is an
     O(sigma^2)-accurate initial iterate, so a handful of PCG iterations
     reconverge it (the Kernel Multigrid warm-start argument).
