@@ -1,0 +1,147 @@
+"""Capacity-padded streaming: retrace counts, insert/evict wall, memory bound.
+
+``PYTHONPATH=src python -m benchmarks.capacity_streaming [--full]``
+
+The claim under test (PR 5 acceptance): a stream of inserts at a fixed
+capacity compiles the insert step ONCE — versus one XLA compilation *per
+insert* for shape-growing updates — and ``evict`` pins peak memory at the
+capacity while insert-then-fresh-fit parity holds on the active window.
+
+Measured per row (artifact ``benchmarks/BENCH_capacity.json``):
+
+  * ``inserts`` in-place inserts at fixed ``capacity`` with the jit cache
+    entry counts of the insert step before/after (``retraces`` = new
+    entries; expect 1 for the whole stream vs ``== inserts`` for the
+    shape-growing baseline, measured on a short prefix and projected);
+  * steady-state insert wall (capacity path) vs the shape-growing baseline's
+    per-insert wall (which pays a retrace every time);
+  * evict wall + the peak posterior allocation in bytes across the whole
+    insert+evict stream (constant == bounded memory);
+  * parity: max |A_insert - A_fresh| on the active window (bit-identity
+    expected: the windowed factor update is exact and canonical) and the
+    posterior-mean deviation of the streamed GP vs a fresh fit on the same
+    points.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GPConfig, fit, posterior_mean
+from repro.streaming import evict, insert
+import repro.streaming.updates as updates_mod
+
+
+def _gp_nbytes(gp) -> int:
+    return sum(np.asarray(l).nbytes
+               for l in jax.tree_util.tree_leaves(gp)
+               if hasattr(l, "nbytes") or isinstance(l, (np.ndarray,)))
+
+
+def run(n0=64, capacity=512, inserts=256, evicts=64, D=3, q=0,
+        baseline_inserts=16, iters=8, out_rows=None):
+    """Returns one row: retrace counts, walls, memory bound, parity."""
+    rows = out_rows if out_rows is not None else []
+    cfg = GPConfig(q=q, solver="pcg", solver_iters=40, backend="jax")
+    rng = np.random.default_rng(0)
+    total = n0 + inserts + baseline_inserts + 1
+    X = jnp.asarray(rng.random((total, D)) * 10.0)
+    Y = jnp.asarray(np.sin(np.asarray(X)).sum(axis=1)
+                    + 0.1 * rng.standard_normal(total))
+    omega = jnp.asarray(0.8 + rng.random(D))
+
+    # --- capacity path: fixed-shape in-place inserts --------------------
+    gp = fit(cfg, X[:n0], Y[:n0], omega, 0.5, capacity=capacity)
+    gp = insert(gp, X[n0], Y[n0], iters=iters)  # warm the one trace
+    jax.block_until_ready(gp.u_sy)
+    cache0 = updates_mod._insert_impl._cache_size()
+    peak_bytes = _gp_nbytes(gp)
+    t0 = time.time()
+    for i in range(n0 + 1, n0 + inserts):
+        # count= skips the overflow guard's device sync: back-to-back
+        # inserts dispatch without waiting on the previous solve
+        gp = insert(gp, X[i], Y[i], iters=iters, count=i)
+    jax.block_until_ready(gp.u_sy)
+    t_ins = (time.time() - t0) / (inserts - 1)
+    retraces = updates_mod._insert_impl._cache_size() - cache0
+    peak_bytes = max(peak_bytes, _gp_nbytes(gp))
+    cache_entries = updates_mod._insert_impl._cache_size()
+
+    # --- evict: bounded-memory sliding window ---------------------------
+    k = n0 + inserts
+    gp = evict(gp, iters=iters, count=k)  # warm the one evict trace
+    k -= 1
+    jax.block_until_ready(gp.u_sy)
+    e_cache0 = updates_mod._evict_impl._cache_size()
+    t0 = time.time()
+    for _ in range(evicts - 1):
+        gp = evict(gp, iters=iters, count=k)
+        k -= 1
+    jax.block_until_ready(gp.u_sy)
+    t_evi = (time.time() - t0) / (evicts - 1)
+    peak_bytes = max(peak_bytes, _gp_nbytes(gp))
+    evict_retraces = updates_mod._evict_impl._cache_size() - e_cache0
+
+    # --- parity on the active window vs a fresh fit ---------------------
+    k = gp.num_points()
+    lo = evicts  # the first `evicts` originals were dropped
+    ref = fit(cfg, X[lo:lo + k], Y[lo:lo + k], omega, 0.5, capacity=capacity)
+    a_dev = float(jnp.max(jnp.abs(gp.ops.A.data[:, :k] - ref.ops.A.data[:, :k])))
+    Xq = X[:8]
+    mu_dev = float(jnp.max(jnp.abs(posterior_mean(gp, Xq)
+                                   - posterior_mean(ref, Xq))))
+
+    # --- baseline: shape-growing inserts retrace per n ------------------
+    gpb = fit(cfg, X[:n0], Y[:n0], omega, 0.5)  # unpadded
+    b_cache0 = updates_mod._insert_impl._cache_size()
+    t0 = time.time()
+    for i in range(n0, n0 + baseline_inserts):
+        gpb = insert(gpb, X[i], Y[i], iters=iters)  # grows: retraces each time
+    jax.block_until_ready(gpb.u_sy)
+    t_base = (time.time() - t0) / baseline_inserts
+    base_retraces = updates_mod._insert_impl._cache_size() - b_cache0
+
+    row = {
+        "bench": "capacity_streaming", "n0": int(n0),
+        "capacity": int(capacity), "D": int(D), "q": int(q),
+        "inserts": int(inserts), "evicts": int(evicts),
+        "insert_jit_cache_entries": int(cache_entries),
+        "insert_retraces": int(retraces),
+        "evict_retraces": int(evict_retraces),
+        "baseline_inserts": int(baseline_inserts),
+        "baseline_retraces": int(base_retraces),
+        "baseline_projected_retraces": int(
+            base_retraces * inserts / max(baseline_inserts, 1)),
+        "insert_s": t_ins, "evict_s": t_evi, "baseline_insert_s": t_base,
+        "peak_posterior_bytes": int(peak_bytes),
+        "active_window_A_max_abs_dev": a_dev,
+        "posterior_mean_max_abs_dev": mu_dev,
+    }
+    rows.append(row)
+    print("name,capacity,inserts,retraces,baseline_retraces/inserts,"
+          "insert_s,baseline_insert_s,evict_s,peak_MB,A_dev,mu_dev",
+          flush=True)
+    print(f"capacity_streaming,{capacity},{inserts},{retraces},"
+          f"{base_retraces}/{baseline_inserts},{t_ins:.4f},{t_base:.4f},"
+          f"{t_evi:.4f},{peak_bytes / 2**20:.1f},{a_dev:.1e},{mu_dev:.1e}",
+          flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    jax.config.update("jax_enable_x64", True)
+    if args.full:
+        run(n0=256, capacity=4096, inserts=256, evicts=64, D=5)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

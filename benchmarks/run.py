@@ -24,8 +24,8 @@ def main() -> None:
                                                   "results.json"))
     args = ap.parse_args()
 
-    from . import backend_ablation, fig5_prediction, fig6_bayesopt, \
-        fused_sweep, streaming_updates, table1_complexity
+    from . import backend_ablation, capacity_streaming, fig5_prediction, \
+        fig6_bayesopt, fused_sweep, streaming_updates, table1_complexity
 
     rows: list[dict] = []
     print("== Fig 5: prediction RMSE/time vs n ==", flush=True)
@@ -65,6 +65,18 @@ def main() -> None:
         reps=3 if args.full else 2, out_rows=streaming_rows)
     rows += streaming_rows
 
+    print("== Capacity streaming: zero-retrace inserts + bounded-memory "
+          "evict ==", flush=True)
+    capacity_rows: list[dict] = []
+    if args.full:
+        capacity_streaming.run(n0=256, capacity=4096, inserts=256, evicts=64,
+                               D=5, out_rows=capacity_rows)
+    else:
+        capacity_streaming.run(n0=32, capacity=512, inserts=256, evicts=32,
+                               D=2, baseline_inserts=8,
+                               out_rows=capacity_rows)
+    rows += capacity_rows
+
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {len(rows)} rows to {args.out}", flush=True)
@@ -88,6 +100,13 @@ def main() -> None:
     with open(fused_out, "w") as f:
         json.dump(fused_rows, f, indent=1)
     print(f"wrote {len(fused_rows)} rows to {fused_out}", flush=True)
+
+    # retrace/memory artifact for the capacity-padded streaming path (PR 5
+    # acceptance: <= 2 insert-step compilations across a 256-insert stream)
+    cap_out = os.path.join(os.path.dirname(args.out), "BENCH_capacity.json")
+    with open(cap_out, "w") as f:
+        json.dump(capacity_rows, f, indent=1)
+    print(f"wrote {len(capacity_rows)} rows to {cap_out}", flush=True)
 
 
 if __name__ == "__main__":

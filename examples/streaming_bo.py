@@ -6,7 +6,9 @@ Drives the Sec. 6 serving story end to end: a ``GPServeEngine`` holds the
 posterior; each round interleaves a batch of concurrent acquisition-ascent
 requests with posterior mean/variance probe queries (all served by the same
 batched jit'd ticks), evaluates the winning proposal, and streams the new
-observation in with an O(q)-window ``insert`` instead of a refit. Per-round
+observation in with an in-place O(q)-window ``insert`` (fixed capacity —
+zero recompilation; ``window=64`` bounds memory by evicting the oldest
+point once full) instead of a refit. Per-round
 propose/insert latency is printed; the version counter shows each query the
 posterior snapshot that served it.
 """
@@ -43,8 +45,10 @@ def main():
     cfg = GPConfig(q=0, solver="pcg", solver_iters=40)
     bo = BOConfig(kind="ucb", beta=2.0, ascent_steps=15, n_starts=12)
     gp = fit(cfg, X, Y, jnp.full((D,), 1.0), 0.1)
+    # window=64: bounded-memory sliding mode — past 64 points each insert
+    # evicts the oldest; capacity, memory and compiled steps stay pinned
     engine = GPServeEngine(gp, bounds, batch_slots=bo.n_starts, kind=bo.kind,
-                           beta=bo.beta, lr=bo.lr)
+                           beta=bo.beta, lr=bo.lr, window=64)
 
     key = jax.random.PRNGKey(0)
     probes = jnp.asarray(rng.uniform(-2.0, 2.0, (4, D)))
@@ -53,21 +57,21 @@ def main():
         # concurrent posterior probes ride along with the ascent batch
         probe_qs = [engine.submit(np.asarray(p), kind="mean") for p in probes]
         t0 = time.time()
-        x_new = propose_via_engine(engine, sub, bo, float(jnp.max(engine.gp.Y)))
+        x_new = propose_via_engine(engine, sub, bo, engine.best_y)
         t_prop = time.time() - t0
         y_new = objective(x_new)
         t0 = time.time()
         engine.insert(np.asarray(x_new), y_new)  # staged at the version fence
         engine.run_until_done()  # drains the fence; applies the insert
         t_ins = time.time() - t0
-        best = float(jnp.max(engine.gp.Y))
+        best = engine.best_y
         vers = {q.result["version"] for q in probe_qs}
         print(f"round {t + 1:2d}  y={y_new:+.4f}  best={best:+.4f}  "
-              f"n={engine.gp.n}  version={engine.version}  "
+              f"n={engine.num_points}/{engine.capacity}  version={engine.version}  "
               f"propose={t_prop * 1e3:7.1f}ms  insert={t_ins * 1e3:7.1f}ms  "
               f"probe_versions={sorted(vers)}")
-    print(f"done: best {float(jnp.max(engine.gp.Y)):+.4f} "
-          f"(optimum {float(D):+.4f}) after {engine.gp.n} observations")
+    print(f"done: best {engine.best_y:+.4f} "
+          f"(optimum {float(D):+.4f}) after {engine.num_points} observations")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ from .additive_gp import (  # noqa: F401
     posterior_mean,
     posterior_mean_grad,
     posterior_var,
+    with_capacity,
 )
 from .backfitting import (  # noqa: F401
     DimOps,

@@ -22,16 +22,17 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..masking import mask_rows
 from . import matern as mk
 from .backfitting import DimOps, SolveConfig, solve_mhat, mhat_matvec
 from .band_inverse import variance_band
 from .banded import Banded, add, logdet, matvec, scale, solve, transpose
 from .kernel_packets import gkp_factors, kp_factors, phi_at, phi_grad_at
-from .stochastic import logdet_taylor
+from .stochastic import logdet_taylor, rademacher_rows
 
-__all__ = ["GPConfig", "AdditiveGP", "fit", "posterior_caches",
-           "posterior_mean", "posterior_var", "log_likelihood",
-           "mll_gradients", "fit_hyperparams", "TIE_EPS"]
+__all__ = ["GPConfig", "AdditiveGP", "fit", "with_capacity",
+           "posterior_caches", "posterior_mean", "posterior_var",
+           "log_likelihood", "mll_gradients", "fit_hyperparams", "TIE_EPS"]
 
 # Span-relative separation applied to exactly-tied sorted coordinates (KP
 # construction needs distinct points); streaming inserts reuse it so an
@@ -81,11 +82,20 @@ class GPConfig:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=("X", "Y", "omega", "sigma", "xs", "ops", "B", "Psi", "bY",
-                 "u_sy", "Gband"),
+                 "u_sy", "Gband", "n_active"),
     meta_fields=("config",),
 )
 @dataclasses.dataclass(frozen=True)
 class AdditiveGP:
+    """Fitted additive GP: data, banded factors, posterior caches.
+
+    All row-indexed arrays share one static row count ``n`` — the *capacity*.
+    When ``n_active`` is set (traced int32) only the first ``n_active`` rows
+    are real observations; the tail is padding that every op treats as a
+    decoupled identity block (see ``repro.masking``). ``n_active is
+    None`` means fully active (the legacy unpadded representation).
+    """
+
     X: jax.Array          # (n, D)
     Y: jax.Array          # (n,)
     omega: jax.Array      # (D,)
@@ -98,14 +108,29 @@ class AdditiveGP:
     u_sy: jax.Array       # (D, n) Mhat^{-1} (S Y), original order
     Gband: Banded         # (D, n, 4q+3) band of (A Phi^T)^{-1)
     config: GPConfig
+    n_active: jax.Array | None = None
 
     @property
     def n(self) -> int:
+        """Static row count — the capacity when ``n_active`` is set."""
+        return self.X.shape[0]
+
+    @property
+    def capacity(self) -> int:
         return self.X.shape[0]
 
     @property
     def D(self) -> int:
         return self.X.shape[1]
+
+    def active(self):
+        """Active observation count: a python int when unpadded, the traced
+        ``n_active`` scalar otherwise (usable in jit arithmetic either way)."""
+        return self.n if self.n_active is None else self.n_active
+
+    def num_points(self) -> int:
+        """Concrete active count (host-side; syncs when padded)."""
+        return self.n if self.n_active is None else int(self.n_active)
 
 
 def _build_factors(q: int, omega: jax.Array, xs: jax.Array):
@@ -115,7 +140,8 @@ def _build_factors(q: int, omega: jax.Array, xs: jax.Array):
     return A, Phi, B, Psi
 
 
-def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma) -> AdditiveGP:
+def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma,
+        capacity: int | None = None) -> AdditiveGP:
     """Build all sparse factors and posterior caches — O(n log n).
 
     The banded-algebra backend is resolved here (config "auto" -> concrete
@@ -129,6 +155,13 @@ def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma) -
     the REPRO_FUSED / set_fused process default; the residual "auto" is the
     per-solve shape check (pallas backend + symmetric bands + VMEM fit) in
     ``backfitting._maybe_fused``.
+
+    ``capacity`` (static, >= n) returns a capacity-padded GP: all arrays
+    allocated at ``capacity`` rows with ``n_active = n``. Active-prefix
+    results are identical to the unpadded fit (the padding is fitted
+    unpadded, then padded — bit-for-bit); streaming ``insert``/``evict``
+    then mutate it in place with zero recompilation until the capacity is
+    exhausted.
     """
     from ..kernels import ops as _kops
 
@@ -139,7 +172,83 @@ def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma) -
                    else _kops.get_solve_alg()),
         fused=(config.fused if config.fused != "auto"
                else _kops.get_fused()))
-    return _fit_impl(config, X, Y, omega, sigma)
+    gp = _fit_impl(config, X, Y, omega, sigma)
+    if capacity is not None:
+        gp = with_capacity(gp, capacity)
+    return gp
+
+
+def _pad_rows(x: jax.Array, capacity: int, axis: int) -> jax.Array:
+    """Zero-pad ``x`` to ``capacity`` rows along ``axis``."""
+    n = x.shape[axis]
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, capacity - n)
+    return jnp.pad(x, pad)
+
+
+def _pad_band_rows(b: Banded, capacity: int, n_active) -> Banded:
+    """Pad a Banded to ``capacity`` rows with a decoupled identity tail."""
+    data = _pad_rows(b.data, capacity, axis=-2)
+    n = b.n
+    tail = jnp.arange(capacity) >= n
+    ident = jnp.zeros((capacity, b.width), data.dtype).at[:, b.lo].set(1.0)
+    data = jnp.where(tail[:, None], ident, data)
+    return Banded(data, b.lo, b.hi, n_active)
+
+
+def _pad_perm(idx: jax.Array, capacity: int) -> jax.Array:
+    """Pad permutations (D, n) -> (D, capacity) with identity tails."""
+    D, n = idx.shape
+    tail = jnp.broadcast_to(jnp.arange(n, capacity, dtype=idx.dtype),
+                            (D, capacity - n))
+    return jnp.concatenate([idx, tail], axis=1)
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _with_capacity_impl(gp: AdditiveGP, capacity: int) -> AdditiveGP:
+    na = jnp.asarray(gp.active(), jnp.int32)
+    ops = gp.ops
+    ops_p = DimOps(
+        A=_pad_band_rows(ops.A, capacity, na),
+        Phi=_pad_band_rows(ops.Phi, capacity, na),
+        SAPhi=_pad_band_rows(ops.SAPhi, capacity, na),
+        sort_idx=_pad_perm(ops.sort_idx, capacity),
+        rank_idx=_pad_perm(ops.rank_idx, capacity),
+        sigma2=ops.sigma2, n_active=na)
+    # xs pad values are never read through an active mask; keep them finite
+    # and above the active range so the arrays stay visibly "sorted-ish"
+    span = gp.xs[:, -1:] - gp.xs[:, :1] + 1.0
+    steps = jnp.arange(1, capacity - gp.n + 1, dtype=gp.xs.dtype)
+    xs_tail = gp.xs[:, -1:] + span * steps[None, :]
+    xs_p = jnp.concatenate([gp.xs, xs_tail], axis=1)
+    return AdditiveGP(
+        X=_pad_rows(gp.X, capacity, axis=0), Y=_pad_rows(gp.Y, capacity, 0),
+        omega=gp.omega, sigma=gp.sigma, xs=xs_p, ops=ops_p,
+        B=_pad_band_rows(gp.B, capacity, na),
+        Psi=_pad_band_rows(gp.Psi, capacity, na),
+        bY=_pad_rows(gp.bY, capacity, axis=1),
+        u_sy=_pad_rows(gp.u_sy, capacity, axis=1),
+        Gband=_pad_band_rows(gp.Gband, capacity, na),
+        config=gp.config, n_active=na)
+
+
+def with_capacity(gp: AdditiveGP, capacity: int) -> AdditiveGP:
+    """Re-home a fitted GP into a ``capacity``-row padded allocation.
+
+    Pure array padding — no re-solve: active rows are copied bit-for-bit,
+    band tails become decoupled identity rows, state tails zeros, permutation
+    tails the identity. Works on unpadded and already-padded GPs alike
+    (growing a full GP to the next capacity tier). O(capacity) and jitted
+    per (old capacity, new capacity) pair.
+    """
+    capacity = int(capacity)
+    if capacity < gp.n:
+        raise ValueError(
+            f"capacity {capacity} < current allocation {gp.n} "
+            "(capacity shrinking is not supported; evict instead)")
+    if capacity == gp.n and gp.n_active is not None:
+        return gp
+    return _with_capacity_impl(gp, capacity)
 
 
 def posterior_caches(config: GPConfig, ops: DimOps, Y: jax.Array,
@@ -197,10 +306,11 @@ def _fit_impl(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array,
 def _phi_windows(gp: AdditiveGP, Xq: jax.Array):
     """Sparse phi_d(x*_d) for all dims/queries: rows, vals (D, m, 2q+2)."""
     q = gp.config.q
+    na = gp.n_active  # shared scalar; closed over, not vmapped
 
     def per_dim(om, x_sorted, a_data, xq_d):
         A_d = Banded(a_data, q + 1, q + 1)
-        return phi_at(q, om, x_sorted, A_d, xq_d)
+        return phi_at(q, om, x_sorted, A_d, xq_d, n_active=na)
 
     return jax.vmap(per_dim)(gp.omega, gp.xs, gp.ops.A.data, Xq.T)
 
@@ -265,16 +375,38 @@ def _r_apply(gp: AdditiveGP, v: jax.Array, cfg: SolveConfig) -> jax.Array:
     return v / gp.sigma**2 - jnp.sum(z, axis=0) / gp.sigma**4
 
 
+def _probe_block(gp: AdditiveGP, key: jax.Array, Q: int) -> jax.Array:
+    """Row-keyed masked Rademacher probes (D, n, Q).
+
+    Row i depends only on (key, i), so a capacity-padded GP and an unpadded
+    GP draw the *same* probe values on the active prefix — the stochastic
+    estimators are invariant to the padding, not just unbiased under it.
+    """
+    v = rademacher_rows(key, gp.n, (gp.D, Q), dtype=gp.Y.dtype)
+    return mask_rows(v.transpose(1, 0, 2), gp.n_active, axis=1)
+
+
 def _logdet_mhat(gp: AdditiveGP, key: jax.Array) -> jax.Array:
-    """log|Mhat| — paper Alg 8 ("taylor") or preconditioned ("taylor_pc")."""
+    """log|Mhat| — paper Alg 8 ("taylor") or preconditioned ("taylor_pc").
+
+    Under capacity padding the operators act as the identity on the padded
+    tail (canonical factors + masked probes), so the estimates target the
+    active block; the ``dim * log(lam)`` normalization uses the *active*
+    dimension count.
+    """
     c = gp.config
     n, D = gp.n, gp.D
+    dim = D * gp.active()
+    k1, k2 = jax.random.split(key)
+    pm_v0 = _probe_block(gp, k1, 4)  # power_method's default restarts
+    probe_v = _probe_block(gp, k2, c.logdet_probes)
     if c.logdet_method == "taylor":
         mv = lambda u: mhat_matvec(gp.ops, u, pivot=c.pivot, backend=c.backend,
                                    alg=c.solve_alg)
         return logdet_taylor(
-            mv, D * n, (D, n), key, order=c.logdet_order, probes=c.logdet_probes,
-            power_iters=c.power_iters, dtype=gp.Y.dtype,
+            mv, dim, (D, n), key, order=c.logdet_order, probes=c.logdet_probes,
+            power_iters=c.power_iters, dtype=gp.Y.dtype, probe_v=probe_v,
+            power_v0=pm_v0,
         )
     # taylor_pc: C = Khat^{-1} + sigma^{-2} I (block diag). log|C| is exact:
     # log|K_d^{-1} + s^{-2} I| = log|A_d + s^{-2} Phi_d| - log|Phi_d|.
@@ -287,23 +419,32 @@ def _logdet_mhat(gp: AdditiveGP, key: jax.Array) -> jax.Array:
                     alg=c.solve_alg),
         pivot=c.pivot, backend=c.backend, alg=c.solve_alg)
     ld_n = logdet_taylor(
-        nv, D * n, (D, n), key, order=c.logdet_order, probes=c.logdet_probes,
-        power_iters=c.power_iters, dtype=gp.Y.dtype,
+        nv, dim, (D, n), key, order=c.logdet_order, probes=c.logdet_probes,
+        power_iters=c.power_iters, dtype=gp.Y.dtype, probe_v=probe_v,
+        power_v0=pm_v0,
     )
     return ld_c + ld_n
 
 
 @jax.jit
 def log_likelihood(gp: AdditiveGP, key: jax.Array) -> jax.Array:
-    """Eq. (14): exact quadratic term + stochastic log-det (Algs 6-8)."""
-    n = gp.n
-    quad = gp.Y @ gp.Y / gp.sigma**2 - (gp.Y @ jnp.sum(gp.u_sy, axis=0)) / gp.sigma**4
+    """Eq. (14): exact quadratic term + stochastic log-det (Algs 6-8).
+
+    Capacity padding: the quadratic term masks the (potentially arbitrary)
+    padded tails, the banded log-dets pick up exactly 0 from the identity
+    tails, and the size-dependent constants use the active count.
+    """
+    na = gp.active()
+    Ym = mask_rows(gp.Y, gp.n_active, axis=0)
+    um = mask_rows(jnp.sum(gp.u_sy, axis=0), gp.n_active, axis=0)
+    quad = Ym @ Ym / gp.sigma**2 - (Ym @ um) / gp.sigma**4
     ld_mhat = _logdet_mhat(gp, key)
     be, pv, sa = gp.config.backend, gp.config.pivot, gp.config.solve_alg
     ld_k = jnp.sum(logdet(gp.ops.Phi, pivot=pv, backend=be, alg=sa)) - jnp.sum(
         logdet(gp.ops.A, pivot=pv, backend=be, alg=sa))
     return -0.5 * (
-        quad + ld_mhat + ld_k + 2.0 * n * jnp.log(gp.sigma) + n * jnp.log(2.0 * jnp.pi)
+        quad + ld_mhat + ld_k + 2.0 * na * jnp.log(gp.sigma)
+        + na * jnp.log(2.0 * jnp.pi)
     )
 
 
@@ -320,17 +461,27 @@ def _dk_apply(gp: AdditiveGP, v: jax.Array) -> jax.Array:
 
 @jax.jit
 def mll_gradients(gp: AdditiveGP, key: jax.Array):
-    """(d MLL / d omega (D,), d MLL / d sigma) — Eq. (15) + Hutchinson traces."""
+    """(d MLL / d omega (D,), d MLL / d sigma) — Eq. (15) + Hutchinson traces.
+
+    Capacity padding: masked row-keyed probes and a masked ``u = R Y`` keep
+    every trace/quadratic estimate on the active block; ``tr R``'s exact
+    ``n / sigma^2`` part uses the active count.
+    """
     c = gp.config
     cfg = c.solve_cfg()
     n, D, Q = gp.n, gp.D, c.trace_probes
+    na = gp.active()
     # u = R Y (exact, reusing the fitted Mhat^{-1} S Y)
-    u = gp.Y / gp.sigma**2 - jnp.sum(gp.u_sy, axis=0) / gp.sigma**4
+    u = mask_rows(gp.Y / gp.sigma**2 - jnp.sum(gp.u_sy, axis=0) / gp.sigma**4,
+                  gp.n_active, axis=0)
     gu = _dk_apply(gp, u[:, None])[..., 0]  # (D, n)
     term1 = gu @ u  # (D,)
 
-    # Hutchinson trace of R dK_d (Eq. (24)), batched over probes AND dims
-    V = jax.random.rademacher(key, (n, Q), dtype=gp.Y.dtype)
+    # Hutchinson trace of R dK_d (Eq. (24)), batched over probes AND dims;
+    # probes are row-keyed (capacity-invariant draw) and masked to the
+    # active prefix
+    V = mask_rows(rademacher_rows(key, n, (Q,), dtype=gp.Y.dtype),
+                  gp.n_active, axis=0)
     Wd = _dk_apply(gp, V)  # (D, n, Q)
     first = jnp.einsum("nq,dnq->dq", V, Wd) / gp.sigma**2
     rhs = jnp.broadcast_to(
@@ -345,7 +496,7 @@ def mll_gradients(gp: AdditiveGP, key: jax.Array):
     # sigma gradient: dMLL/dsigma^2 = 0.5 (||u||^2 - tr R), tr R via same probes
     zs = solve_mhat(gp.ops, jnp.broadcast_to(V[None], (D, n, Q)), cfg)
     quadS = jnp.einsum("nq,nq->q", V, jnp.sum(zs, axis=0))
-    tr_r = n / gp.sigma**2 - jnp.mean(quadS) / gp.sigma**4
+    tr_r = na / gp.sigma**2 - jnp.mean(quadS) / gp.sigma**4
     grad_sigma2 = 0.5 * (u @ u - tr_r)
     return grad_omega, grad_sigma2 * 2.0 * gp.sigma
 
@@ -397,10 +548,11 @@ def fit_hyperparams(
 def posterior_mean_grad(gp: AdditiveGP, Xq: jax.Array) -> jax.Array:
     """grad_x mu(x*) (m, D) — Eq. (30) left, via sparse KP derivative windows."""
     q = gp.config.q
+    na = gp.n_active
 
     def per_dim(om, x_sorted, a_data, xq_d, b_d):
         A_d = Banded(a_data, q + 1, q + 1)
-        rows, dvals, _ = phi_grad_at(q, om, x_sorted, A_d, xq_d)
+        rows, dvals, _ = phi_grad_at(q, om, x_sorted, A_d, xq_d, n_active=na)
         bwin = jnp.take_along_axis(b_d[None, :], rows.reshape(1, -1), axis=1)
         bwin = bwin.reshape(rows.shape)
         return jnp.sum(dvals * bwin, axis=-1)

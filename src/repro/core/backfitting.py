@@ -30,6 +30,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..masking import canonical_perm, mask_rows
 from .banded import Banded, matvec, solve
 
 __all__ = ["SolveConfig", "SolveInfo", "DimOps", "solve_mhat", "mhat_matvec"]
@@ -60,11 +61,15 @@ class SolveInfo(NamedTuple):
     """Diagnostics from ``solve_mhat(..., return_info=True)``."""
 
     iters: jax.Array  # iterations executed (== cfg.iters unless tol fired)
+    # active system size the solve ran over (== the static n when unpadded;
+    # the traced active prefix length under capacity padding)
+    n_active: jax.Array = None
 
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("A", "Phi", "SAPhi", "sort_idx", "rank_idx", "sigma2"),
+    data_fields=("A", "Phi", "SAPhi", "sort_idx", "rank_idx", "sigma2",
+                 "n_active"),
     meta_fields=(),
 )
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +81,10 @@ class DimOps:
     sort_idx:  (D, n) int — xs[d] = X[sort_idx[d], d]
     rank_idx:  (D, n) int — inverse permutation
     sigma2:    scalar observation-noise variance
+    n_active:  traced active length under capacity padding (None = all n
+               rows are real points). The factor Bandeds carry the same
+               value; here it canonicalizes the permutations (identity
+               tails) and keeps solver state exactly zero past the prefix.
     """
 
     A: Banded
@@ -84,6 +93,7 @@ class DimOps:
     sort_idx: jax.Array
     rank_idx: jax.Array
     sigma2: jax.Array
+    n_active: jax.Array | None = None
 
     @property
     def D(self) -> int:
@@ -94,13 +104,22 @@ class DimOps:
         return self.sort_idx.shape[1]
 
     def to_sorted(self, u: jax.Array) -> jax.Array:
-        """(D, n, B) original order -> sorted order per dim."""
-        idx = self.sort_idx[..., None] if u.ndim == 3 else self.sort_idx
-        return jnp.take_along_axis(u, jnp.broadcast_to(idx, u.shape), axis=1)
+        """(D, n, B) original order -> sorted order per dim.
+
+        Under capacity padding the gather uses canonical (identity-tail)
+        permutations and re-zeros the tail, so poisoned pad slots in either
+        the indices or the state can never leak into reductions.
+        """
+        idx = canonical_perm(self.sort_idx, self.n_active)
+        idx = idx[..., None] if u.ndim == 3 else idx
+        out = jnp.take_along_axis(u, jnp.broadcast_to(idx, u.shape), axis=1)
+        return mask_rows(out, self.n_active, axis=1)
 
     def from_sorted(self, u: jax.Array) -> jax.Array:
-        idx = self.rank_idx[..., None] if u.ndim == 3 else self.rank_idx
-        return jnp.take_along_axis(u, jnp.broadcast_to(idx, u.shape), axis=1)
+        idx = canonical_perm(self.rank_idx, self.n_active)
+        idx = idx[..., None] if u.ndim == 3 else idx
+        out = jnp.take_along_axis(u, jnp.broadcast_to(idx, u.shape), axis=1)
+        return mask_rows(out, self.n_active, axis=1)
 
     def khat_inv_mv(self, u: jax.Array, pivot: bool = False,
                     backend: str | None = None,
@@ -171,7 +190,7 @@ def _maybe_fused(ops: DimOps, v: jax.Array, cfg: SolveConfig):
         ops.Phi.data, ops.SAPhi.data, ops.sort_idx, ops.rank_idx, ops.sigma2,
         w_p=ops.Phi.lo, w_s=ops.SAPhi.lo,
         a=ops.A.data if need_a else None, w_a=ops.A.lo, pivot=cfg.pivot,
-        interpret=not _kops.on_tpu(), dtype=v.dtype)
+        interpret=not _kops.on_tpu(), dtype=v.dtype, n_active=ops.n_active)
 
 
 def _gauss_seidel(ops: DimOps, v: jax.Array, cfg: SolveConfig,
@@ -190,15 +209,17 @@ def _gauss_seidel(ops: DimOps, v: jax.Array, cfg: SolveConfig,
 
     def solve_one_dim(d, r_d):
         # single-dim block solve (r_d: (n, B))
-        saphi = Banded(ops.SAPhi.data[d], ops.SAPhi.lo, ops.SAPhi.hi)
-        phi = Banded(ops.Phi.data[d], ops.Phi.lo, ops.Phi.hi)
-        idx = ops.sort_idx[d][:, None]
+        na = ops.n_active
+        saphi = Banded(ops.SAPhi.data[d], ops.SAPhi.lo, ops.SAPhi.hi, na)
+        phi = Banded(ops.Phi.data[d], ops.Phi.lo, ops.Phi.hi, na)
+        idx = canonical_perm(ops.sort_idx[d], na)[:, None]
         rs = jnp.take_along_axis(r_d, jnp.broadcast_to(idx, r_d.shape), axis=0)
         w = ops.sigma2 * solve(saphi, matvec(phi, rs, backend=cfg.backend),
                                pivot=cfg.pivot, backend=cfg.backend,
                                alg=cfg.alg)
-        ridx = ops.rank_idx[d][:, None]
-        return jnp.take_along_axis(w, jnp.broadcast_to(ridx, w.shape), axis=0)
+        ridx = canonical_perm(ops.rank_idx[d], na)[:, None]
+        out = jnp.take_along_axis(w, jnp.broadcast_to(ridx, w.shape), axis=0)
+        return mask_rows(out, na, axis=0)
 
     def sweep(_, vt):
         total = jnp.sum(vt, axis=0)
@@ -328,9 +349,13 @@ def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig(),
     # iterate in the dtype the banded ops produce (mixed-dtype RHS would
     # otherwise promote mid-iteration and break the loop carry)
     dtype = jnp.result_type(v, ops.SAPhi.data)
-    v = v.astype(dtype)
+    # under capacity padding zero the state tails up front: every iterate
+    # then stays exactly zero past the active prefix, so the PCG inner
+    # products / tol residual norms are computed over the active prefix only
+    # (a padded tail can never dilute them)
+    v = mask_rows(v.astype(dtype), ops.n_active, axis=1)
     if x0 is not None:
-        x0 = x0.astype(dtype)
+        x0 = mask_rows(x0.astype(dtype), ops.n_active, axis=1)
     iters_used = jnp.asarray(cfg.iters, jnp.int32)
     if cfg.method == "gauss_seidel":
         out = _gauss_seidel(ops, v, cfg, x0)
@@ -341,4 +366,8 @@ def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig(),
     else:
         raise ValueError(f"unknown method {cfg.method!r}")
     out = out[..., 0] if vec_in else out
-    return (out, SolveInfo(iters=iters_used)) if return_info else out
+    if not return_info:
+        return out
+    n_active = jnp.asarray(
+        ops.n if ops.n_active is None else ops.n_active, jnp.int32)
+    return out, SolveInfo(iters=iters_used, n_active=n_active)

@@ -21,6 +21,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..masking import canonical_band
 from .banded import Banded, band_band_matmul, mask_band, transpose
 
 __all__ = ["inverse_band", "variance_band"]
@@ -148,12 +149,23 @@ def inverse_band_single(H: Banded, hw: int) -> Banded:
 
 
 def inverse_band(H: Banded, hw: int) -> Banded:
-    """Band of H^{-1}; batched over leading dims of H.data."""
+    """Band of H^{-1}; batched over leading dims of H.data.
+
+    Capacity padding: when ``H.n_active`` is set the data is canonicalized
+    to ``blockdiag(H_active, I)`` first, so the RGF sweep — a direct method —
+    returns ``blockdiag(G_active, I)`` exactly: active band rows match the
+    unpadded inverse and tail rows are identity rows.
+    """
+    n_active = H.n_active
+    if n_active is not None:
+        H = H.canonical()
     if H.data.ndim == 2:
-        return inverse_band_single(H, hw)
+        out_b = inverse_band_single(Banded(H.data, H.lo, H.hi), hw)
+        return Banded(out_b.data, hw, hw, n_active)
     flat = H.data.reshape((-1,) + H.data.shape[-2:])
     out = jax.vmap(lambda d: inverse_band_single(Banded(d, H.lo, H.hi), hw).data)(flat)
-    return Banded(out.reshape(H.data.shape[:-2] + out.shape[-2:]), hw, hw)
+    return Banded(out.reshape(H.data.shape[:-2] + out.shape[-2:]), hw, hw,
+                  n_active)
 
 
 def variance_band(A: Banded, Phi: Banded,

@@ -15,6 +15,14 @@ points dispatch through ``repro.kernels.ops`` (backend = "jax" scan reference
 vs "pallas" kernels, see that module for the selection rules); the
 ``_*_scan`` functions below are the jax-backend implementations the
 dispatcher routes back to.
+
+Capacity padding: a ``Banded`` may carry a *traced* ``n_active`` alongside
+its static row count (the ``capacity``). Rows ``>= n_active`` are padding;
+every dispatched op canonicalizes them to decoupled identity rows (and the
+matching state rows to zeros) before computing, so solves/logdets/matvecs
+are exact on the active prefix and exact no-ops on the tail — one static
+shape serves every active length, which is what keeps streaming
+insert/evict free of retraces (see ``repro.masking``).
 """
 from __future__ import annotations
 
@@ -23,6 +31,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from ..masking import canonical_band
 
 __all__ = [
     "Banded",
@@ -41,19 +51,33 @@ __all__ = [
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("data",),
+    data_fields=("data", "n_active"),
     meta_fields=("lo", "hi"),
 )
 @dataclasses.dataclass(frozen=True)
 class Banded:
-    """Banded matrix; ``data`` has shape ``(..., n, lo + hi + 1)``."""
+    """Banded matrix; ``data`` has shape ``(..., n, lo + hi + 1)``.
+
+    ``n_active`` (optional, traced) marks the capacity-padded representation:
+    the matrix is logically ``n_active x n_active`` stored in a static
+    ``capacity = data.shape[-2]`` allocation. Rows ``>= n_active`` are
+    padding; the dispatched ops canonicalize them to decoupled identity rows
+    before computing, so results on the active prefix are exact regardless
+    of what the padding holds. ``None`` = fully active (unpadded).
+    """
 
     data: jax.Array
     lo: int
     hi: int
+    n_active: jax.Array | None = None
 
     @property
     def n(self) -> int:
+        """Static row count — the capacity when ``n_active`` is set."""
+        return self.data.shape[-2]
+
+    @property
+    def capacity(self) -> int:
         return self.data.shape[-2]
 
     @property
@@ -67,6 +91,14 @@ class Banded:
         if shape is not None:
             assert shape[-1] == self.lo + self.hi + 1, (shape, self.lo, self.hi)
 
+    def canonical(self) -> "Banded":
+        """Identity-tail canonical form (no-op when fully active)."""
+        if self.n_active is None:
+            return self
+        return Banded(canonical_band(self.data, self.lo, self.hi,
+                                     self.n_active),
+                      self.lo, self.hi, self.n_active)
+
 
 def _band_mask(n: int, lo: int, hi: int) -> jax.Array:
     """Mask of in-range band entries, shape (n, lo+hi+1)."""
@@ -76,9 +108,14 @@ def _band_mask(n: int, lo: int, hi: int) -> jax.Array:
     return (j >= 0) & (j < n)
 
 
+def _join_active(a: Banded, b: Banded):
+    """The shared ``n_active`` of two operands (either may be unpadded)."""
+    return a.n_active if a.n_active is not None else b.n_active
+
+
 def mask_band(b: Banded) -> Banded:
     mask = _band_mask(b.n, b.lo, b.hi)
-    return Banded(b.data * mask, b.lo, b.hi)
+    return Banded(b.data * mask, b.lo, b.hi, b.n_active)
 
 
 def from_dense(mat: jax.Array, lo: int, hi: int) -> Banded:
@@ -125,7 +162,8 @@ def matvec(b: Banded, x: jax.Array, *, backend: str | None = None) -> jax.Array:
     """
     from ..kernels import ops as _ops
 
-    return _ops.banded_matvec(b.data, x, b.lo, b.hi, backend=backend)
+    return _ops.banded_matvec(b.data, x, b.lo, b.hi, backend=backend,
+                              n_active=b.n_active)
 
 
 def _matvec_scan(b: Banded, x: jax.Array) -> jax.Array:
@@ -154,16 +192,17 @@ def transpose(b: Banded) -> Banded:
         col = _shift(b.data[..., :, b.lo - m], m)
         cols.append(col)
     data = jnp.stack(cols, axis=-1)
-    return mask_band(Banded(data, b.hi, b.lo))
+    return mask_band(Banded(data, b.hi, b.lo, b.n_active))
 
 
 def band_band_matmul(a: Banded, b: Banded, *, backend: str | None = None) -> Banded:
     """C = A @ B in band form; dispatches through ``repro.kernels.ops``."""
     from ..kernels import ops as _ops
 
+    n_active = _join_active(a, b)
     data = _ops.band_band_matmul(a.data, b.data, a.lo, a.hi, b.lo, b.hi,
-                                 backend=backend)
-    return Banded(data, a.lo + b.lo, a.hi + b.hi)
+                                 backend=backend, n_active=n_active)
+    return Banded(data, a.lo + b.lo, a.hi + b.hi, n_active)
 
 
 def _band_band_matmul_scan(a: Banded, b: Banded) -> Banded:
@@ -183,18 +222,23 @@ def _band_band_matmul_scan(a: Banded, b: Banded) -> Banded:
 
 
 def add(a: Banded, b: Banded) -> Banded:
-    """A + B in band form (result bandwidths are the max of the two)."""
+    """A + B in band form (result bandwidths are the max of the two).
+
+    On capacity-padded operands the identity tails sum to ``2 I``; the result
+    carries ``n_active``, so the next dispatched op re-canonicalizes the tail
+    — derived bands never need manual tail upkeep.
+    """
     lo, hi = max(a.lo, b.lo), max(a.hi, b.hi)
     n = a.n
     batch = jnp.broadcast_shapes(a.data.shape[:-2], b.data.shape[:-2])
     out = jnp.zeros(batch + (n, lo + hi + 1), jnp.result_type(a.data, b.data))
     out = out.at[..., :, lo - a.lo : lo + a.hi + 1].add(a.data)
     out = out.at[..., :, lo - b.lo : lo + b.hi + 1].add(b.data)
-    return Banded(out, lo, hi)
+    return Banded(out, lo, hi, _join_active(a, b))
 
 
 def scale(a: Banded, s) -> Banded:
-    return Banded(a.data * s, a.lo, a.hi)
+    return Banded(a.data * s, a.lo, a.hi, a.n_active)
 
 
 # ---------------------------------------------------------------------------
@@ -396,7 +440,7 @@ def solve(b: Banded, rhs: jax.Array, pivot: bool = True,
     from ..kernels import ops as _ops
 
     return _ops.banded_solve(b.data, rhs, b.lo, b.hi, pivot=pivot,
-                             backend=backend, alg=alg)
+                             backend=backend, alg=alg, n_active=b.n_active)
 
 
 def _solve_scan(b: Banded, rhs: jax.Array, pivot: bool = True) -> jax.Array:
@@ -434,7 +478,7 @@ def logdet(b: Banded, pivot: bool = True,
     from ..kernels import ops as _ops
 
     return _ops.banded_logdet(b.data, b.lo, b.hi, pivot=pivot,
-                              backend=backend, alg=alg)
+                              backend=backend, alg=alg, n_active=b.n_active)
 
 
 def _logdet_scan(b: Banded) -> jax.Array:

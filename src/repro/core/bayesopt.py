@@ -18,6 +18,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .additive_gp import AdditiveGP, GPConfig, fit, fit_hyperparams, _phi_windows
 from .backfitting import solve_mhat
@@ -63,10 +64,11 @@ class BOConfig:
 
 def _grad_windows(gp: AdditiveGP, Xq: jax.Array):
     q = gp.config.q
+    na = gp.n_active
 
     def per_dim(om, x_sorted, a_data, xq_d):
         A_d = Banded(a_data, q + 1, q + 1)
-        return phi_grad_at(q, om, x_sorted, A_d, xq_d)
+        return phi_grad_at(q, om, x_sorted, A_d, xq_d, n_active=na)
 
     return jax.vmap(per_dim)(gp.omega, gp.xs, gp.ops.A.data, Xq.T)
 
@@ -216,7 +218,8 @@ def bayes_opt_loop(
     if bo_config.use_engine:
         engine = GPServeEngine(gp, bounds, batch_slots=bo_config.n_starts,
                                kind=bo_config.kind, beta=bo_config.beta,
-                               lr=bo_config.lr)
+                               lr=bo_config.lr,
+                               insert_iters=bo_config.insert_iters or None)
     for t in range(budget):
         key, k1, k2 = jax.random.split(key, 3)
         if bo_config.refit_every and t % bo_config.refit_every == 0 and t > 0:
@@ -236,12 +239,19 @@ def bayes_opt_loop(
         X = jnp.concatenate([X, x_new[None]], axis=0)
         Y = jnp.concatenate([Y, jnp.asarray([y_new], Y.dtype)])
         if bo_config.incremental:
-            gp = stream_insert(gp, x_new, jnp.asarray(y_new, Y.dtype),
-                               iters=bo_config.insert_iters or None)
+            if engine is not None:
+                # in-place capacity insert behind the engine fence: one
+                # compiled step per capacity tier, no retrace per round
+                engine.insert(np.asarray(x_new), float(y_new))
+                engine.step()  # drain/apply so engine.gp is current
+                gp = engine.gp
+            else:
+                gp = stream_insert(gp, x_new, jnp.asarray(y_new, Y.dtype),
+                                   iters=bo_config.insert_iters or None)
         else:
             gp = fit(gp_config, X, Y, omega, sigma)
-        if engine is not None:
-            engine.set_posterior(gp)
+            if engine is not None:
+                engine.set_posterior(gp)
         hist["x"].append(x_new)
         hist["y"].append(float(y_new))
         hist["best"].append(float(jnp.max(Y)))

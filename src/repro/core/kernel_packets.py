@@ -37,18 +37,20 @@ __all__ = [
 ]
 
 
-def _kp_row_inputs(n: int, q: int, rows: jax.Array):
+def _kp_row_inputs(n, q: int, rows: jax.Array, clip_n: int | None = None):
     """Per-row window gather indices + Algorithm-2 category for ``rows``.
 
     Returns (window indices (r, 2q+3), validity, primary sign, aux sign,
     number of valid auxiliary equations) — everything ``_kp_build_row`` needs,
     for an arbitrary subset of row indices (streaming updates rebuild only the
-    O(q) window around an inserted point).
+    O(q) window around an inserted point). ``n`` may be a *traced* active
+    length (capacity padding) — it only enters comparisons; ``clip_n`` is the
+    static allocation size to clip gather indices against (defaults to n).
     """
     t = jnp.arange(-(q + 1), q + 2)[None, :]
     j = rows[:, None] + t
     valid = (j >= 0) & (j < n)
-    j_idx = jnp.clip(j, 0, n - 1)
+    j_idx = jnp.clip(j, 0, (n if clip_n is None else clip_n) - 1)
     # row category: number of *valid* auxiliary equations and signs
     # left rows (i <= q): primary sign +1, aux sign -1, n_aux = i
     # central: both signs, all q+1 "aux" rows are the delta=-1 primary set
@@ -113,16 +115,21 @@ def _kp_build_row(q: int, omega, xrow, vrow, psign, asign, naux):
 
 
 @partial(jax.jit, static_argnums=0)
-def kp_coefficient_rows(q: int, omega, xs: jax.Array, rows: jax.Array) -> jax.Array:
+def kp_coefficient_rows(q: int, omega, xs: jax.Array, rows: jax.Array,
+                        n_active=None) -> jax.Array:
     """KP coefficient rows (len(rows), 2q+3) for a subset of row indices.
 
     Each row is computed exactly as ``kp_coefficients`` would for the full
     matrix — streaming inserts use this to rebuild only the O(q) window of
-    rows whose point windows (or boundary category) changed.
+    rows whose point windows (or boundary category) changed. Under capacity
+    padding ``n_active`` (traced) is the logical matrix size: validity and
+    the Algorithm-2 boundary category use it, and padded-tail ``xs`` values
+    are masked out of the window math (they may hold anything).
     """
     n = xs.shape[0]
-    j_idx, valid, psign, asign, naux = _kp_row_inputs(n, q, rows)
-    xw = xs[j_idx]
+    na = n if n_active is None else n_active
+    j_idx, valid, psign, asign, naux = _kp_row_inputs(na, q, rows, clip_n=n)
+    xw = jnp.where(valid, xs[j_idx], 0.0)
     return jax.vmap(partial(_kp_build_row, q, omega))(xw, valid, psign, asign,
                                                       naux)
 
@@ -142,23 +149,27 @@ def kp_coefficients(q: int, omega, xs: jax.Array) -> Banded:
 
 
 def gram_band_rows(kfun, xs: jax.Array, a_rows: jax.Array, rows: jax.Array,
-                   loA: int, hiA: int, hw: int) -> jax.Array:
+                   loA: int, hiA: int, hw: int, n_active=None) -> jax.Array:
     """Rows of the band of Phi = A @ K restricted to ``rows``.
 
     ``a_rows`` are the matching coefficient rows of A (len(rows), loA+hiA+1);
     K[i, j] = kfun(xs[i], xs[j]). Row i only touches xs within
-    i ± (max(loA, hiA) + hw), so a window rebuild is O(q) per row.
+    i ± (max(loA, hiA) + hw), so a window rebuild is O(q) per row. Under
+    capacity padding ``n_active`` (traced) bounds validity; out-of-range
+    window points are zeroed *before* ``kfun`` so poisoned pad slots cannot
+    produce NaNs that survive the mask.
     """
     n = xs.shape[0]
+    na = n if n_active is None else n_active
     t = jnp.arange(-loA, hiA + 1)[None, :]
     j = rows[:, None] + t
-    vv = (j >= 0) & (j < n)
+    vv = (j >= 0) & (j < na)
     jj = jnp.clip(j, 0, n - 1)
-    xw = xs[jj]  # (r, wA) points of each window
+    xw = jnp.where(vv, xs[jj], 0.0)  # (r, wA) points of each window
     m = jnp.arange(-hw, hw + 1)[None, :]
     jm_raw = rows[:, None] + m
-    vm = (jm_raw >= 0) & (jm_raw < n)
-    xm = xs[jnp.clip(jm_raw, 0, n - 1)]  # (r, wPhi) evaluation points
+    vm = (jm_raw >= 0) & (jm_raw < na)
+    xm = jnp.where(vm, xs[jnp.clip(jm_raw, 0, n - 1)], 0.0)  # (r, wPhi)
     # phi[i, m] = sum_t A[i,t] k(x_{i+m}, x_{i+t})
     kv = kfun(xm[:, :, None], xw[:, None, :])  # (r, wPhi, wA)
     kv = kv * vv[:, None, :]
@@ -194,59 +205,80 @@ def gkp_factors(q: int, omega, xs: jax.Array):
     return B, Psi
 
 
-def query_window_start(xs: jax.Array, xq: jax.Array) -> jax.Array:
+def query_window_start(xs: jax.Array, xq: jax.Array,
+                       n_active=None) -> jax.Array:
     """First KP row index with x* in its support: start = searchsorted - (q+1)...
 
-    Returned *unclipped*; callers combine with validity masks. O(log n).
+    Returned *unclipped*; callers combine with validity masks. O(log n)
+    unpadded. Under capacity padding (traced ``n_active``) the tail of ``xs``
+    holds arbitrary values, so the insertion point is the masked count of
+    active entries below ``xq`` — O(capacity) per query, identical to
+    ``searchsorted(side="left")`` on the active prefix.
     """
-    return jnp.searchsorted(xs, xq, side="left")
+    if n_active is None:
+        return jnp.searchsorted(xs, xq, side="left")
+    j = jnp.arange(xs.shape[0])
+    lt = (xs < xq[..., None]) & (j < n_active)
+    return jnp.sum(lt, axis=-1)
 
 
 @partial(jax.jit, static_argnums=0)
-def phi_at(q: int, omega, xs: jax.Array, A: Banded, xq: jax.Array):
+def phi_at(q: int, omega, xs: jax.Array, A: Banded, xq: jax.Array,
+           n_active=None):
     """Sparse KP vector phi(x*) = A k(X, x*): values + row indices.
 
     Returns (rows (..., 2q+2), vals (..., 2q+2), valid mask). At most
-    2*nu+1 = 2q+2 consecutive rows are non-zero (Sec. 5.2).
+    2*nu+1 = 2q+2 consecutive rows are non-zero (Sec. 5.2). Under capacity
+    padding (traced ``n_active``, defaulting to ``A.n_active``) validity is
+    bounded by the active prefix and padded-tail points never enter the
+    kernel evaluations.
     """
+    if n_active is None:
+        n_active = A.n_active
     n = xs.shape[0]
-    t = query_window_start(xs, xq)  # (...,)
-    rows = t[..., None] + jnp.arange(-(q + 1), q + 1)[None if t.ndim == 0 else ...,]
+    na = n if n_active is None else n_active
+    t = query_window_start(xs, xq, n_active=n_active)
     if t.ndim == 0:
         rows = t + jnp.arange(-(q + 1), q + 1)
     else:
         rows = t[..., None] + jnp.arange(-(q + 1), q + 1)
-    valid = (rows >= 0) & (rows < n)
+    valid = (rows >= 0) & (rows < na)
     rows_c = jnp.clip(rows, 0, n - 1)
     # window points for each row: j = row + s, s in [-(q+1), q+1]
     s = jnp.arange(-(q + 1), q + 2)
     j = rows_c[..., None] + s
-    jv = (j >= 0) & (j < n)
+    jv = (j >= 0) & (j < na)
     jc = jnp.clip(j, 0, n - 1)
-    xj = xs[jc]
+    xj = jnp.where(jv, xs[jc], 0.0)
     kv = mk.matern(q, omega, xj, xq[..., None, None]) * jv
-    avals = A.data[rows_c]  # (..., 2q+2, 2q+3)
+    # (..., 2q+2, 2q+3); invalid rows may gather padded (arbitrary) slots —
+    # zero them before the contraction so NaN poison cannot survive `* valid`
+    avals = jnp.where(valid[..., None], A.data[rows_c], 0.0)
     vals = jnp.einsum("...rs,...rs->...r", avals, kv) * valid
     return rows_c, vals, valid
 
 
 @partial(jax.jit, static_argnums=0)
-def phi_grad_at(q: int, omega, xs: jax.Array, A: Banded, xq: jax.Array):
+def phi_grad_at(q: int, omega, xs: jax.Array, A: Banded, xq: jax.Array,
+                n_active=None):
     """d phi(x*) / d x*: same sparsity pattern as phi_at."""
+    if n_active is None:
+        n_active = A.n_active
     n = xs.shape[0]
-    t = query_window_start(xs, xq)
+    na = n if n_active is None else n_active
+    t = query_window_start(xs, xq, n_active=n_active)
     if t.ndim == 0:
         rows = t + jnp.arange(-(q + 1), q + 1)
     else:
         rows = t[..., None] + jnp.arange(-(q + 1), q + 1)
-    valid = (rows >= 0) & (rows < n)
+    valid = (rows >= 0) & (rows < na)
     rows_c = jnp.clip(rows, 0, n - 1)
     s = jnp.arange(-(q + 1), q + 2)
     j = rows_c[..., None] + s
-    jv = (j >= 0) & (j < n)
+    jv = (j >= 0) & (j < na)
     jc = jnp.clip(j, 0, n - 1)
-    xj = xs[jc]
+    xj = jnp.where(jv, xs[jc], 0.0)
     dk = mk.matern_dx(q, omega, xq[..., None, None], xj) * jv
-    avals = A.data[rows_c]
+    avals = jnp.where(valid[..., None], A.data[rows_c], 0.0)
     vals = jnp.einsum("...rs,...rs->...r", avals, dk) * valid
     return rows_c, vals, valid

@@ -17,7 +17,22 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-__all__ = ["power_method", "hutchinson", "logdet_taylor"]
+__all__ = ["power_method", "hutchinson", "logdet_taylor", "rademacher_rows"]
+
+
+def rademacher_rows(key, n: int, shape: tuple[int, ...],
+                    dtype=jnp.float32) -> jax.Array:
+    """Rademacher draw of shape ``(n,) + shape`` keyed *per row*.
+
+    Row ``i`` depends only on ``(key, i)`` — not on ``n`` — so the first
+    ``n`` rows of a capacity-sized draw are bit-identical to an unpadded
+    draw. This is what keeps the stochastic estimators (Hutchinson probes,
+    power-method restarts) invariant to capacity padding: a padded GP and an
+    unpadded GP see the *same* probe values on the active prefix.
+    """
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+    return jax.vmap(lambda k: jax.random.rademacher(k, shape, dtype=dtype))(
+        keys)
 
 
 def power_method(
@@ -27,13 +42,17 @@ def power_method(
     iters: int = 20,
     restarts: int = 4,
     dtype=jnp.float32,
+    v0: jax.Array | None = None,
 ) -> jax.Array:
     """Largest eigenvalue of the PSD operator ``mv`` on vectors of ``shape``.
 
     Runs ``restarts`` probes as one batch (extra trailing axis) with per-step
-    normalization; returns the max Rayleigh quotient (Alg 6).
+    normalization; returns the max Rayleigh quotient (Alg 6). ``v0``
+    overrides the probe draw (capacity-padded callers pass row-keyed, masked
+    probes so the estimate matches the unpadded operator's).
     """
-    v = jax.random.rademacher(key, shape + (restarts,), dtype=dtype)
+    v = (jax.random.rademacher(key, shape + (restarts,), dtype=dtype)
+         if v0 is None else v0)
 
     def body(_, v):
         w = mv(v)
@@ -69,7 +88,7 @@ def hutchinson(
 
 def logdet_taylor(
     mv: Callable[[jax.Array], jax.Array],
-    dim_total: int,
+    dim_total,
     shape: tuple[int, ...],
     key: jax.Array,
     order: int = 25,
@@ -77,17 +96,25 @@ def logdet_taylor(
     lam_margin: float = 1.05,
     power_iters: int = 20,
     dtype=jnp.float32,
+    probe_v: jax.Array | None = None,
+    power_v0: jax.Array | None = None,
 ) -> jax.Array:
     """log|M| for SPD operator ``mv`` (Alg 8).
 
     log|M/lam| = -sum_s (1/s) tr((I - M/lam)^s), truncated at ``order``; the
     trace of every power is estimated with the *same* Hutchinson probe block
-    (one operator application per Taylor term).
+    (one operator application per Taylor term). ``dim_total`` may be traced
+    (the active dimension count under capacity padding, where the padded
+    operator acts as the identity on the tail and contributes log 1 = 0);
+    ``probe_v`` / ``power_v0`` override the probe draws (capacity-padded
+    callers pass row-keyed, masked blocks — see ``rademacher_rows``).
     """
     k1, k2 = jax.random.split(key)
-    lam = power_method(mv, shape, k1, iters=power_iters, dtype=dtype) * lam_margin
+    lam = power_method(mv, shape, k1, iters=power_iters, dtype=dtype,
+                       v0=power_v0) * lam_margin
 
-    v0 = jax.random.rademacher(k2, shape + (probes,), dtype=dtype)
+    v0 = (jax.random.rademacher(k2, shape + (probes,), dtype=dtype)
+          if probe_v is None else probe_v)
 
     def body(s, state):
         w, acc = state
@@ -99,4 +126,4 @@ def logdet_taylor(
     acc0 = jnp.zeros((probes,), dtype)
     _, acc = jax.lax.fori_loop(1, order + 1, body, (v0, acc0))
     trace_est = jnp.mean(acc)
-    return dim_total * jnp.log(lam) - trace_est
+    return jnp.asarray(dim_total, dtype) * jnp.log(lam) - trace_est

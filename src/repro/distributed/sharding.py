@@ -1,7 +1,7 @@
 """Logical-axis -> mesh-axis sharding rules (MaxText-style).
 
 Parameter/activation dims are annotated with logical names (see
-``repro.models.spec``); the rules below map them to mesh axes with
+the pruned LM model specs); the rules below map them to mesh axes with
 divisibility checks and first-match-wins conflict resolution (a mesh axis is
 used at most once per array).
 

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..masking import canonical_band
+
 __all__ = ["band_matmul_pallas"]
 
 DEF_BLOCK = 512
@@ -49,9 +51,18 @@ def _kernel(a_ref, bp_ref, bc_ref, bn_ref, o_ref, *, a_lo, a_hi, b_lo, b_hi,
                                     "interpret"))
 def band_matmul_pallas(a_band: jax.Array, b_band: jax.Array,
                        a_lo: int, a_hi: int, b_lo: int, b_hi: int,
-                       block: int = DEF_BLOCK, interpret: bool = True):
+                       block: int = DEF_BLOCK, interpret: bool = True,
+                       n_active=None):
     """a_band: (G, n, a_lo+a_hi+1), b_band: (G, n, b_lo+b_hi+1) ->
-    C band (G, n, a_lo+b_lo+a_hi+b_hi+1)."""
+    C band (G, n, a_lo+b_lo+a_hi+b_hi+1).
+
+    ``n_active`` (traced): masked active length — both operands are
+    canonicalized to identity tails, so the product is exactly
+    ``blockdiag(C_active, I)``.
+    """
+    if n_active is not None:
+        a_band = canonical_band(a_band, a_lo, a_hi, n_active)
+        b_band = canonical_band(b_band, b_lo, b_hi, n_active)
     squeeze = a_band.ndim == 2
     if squeeze:
         a_band, b_band = a_band[None], b_band[None]

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..masking import canonical_band, mask_rows
+
 __all__ = ["banded_lu_pallas", "banded_solve_pallas", "banded_logdet_pallas"]
 
 
@@ -89,15 +91,22 @@ def _kernel(band_ref, rhs_ref, x_ref, ld_ref, u_ref, y_ref, xp_ref,
 
 @functools.partial(jax.jit, static_argnames=("lo", "hi", "interpret", "solve"))
 def banded_lu_pallas(band: jax.Array, rhs: jax.Array, lo: int, hi: int,
-                     interpret: bool = True, solve: bool = True):
+                     interpret: bool = True, solve: bool = True,
+                     n_active=None):
     """band: (G, n, lo+hi+1) row-aligned; rhs: (G, n, B).
     Returns (x (G, n, B), logdet (G,)); 2-D inputs squeeze the G axis.
 
     No-pivot LU; requires a stably-factorizable band (e.g. the diagonally
     dominant KP systems). Whole system in VMEM — n bounded by ~VMEM size.
     ``solve=False`` skips the sequential back-substitution (logdet-only
-    callers; x comes back zero-filled).
+    callers; x comes back zero-filled). ``n_active`` (traced) is the masked
+    active length: rows past it are canonicalized to identity rows / zero
+    RHS, so the elimination runs on ``blockdiag(M_active, I)`` — identity
+    pivots, zero logdet contribution, zero solution tail.
     """
+    if n_active is not None:
+        band = canonical_band(band, lo, hi, n_active)
+        rhs = mask_rows(rhs, n_active, axis=-2)
     squeeze = band.ndim == 2
     if squeeze:
         band, rhs = band[None], rhs[None]
@@ -131,16 +140,19 @@ def banded_lu_pallas(band: jax.Array, rhs: jax.Array, lo: int, hi: int,
     return (x[0], ld[0]) if squeeze else (x, ld)
 
 
-def banded_solve_pallas(band, rhs, lo: int, hi: int, interpret: bool = True):
+def banded_solve_pallas(band, rhs, lo: int, hi: int, interpret: bool = True,
+                        n_active=None):
     """Solve M x = rhs (no pivoting); rhs (G, n, B) or (n, B)."""
-    x, _ = banded_lu_pallas(band, rhs, lo, hi, interpret=interpret)
+    x, _ = banded_lu_pallas(band, rhs, lo, hi, interpret=interpret,
+                            n_active=n_active)
     return x
 
 
-def banded_logdet_pallas(band, lo: int, hi: int, interpret: bool = True):
+def banded_logdet_pallas(band, lo: int, hi: int, interpret: bool = True,
+                         n_active=None):
     """log|det M| from the same elimination (width-1 dummy RHS, no back-sub)."""
     n = band.shape[-2]
     dummy = jnp.zeros(band.shape[:-2] + (n, 1), band.dtype)
     _, ld = banded_lu_pallas(band, dummy, lo, hi, interpret=interpret,
-                             solve=False)
+                             solve=False, n_active=n_active)
     return ld

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..masking import canonical_band, mask_rows
+
 __all__ = ["banded_matvec_pallas"]
 
 DEF_BLOCK = 512
@@ -39,8 +41,17 @@ def _kernel(band_ref, xp_ref, xc_ref, xn_ref, o_ref, *, lo, hi, block):
 
 @functools.partial(jax.jit, static_argnames=("lo", "hi", "block", "interpret"))
 def banded_matvec_pallas(band: jax.Array, x: jax.Array, lo: int, hi: int,
-                         block: int = DEF_BLOCK, interpret: bool = True):
-    """band: (G, n, lo+hi+1); x: (G, n, B) -> (G, n, B). n padded to `block`."""
+                         block: int = DEF_BLOCK, interpret: bool = True,
+                         n_active=None):
+    """band: (G, n, lo+hi+1); x: (G, n, B) -> (G, n, B). n padded to `block`.
+
+    ``n_active`` (traced): masked active length — rows >= n_active are
+    canonicalized (identity band rows, zero x rows) instead of trusting the
+    caller's padding, so the kernel's result is exact on the active prefix.
+    """
+    if n_active is not None:
+        band = canonical_band(band, lo, hi, n_active)
+        x = mask_rows(x, n_active, axis=-2)
     squeeze = band.ndim == 2
     if squeeze:
         band, x = band[None], x[None]

@@ -48,6 +48,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..masking import canonical_band, mask_rows
+
 __all__ = ["cr_solve_values", "block_cr_pallas", "block_cr_solve_pallas",
            "block_cr_logdet_pallas"]
 
@@ -185,7 +187,7 @@ def _kernel(band_ref, rhs_ref, x_ref, ld_ref, *, w, nb, steps, pivot, solve):
     jax.jit, static_argnames=("w", "pivot", "interpret", "solve"))
 def block_cr_pallas(band: jax.Array, rhs: jax.Array, w: int,
                     pivot: bool = False, interpret: bool = True,
-                    solve: bool = True):
+                    solve: bool = True, n_active=None):
     """band: (G, n, 2w+1) row-aligned, lo = hi = w; rhs: (G, n, B).
 
     Returns (x (G, n, B), logdet (G,)). The leading G axis is the kernel
@@ -194,7 +196,15 @@ def block_cr_pallas(band: jax.Array, rhs: jax.Array, w: int,
     G = 1. ``pivot=True`` enables partial pivoting inside the w x w block
     solves (robust to dead scalar pivots; blocks must stay nonsingular).
     ``solve=False`` skips the back substitution (logdet-only; x is zeros).
+    ``n_active`` (traced) is the masked active length: rows past it become
+    the same decoupled identity rows the lcm padding below uses, so the
+    kernel's log2-depth elimination is exact on the active prefix — this is
+    the capacity-padded representation of ``repro.masking``, of which
+    the block padding here is the kernel-local special case.
     """
+    if n_active is not None:
+        band = canonical_band(band, w, w, n_active)
+        rhs = mask_rows(rhs, n_active, axis=-2)
     squeeze = band.ndim == 2
     if squeeze:
         band, rhs = band[None], rhs[None]
@@ -232,17 +242,18 @@ def block_cr_pallas(band: jax.Array, rhs: jax.Array, w: int,
 
 
 def block_cr_solve_pallas(band, rhs, w: int, pivot: bool = False,
-                          interpret: bool = True):
+                          interpret: bool = True, n_active=None):
     """Solve M x = rhs by block cyclic reduction; rhs (G, n, B) or (n, B)."""
-    x, _ = block_cr_pallas(band, rhs, w, pivot=pivot, interpret=interpret)
+    x, _ = block_cr_pallas(band, rhs, w, pivot=pivot, interpret=interpret,
+                           n_active=n_active)
     return x
 
 
 def block_cr_logdet_pallas(band, w: int, pivot: bool = False,
-                           interpret: bool = True):
+                           interpret: bool = True, n_active=None):
     """log|det M| from the same elimination (width-1 dummy RHS, no back-sub)."""
     n = band.shape[-2]
     dummy = jnp.zeros(band.shape[:-2] + (n, 1), band.dtype)
     _, ld = block_cr_pallas(band, dummy, w, pivot=pivot, interpret=interpret,
-                            solve=False)
+                            solve=False, n_active=n_active)
     return ld

@@ -35,7 +35,11 @@ Padding: rows are padded to ``npad`` (n rounded up to lcm of the solve block
 sizes) so every CR solve sees whole blocks. Band tails are decoupled identity
 rows, state tails are zero, permutation tails map to themselves — pad rows
 stay exactly zero through gathers, matvecs and solves, so no masking is
-needed anywhere in the kernels.
+needed anywhere in the kernels. Since PR 5 this identity-tail form is the
+*core-wide* capacity representation (``repro.masking``): a traced
+``n_active`` canonicalizes rows in ``[n_active, n)`` the same way, so one
+static shape serves every active length and streaming insert/evict never
+retraces.
 
 VMEM residency per call (the ``fused_vmem_bytes`` estimate the "auto" fusion
 mode checks): the carried state in and out plus the scratch intermediates —
@@ -57,6 +61,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .block_cr import cr_solve_values
+from ..masking import canonical_band, canonical_perm, mask_rows
 
 __all__ = ["FusedSweep", "fused_vmem_bytes", "fused_jacobi_iter_pallas",
            "fused_gauss_seidel_iter_pallas", "fused_pcg_iter_pallas"]
@@ -371,15 +376,21 @@ class FusedSweep:
     out of the iteration loop); the iteration methods then map 1:1 onto one
     ``pallas_call`` each. ``a`` may be None for methods that never apply
     ``Khat^{-1}`` (Jacobi / Gauss-Seidel).
+
+    ``n_active`` (traced, optional) is the capacity-padded masked length
+    (``repro.masking``): rows in ``[n_active, n)`` are canonicalized
+    to the same identity-tail form the lcm padding below applies to rows in
+    ``[n, npad)`` — the kernel sees one uninterrupted decoupled tail.
     """
 
     def __init__(self, phi, saphi, sort_idx, rank_idx, sigma2, *, w_p: int,
                  w_s: int, a=None, w_a: int = 0, pivot: bool = False,
-                 interpret: bool = True, dtype=None):
+                 interpret: bool = True, dtype=None, n_active=None):
         D, n = sort_idx.shape
         self.D, self.n = D, n
         self.w_a, self.w_p, self.w_s = w_a, w_p, w_s
         self.pivot, self.interpret = pivot, interpret
+        self.n_active = n_active
         self.npad = _pad_len(n, (w_p, w_s))
         # the solve's compute dtype — may be wider than the factor dtype
         # (mixed-dtype RHS); everything in the kernel runs in it
@@ -394,11 +405,13 @@ class FusedSweep:
     def _pad_band(self, data, w):
         """Identity tail: decoupled pad rows (unit diagonal, zero couplings)."""
         D, n, npad = self.D, self.n, self.npad
+        data = canonical_band(data, w, w, self.n_active)
         out = jnp.zeros((D, npad, 2 * w + 1), self.dtype).at[:, :, w].set(1.0)
         return out.at[:, :n].set(data.astype(self.dtype))
 
     def _pad_idx(self, idx):
         D, n, npad = self.D, self.n, self.npad
+        idx = canonical_perm(idx, self.n_active)
         tail = jnp.broadcast_to(jnp.arange(n, npad, dtype=jnp.int32),
                                 (D, npad - n))
         return jnp.concatenate([idx.astype(jnp.int32), tail], axis=1)
@@ -406,6 +419,7 @@ class FusedSweep:
     def pad_state(self, u):
         """(D, n, B) -> (D, npad, B) with a zero tail."""
         D, npad = self.D, self.npad
+        u = mask_rows(u, self.n_active, axis=1)
         out = jnp.zeros((D, npad) + u.shape[2:], self.dtype)
         return out.at[:, : self.n].set(u.astype(self.dtype))
 

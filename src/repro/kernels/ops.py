@@ -43,6 +43,15 @@ are flattened and folded into the kernel **grid** for every pallas kernel
 (``_flatten_batch`` -> one ``pallas_call``); no op unrolls its batch at
 trace time any more.
 
+Capacity padding: every dispatched op (and every pallas kernel wrapper)
+accepts a traced ``n_active``. Operands are canonicalized first
+(``masking.canonical_band`` / ``masking.mask_rows``): padding rows become
+decoupled identity rows / zeros, so the padded system is exactly
+``blockdiag(M_active, I)`` — solves, matvecs, matmuls and logdets are exact
+on the active prefix, no-ops on the tail, under ONE static shape per
+capacity. This is what makes the streaming insert/evict path recompile-free
+(see ``repro.streaming``).
+
 Orthogonally to the per-op backends, the backfitting solvers can fuse one
 *whole* iteration — permutation gathers, matvecs, block-CR solve and the
 cross-dimension coupling — into a single ``pallas_call``
@@ -70,6 +79,7 @@ from .banded_matvec import banded_matvec_pallas
 from .block_cr import block_cr_logdet_pallas, block_cr_solve_pallas
 from .fused_sweep import fused_vmem_bytes
 from .kp_gram import kp_gram_pallas
+from ..masking import canonical_band, mask_rows
 from .tridiag_pcr import tridiag_pcr_pallas
 
 __all__ = [
@@ -316,86 +326,117 @@ def _flatten_batch(arrs, core_dims):
 
 
 def banded_matvec(band, x, lo: int, hi: int, block: int = 512,
-                  backend: str | None = None):
-    """y = M x. band (..., n, lo+hi+1); x (..., n) or (..., n, k)."""
+                  backend: str | None = None, n_active=None):
+    """y = M x. band (..., n, lo+hi+1); x (..., n) or (..., n, k).
+
+    ``n_active`` (traced, optional) marks capacity padding: the operands are
+    canonicalized (identity-tail band, zero-tail x) so the result is exact on
+    the active prefix and exactly zero on the tail.
+    """
     bd = _core()
-    if resolve_backend(backend) == "jax":
-        return bd._matvec_scan(bd.Banded(band, lo, hi), x)
     n = band.shape[-2]
     mat_form = x.ndim >= 2 and x.shape[-2] == n and x.ndim == band.ndim
+    if resolve_backend(backend) == "jax":
+        if n_active is not None:
+            band = canonical_band(band, lo, hi, n_active)
+            x = mask_rows(x, n_active, axis=-2 if mat_form else -1)
+        return bd._matvec_scan(bd.Banded(band, lo, hi), x)
     xb = x if mat_form else x[..., None]
     batch, (bf, xf) = _flatten_batch((band, xb), (2, 2))
     out = banded_matvec_pallas(bf, xf, lo, hi, block=block,
-                               interpret=_interpret())
+                               interpret=_interpret(), n_active=n_active)
     out = out.reshape(batch + out.shape[-2:])
     return out if mat_form else out[..., 0]
 
 
 def banded_solve(band, rhs, lo: int, hi: int, pivot: bool = False,
-                 backend: str | None = None, alg: str | None = None):
+                 backend: str | None = None, alg: str | None = None,
+                 n_active=None):
     """Solve M x = rhs. band (..., n, w); rhs (..., n) or (..., n, k).
 
     On the pallas backend ``alg`` picks the kernel ("cr" block cyclic
     reduction when ``lo == hi`` — the default — vs "lu" row recurrence).
     ``pivot=True`` runs the pivoted block-CR kernel when the resolved
     algorithm is "cr"; otherwise it falls back to the jax gbsv-style scan
-    (there is no pivoted LU kernel).
+    (there is no pivoted LU kernel). With ``n_active`` the padded system is
+    exactly ``blockdiag(M_active, I)`` with a zero RHS tail, so the solution
+    is exact on the active prefix and zero on the tail.
     """
     bd = _core()
-    b = bd.Banded(band, lo, hi)
-    if resolve_backend(backend) == "jax":
-        return bd._solve_scan(b, rhs, pivot=pivot)
-    use_cr = resolve_solve_alg(alg, lo, hi) == "cr"
-    if pivot and not use_cr:
-        return bd._solve_scan(b, rhs, pivot=True)
     n = band.shape[-2]
     vec_in = rhs.shape[-1] == n and rhs.ndim == band.ndim - 1
+    if resolve_backend(backend) == "jax":
+        if n_active is not None:
+            band = canonical_band(band, lo, hi, n_active)
+            rhs = mask_rows(rhs, n_active, axis=-1 if vec_in else -2)
+        return bd._solve_scan(bd.Banded(band, lo, hi), rhs, pivot=pivot)
+    use_cr = resolve_solve_alg(alg, lo, hi) == "cr"
+    if pivot and not use_cr:
+        if n_active is not None:
+            band = canonical_band(band, lo, hi, n_active)
+            rhs = mask_rows(rhs, n_active, axis=-1 if vec_in else -2)
+        return bd._solve_scan(bd.Banded(band, lo, hi), rhs, pivot=True)
     rb = rhs[..., None] if vec_in else rhs
     batch, (bf, rf) = _flatten_batch((band, rb), (2, 2))
     if use_cr:
         x = block_cr_solve_pallas(bf, rf, lo, pivot=pivot,
-                                  interpret=_interpret())
+                                  interpret=_interpret(), n_active=n_active)
     else:
-        x = banded_solve_pallas(bf, rf, lo, hi, interpret=_interpret())
+        x = banded_solve_pallas(bf, rf, lo, hi, interpret=_interpret(),
+                                n_active=n_active)
     out = x.reshape(batch + x.shape[-2:])
     return out[..., 0] if vec_in else out
 
 
 def banded_logdet(band, lo: int, hi: int, pivot: bool = False,
-                  backend: str | None = None, alg: str | None = None):
+                  backend: str | None = None, alg: str | None = None,
+                  n_active=None):
     """log |det M|, batched over leading dims of band.
 
     Same algorithm selection as ``banded_solve``: block CR (with its exact
     Schur-telescoped log-determinant, pivoted or not) when the resolved alg
     is "cr"; the LU kernel otherwise, whose no-pivot elimination sends
-    ``pivot=True`` callers to the pivoted jax scan.
+    ``pivot=True`` callers to the pivoted jax scan. A canonical padding tail
+    contributes exactly ``log|I| = 0``, so the capacity-wide reduction equals
+    the active log-determinant.
     """
     bd = _core()
     if resolve_backend(backend) == "jax":
+        band = canonical_band(band, lo, hi, n_active)
         return bd._logdet_scan(bd.Banded(band, lo, hi))
     use_cr = resolve_solve_alg(alg, lo, hi) == "cr"
     if pivot and not use_cr:
+        band = canonical_band(band, lo, hi, n_active)
         return bd._logdet_scan(bd.Banded(band, lo, hi))
     batch, (bf,) = _flatten_batch((band,), (2,))
     if use_cr:
         ld = block_cr_logdet_pallas(bf, lo, pivot=pivot,
-                                    interpret=_interpret())
+                                    interpret=_interpret(),
+                                    n_active=n_active)
     else:
-        ld = banded_logdet_pallas(bf, lo, hi, interpret=_interpret())
+        ld = banded_logdet_pallas(bf, lo, hi, interpret=_interpret(),
+                                  n_active=n_active)
     return ld.reshape(batch)
 
 
 def band_band_matmul(a_band, b_band, a_lo: int, a_hi: int, b_lo: int,
-                     b_hi: int, block: int = 512, backend: str | None = None):
-    """C = A @ B in band form; returns band data (..., n, wa + wb - 1)."""
+                     b_hi: int, block: int = 512, backend: str | None = None,
+                     n_active=None):
+    """C = A @ B in band form; returns band data (..., n, wa + wb - 1).
+
+    Canonical padded operands multiply to ``blockdiag(C_active, I)``: the
+    result's tail is again a canonical identity tail (at the wider band).
+    """
     bd = _core()
     if resolve_backend(backend) == "jax":
+        a_band = canonical_band(a_band, a_lo, a_hi, n_active)
+        b_band = canonical_band(b_band, b_lo, b_hi, n_active)
         return bd._band_band_matmul_scan(
             bd.Banded(a_band, a_lo, a_hi), bd.Banded(b_band, b_lo, b_hi)
         ).data
     batch, (af, bf) = _flatten_batch((a_band, b_band), (2, 2))
     out = band_matmul_pallas(af, bf, a_lo, a_hi, b_lo, b_hi, block=block,
-                             interpret=_interpret())
+                             interpret=_interpret(), n_active=n_active)
     out = out.reshape(batch + out.shape[-2:])
     n = a_band.shape[-2]
     return out * bd._band_mask(n, a_lo + b_lo, a_hi + b_hi)

@@ -1,0 +1,65 @@
+"""Capacity-padding canonicalization shared by every banded op and kernel.
+
+The core-wide representation (see ``repro/kernels/README.md``): arrays are
+allocated at a static ``capacity`` with a *traced* active length
+``n_active``; rows ``>= n_active`` are padding. Correctness never depends on
+what the padding slots hold — every op canonicalizes its operands first:
+
+  * bands: active rows keep only entries whose column is also active; pad
+    rows become decoupled identity rows (1 on the diagonal). The padded
+    matrix is then exactly ``blockdiag(M_active, I)``, so solves and matvecs
+    are exact on the active prefix, no-ops on the tail, and log-determinants
+    pick up exactly ``log|I| = 0`` from the padding.
+  * states / right-hand sides: pad rows become exact zeros, so reductions
+    (inner products, residual norms) see the active prefix only.
+  * permutations: pad slots map to themselves, so gathers keep zero tails.
+
+``n_active=None`` means "fully active" and every helper is the identity —
+the unpadded representation is the ``n_active=None`` special case, not a
+separate code path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["canonical_band", "mask_rows", "canonical_perm"]
+
+
+def canonical_band(band, lo: int, hi: int, n_active):
+    """Identity-tail canonical form of row-aligned band data (..., n, w).
+
+    Active rows ``i < n_active`` keep entries with ``0 <= i + m < n_active``;
+    everything else becomes the decoupled identity row. Overwrites (rather
+    than trusts) the padding, so NaN/garbage in tail slots cannot reach
+    active results.
+    """
+    if n_active is None:
+        return band
+    n = band.shape[-2]
+    i = jnp.arange(n)[:, None]
+    m = jnp.arange(-lo, hi + 1)[None, :]
+    j = i + m
+    active = (i < n_active) & (j >= 0) & (j < n_active)
+    ident = jnp.zeros((n, lo + hi + 1), band.dtype).at[:, lo].set(1.0)
+    return jnp.where(active, band, ident)
+
+
+def mask_rows(x, n_active, axis: int = -2):
+    """Zero rows ``>= n_active`` along ``axis`` (states, RHS batches)."""
+    if n_active is None:
+        return x
+    ax = axis % x.ndim
+    n = x.shape[ax]
+    shape = [1] * x.ndim
+    shape[ax] = n
+    keep = jnp.arange(n).reshape(shape) < n_active
+    return jnp.where(keep, x, jnp.zeros((), x.dtype))
+
+
+def canonical_perm(idx, n_active):
+    """Identity-tail canonical form of permutation indices (..., n)."""
+    if n_active is None:
+        return idx
+    n = idx.shape[-1]
+    j = jnp.arange(n, dtype=idx.dtype)
+    return jnp.where(j < n_active, idx, j)

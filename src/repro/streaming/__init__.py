@@ -1,10 +1,18 @@
 """repro.streaming — Sec. 6 streaming posterior updates + query serving.
 
 ``insert`` grows a fitted additive GP by one observation with O(q)-window
-banded-factor updates and a warm-started backfitting solve;
+banded-factor updates and a warm-started backfitting solve; ``evict`` is the
+drop-oldest sliding-window counterpart; both mutate a capacity-padded GP
+(``with_capacity`` / ``fit(..., capacity=)``) *in place* — one compiled step
+per capacity tier, zero recompilation along a stream.
 ``refresh_local_cache`` is the O(1) small-learning-rate acquisition-cache
 path; ``GPServeEngine`` serves slot-batched posterior/acquisition queries
 against a versioned, incrementally updated posterior. See README.md here.
 """
 from .gp_engine import GPServeEngine, Query, propose_via_engine  # noqa: F401
-from .updates import insert, refresh_local_cache  # noqa: F401
+from .updates import (  # noqa: F401
+    evict,
+    insert,
+    refresh_local_cache,
+    with_capacity,
+)

@@ -1,21 +1,30 @@
 """Slot-batched GP query serving engine over a streaming posterior.
 
-Modeled on ``repro.serving.engine`` (the LM decode engine): a fixed pool of
-B request slots, one shape-stable jit'd step, and an admit/retire lifecycle.
-Each tick evaluates the batched posterior mean / variance / acquisition
-(+gradient) for every occupied slot against one shared fitted GP; multi-tick
-"ascend" requests run projected gradient ascent on the acquisition, so many
+Modeled on the classic LM decode-engine shape: a fixed pool of B request
+slots, one shape-stable jit'd step, and an admit/retire lifecycle. Each tick
+evaluates the batched posterior mean / variance / acquisition (+gradient)
+for every occupied slot against one shared fitted GP; multi-tick "ascend"
+requests run projected gradient ascent on the acquisition, so many
 concurrent acquisition maximizations — at different stages — share each
 batched evaluation.
 
 Consistency / versioning: the posterior carries a version counter. Mutations
-(``insert`` — the Sec. 6 incremental update — or ``set_posterior``) are
-*staged* and act as a fence: admission pauses, running slots drain, then the
-mutations apply, the version bumps once per mutation, and admission resumes.
-A query is pinned to the version current at *admit* time and is served by
-that posterior for its whole lifetime; its result carries the version. The
-jit'd step recompiles per posterior size n (shapes change on insert) but is
-reused across every tick and query at that size.
+(``insert`` / ``evict`` — the Sec. 6 incremental updates — or
+``set_posterior``) are *staged* and act as a fence: admission pauses,
+running slots drain, then the mutations apply, the version bumps once per
+mutation, and admission resumes. A query is pinned to the version current
+at *admit* time and is served by that posterior for its whole lifetime; its
+result carries the version.
+
+Capacity tiers: the engine holds its posterior capacity-padded (traced
+``n_active``, static capacity — see ``repro.masking``), so the jit'd
+step and the insert/evict steps compile ONCE per capacity tier and are
+reused across every mutation at that tier. When an insert would overflow
+the tier, the posterior is re-homed into a doubled allocation (one new
+trace per tier, amortized O(log n) traces over any stream). With
+``window=W`` the engine runs in sliding-window mode — drop-oldest eviction
+before each overflowing insert — which pins peak memory at the ``W`` tier
+forever.
 """
 from __future__ import annotations
 
@@ -27,11 +36,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.additive_gp import AdditiveGP
+from ..core.additive_gp import AdditiveGP, with_capacity
 from ..core.bayesopt import BOConfig, acquisition_stats, ascent_step
-from .updates import insert as stream_insert
+from .updates import evict as stream_evict, insert as stream_insert
 
 __all__ = ["GPServeEngine", "Query", "propose_via_engine"]
+
+
+def _next_tier(m: int) -> int:
+    """Smallest power-of-two capacity >= m (>= 8)."""
+    return max(8, 1 << (int(m) - 1).bit_length())
 
 
 @dataclasses.dataclass
@@ -62,12 +76,28 @@ def _engine_step(gp: AdditiveGP, X: jax.Array, beta, best_y, lo, hi, step_len,
 
 
 class GPServeEngine:
-    """Fixed-slot batched server for posterior/acquisition queries."""
+    """Fixed-slot batched server for posterior/acquisition queries.
+
+    ``capacity`` pins the initial allocation tier (default: the next
+    power-of-two above the point count, leaving insert headroom);
+    ``window`` enables sliding-window serving: once ``window`` points are
+    held, each staged insert is preceded by a drop-oldest evict, bounding
+    memory and per-tick cost for the lifetime of the engine.
+    """
 
     def __init__(self, gp: AdditiveGP, bounds, batch_slots: int = 8,
                  kind: str = "ucb", beta: float = 2.0, lr: float = 0.05,
-                 insert_iters: int | None = None):
-        self.gp = gp
+                 insert_iters: int | None = None,
+                 capacity: int | None = None, window: int | None = None):
+        n_points = gp.num_points()
+        if window is not None and window < 2:
+            raise ValueError(f"window must be >= 2; got {window}")
+        if capacity is None:
+            capacity = _next_tier(
+                min(n_points + 1, window) if window is not None
+                else n_points + 1)
+        self.window = window
+        self.gp = with_capacity(gp, max(capacity, gp.n))
         self.bounds = jnp.asarray(bounds)
         self.B = batch_slots
         self.kind = kind
@@ -84,7 +114,20 @@ class GPServeEngine:
         # trajectories
         self._besty = np.zeros(batch_slots, np.asarray(gp.Y).dtype)
         self._next_rid = 0
-        self.best_y = float(jnp.max(gp.Y))
+        self._count = n_points
+        self.best_y = float(jnp.max(self._active_y()))
+
+    def _active_y(self) -> jax.Array:
+        return self.gp.Y[: self._count]
+
+    @property
+    def num_points(self) -> int:
+        """Active observation count (the capacity may be larger)."""
+        return self._count
+
+    @property
+    def capacity(self) -> int:
+        return self.gp.n
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -148,6 +191,28 @@ class GPServeEngine:
         """Stage an incremental observation insert (applied at the fence)."""
         self._staged.append(("insert", np.asarray(x_new), float(y_new)))
 
+    def evict(self) -> None:
+        """Stage a drop-oldest eviction (applied at the fence).
+
+        Validated against the *projected* count (current count plus the
+        already-staged mutations), so an over-eviction fails here — at
+        stage time — instead of poisoning the fence, which would otherwise
+        re-raise on every subsequent ``step()``.
+        """
+        projected = self._count
+        for op in self._staged:
+            if op[0] == "insert":
+                projected += 1
+            elif op[0] == "evict":
+                projected -= 1
+            else:  # set_posterior resets the count
+                projected = op[1].num_points()
+        if projected <= 1:
+            raise ValueError(
+                "cannot stage evict: the engine would drop below one "
+                f"observation ({projected} projected after staged mutations)")
+        self._staged.append(("evict",))
+
     def set_posterior(self, gp: AdditiveGP) -> None:
         """Stage a full posterior replacement (e.g. a hyperparameter refit)."""
         self._staged.append(("set", gp))
@@ -155,13 +220,42 @@ class GPServeEngine:
     def _apply_staged(self) -> None:
         for op in self._staged:
             if op[0] == "insert":
+                # sliding window: free oldest slots first — capacity, and
+                # therefore the compiled steps, never grow. A loop (not a
+                # single evict) so an engine constructed *above* the window
+                # drains down to it instead of staying pinned forever.
+                while self.window is not None and self._count >= self.window:
+                    self.gp = stream_evict(self.gp, iters=self.insert_iters,
+                                           count=self._count)
+                    self._count -= 1
+                    self.version += 1
+                if self._count >= self.gp.n:
+                    # tier overflow: re-home into a doubled allocation (one
+                    # new trace per tier; no version bump — same posterior)
+                    self.gp = with_capacity(self.gp, _next_tier(2 * self.gp.n))
                 self.gp = stream_insert(self.gp, op[1], op[2],
-                                        iters=self.insert_iters)
+                                        iters=self.insert_iters,
+                                        count=self._count)
+                self._count += 1
+                self.version += 1
+            elif op[0] == "evict":
+                self.gp = stream_evict(self.gp, iters=self.insert_iters,
+                                       count=self._count)
+                self._count -= 1
+                self.version += 1
             else:
-                self.gp = op[1]
-            self.version += 1
+                gp = op[1]
+                # keep the tier: re-home the replacement into (at least) the
+                # current capacity so the compiled step stays warm — but
+                # never below the replacement's own allocation (a pre-padded
+                # fit may already be larger; capacity cannot shrink)
+                self.gp = with_capacity(
+                    gp, max(self.gp.n, gp.n,
+                            _next_tier(gp.num_points() + 1)))
+                self._count = gp.num_points()
+                self.version += 1
         self._staged.clear()
-        self.best_y = float(jnp.max(self.gp.Y))
+        self.best_y = float(jnp.max(self._active_y()))
 
 
 def propose_via_engine(engine: GPServeEngine, key: jax.Array, cfg: BOConfig,

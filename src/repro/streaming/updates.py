@@ -1,29 +1,44 @@
 """Incremental posterior updates — the paper's Sec. 6 streaming formulas.
 
-``insert(gp, x_new, y_new)`` grows a fitted :class:`AdditiveGP` by one
-observation without the O(n log n) refit:
+Capacity-padded, in-place streaming (this module + the mask-aware core):
+a fitted :class:`AdditiveGP` carries a static ``capacity`` and a traced
+``n_active`` (``repro.core.additive_gp.with_capacity`` / ``fit(...,
+capacity=)``). ``insert`` and ``evict`` mutate the *same-shaped* arrays —
+write into the next free slot / drop the oldest slot — so a stream of
+mutations at fixed capacity reuses ONE compiled step: zero recompilation,
+no shape-polymorphic retrace machinery anywhere on the hot path.
 
-  * the new coordinate is spliced into each dimension's sorted order by
-    binary search (O(log n)), and the sort/rank permutations are updated in
-    closed form;
+``insert(gp, x_new, y_new)`` grows a fitted GP by one observation without
+the O(n log n) refit:
+
+  * the new coordinate's sorted position is found by a masked count over the
+    active prefix (the capacity-safe ``searchsorted``), and the sort/rank
+    permutations are updated in closed form, in place;
   * the banded KP factors (A, Phi) and generalized-KP factors (B, Psi) are
     updated only in the O(q) window of rows whose point windows — or
     Algorithm-2 boundary category — contain the insertion point; every other
     row is a shifted copy of the pre-insert band (Thm 3 locality);
   * the posterior caches are rebuilt with a *warm-started* backfitting solve
-    (on the pallas backend this runs the block cyclic-reduction kernel —
-    ``GPConfig.solve_alg`` — so the insert hot path is log2-depth, not
-    row-sequential; with ``GPConfig.fused`` — default "auto" — each warm
-    iteration is additionally ONE fused ``pallas_call``, gathers + matvecs +
-    block solve + coupling all in VMEM, see ``kernels/fused_sweep.py``):
-    the pre-insert ``Mhat^{-1} S Y`` spliced at the new point is an
-    O(sigma^2)-accurate initial iterate, so a handful of PCG iterations
-    reconverge it (the Kernel Multigrid warm-start argument).
+    (block cyclic-reduction kernel on the pallas backend; with
+    ``GPConfig.fused`` each warm iteration is ONE fused ``pallas_call``):
+    the pre-insert ``Mhat^{-1} S Y`` with the new slot seeded from its
+    sorted neighbour is an O(sigma^2)-accurate initial iterate, so a handful
+    of PCG iterations reconverge it (the Kernel Multigrid warm-start
+    argument).
 
-The per-insert cost is O(q) factor work plus a short warm solve and one O(n)
-band-inverse sweep for the variance band — asymptotically far below the
-refit's n window SVDs and cold iteration, which is exactly the gap
-``benchmarks/streaming_updates.py`` measures.
+``evict(gp)`` is the sliding-window counterpart: it drops the *oldest*
+observation (original index 0) with the mirrored windowed factor deletion —
+rows shift up past the evicted sorted position, the O(q) window around it is
+rebuilt exactly, permutations update in closed form — plus a warm re-solve
+from the surviving entries of ``Mhat^{-1} S Y``. ``insert`` + ``evict`` at a
+fixed capacity is a bounded-memory serving loop: peak memory is pinned by
+the capacity, forever.
+
+The per-mutation cost is O(q) factor work plus a short warm solve and one
+O(capacity) band-inverse sweep for the variance band — asymptotically far
+below the refit's n window SVDs and cold iteration, which is exactly the
+gap ``benchmarks/streaming_updates.py`` / ``benchmarks/capacity_streaming.py``
+measure.
 
 ``refresh_local_cache`` is the companion O(1) small-learning-rate path for
 the dense acquisition cache (paper Sec. 6 "given the posterior"): the new
@@ -39,80 +54,112 @@ import jax
 import jax.numpy as jnp
 
 from ..core import matern as mk
-from ..core.additive_gp import AdditiveGP, TIE_EPS, posterior_caches
+from ..core.additive_gp import (AdditiveGP, TIE_EPS, posterior_caches,
+                                with_capacity)
 from ..core.backfitting import DimOps, solve_mhat
 from ..core.banded import Banded, add, scale, solve, transpose
 from ..core.bayesopt import LocalAcqCache
 from ..core.kernel_packets import gram_band_rows, kp_coefficient_rows
+from ..masking import canonical_band, mask_rows
 
-__all__ = ["insert", "refresh_local_cache"]
+__all__ = ["insert", "evict", "with_capacity", "refresh_local_cache"]
 
 
 def _splice_vec(v: jax.Array, p, val) -> jax.Array:
-    """(n,) -> (n+1,) with ``val`` inserted at sorted position ``p``."""
+    """(C,) -> (C,) with ``val`` inserted at position ``p`` (last slot drops)."""
     n = v.shape[0]
-    j = jnp.arange(n + 1)
+    j = jnp.arange(n)
     out = v[jnp.clip(j - (j > p), 0, n - 1)]
     return jnp.where(j == p, val, out)
 
 
-def _expand_rows(data: jax.Array, p) -> jax.Array:
-    """(n, w) -> (n+1, w): rows >= p shift down; row p is a placeholder copy.
+def _delete_vec(v: jax.Array, p) -> jax.Array:
+    """(C,) -> (C,) with slot ``p`` removed (rows > p shift up; last repeats)."""
+    n = v.shape[0]
+    j = jnp.arange(n)
+    return v[jnp.clip(j + (j >= p), 0, n - 1)]
 
-    Every row whose band-validity pattern differs between the n- and
-    (n+1)-sized matrices lies within the recompute window around ``p`` (its
+
+def _expand_rows(data: jax.Array, p) -> jax.Array:
+    """(C, w) -> (C, w): rows >= p shift down; row p is a placeholder copy.
+
+    Every row whose band-validity pattern differs between the k- and
+    (k+1)-point matrices lies within the recompute window around ``p`` (its
     band reaches the insertion index), so the placeholder and any stale
     copies are always overwritten by exact window rows.
     """
     n = data.shape[0]
-    j = jnp.arange(n + 1)
+    j = jnp.arange(n)
     return data[jnp.clip(j - (j > p), 0, n - 1)]
 
 
-def _insert_dim(q: int, omega_d, xs_d, sort_d, rank_d, a_d, phi_d, b_d, psi_d,
-                x_val):
-    """One dimension's spliced sorted order, permutations, and band windows.
+def _delete_rows(data: jax.Array, p) -> jax.Array:
+    """(C, ...) -> (C, ...): row ``p`` removed, rows > p shift up."""
+    n = data.shape[0]
+    j = jnp.arange(n)
+    return data[jnp.clip(j + (j >= p), 0, n - 1)]
 
-    Recompute radii: an A/Phi row reads xs only within +-(q+1) of itself and
-    its Algorithm-2 boundary category shifts by at most q+2 rows, so radius
-    2q+4 strictly covers every changed row (2q+6 for the order-(q+1) B/Psi
-    factors). Rows outside the window are exact shifted copies.
+
+def _insert_dim(q: int, k, omega_d, xs_d, sort_d, rank_d, a_d, phi_d, b_d,
+                psi_d, x_val):
+    """One dimension's in-place spliced order, permutations, band windows.
+
+    ``k`` is the traced pre-insert active count; all arrays stay at their
+    static capacity. Recompute radii: an A/Phi row reads xs only within
+    +-(q+1) of itself and its Algorithm-2 boundary category shifts by at
+    most q+2 rows, so radius 2q+4 strictly covers every changed row (2q+6
+    for the order-(q+1) B/Psi factors). Rows outside the window are exact
+    shifted copies.
     """
-    n = xs_d.shape[0]
-    span = xs_d[-1] - xs_d[0] + 1.0
-    p = jnp.searchsorted(xs_d, x_val, side="right")
-    # side="right" matches fit's stable argsort (the appended point sorts
-    # after equal values); separate an exact tie like fit's TIE_EPS bump,
-    # capped at half the gap to the right neighbour so repeated inserts of
-    # the same coordinate stay strictly increasing (fit instead cumsums
-    # bumps over the whole array, so tied inserts match it to ~TIE_EPS*span
-    # rather than bit-for-bit).
-    left = xs_d[jnp.clip(p - 1, 0, n - 1)]
-    right = xs_d[jnp.clip(p, 0, n - 1)]
-    gap = jnp.where(p < n, right - left, jnp.inf)
+    C = xs_d.shape[0]
+    j = jnp.arange(C)
+    active = j < k
+    span = jnp.take(xs_d, k - 1) - xs_d[0] + 1.0
+    # p = #active coords <= x_val — capacity-safe searchsorted(side="right"),
+    # matching fit's stable argsort (the appended point sorts after equal
+    # values); separate an exact tie like fit's TIE_EPS bump, capped at half
+    # the gap to the right neighbour so repeated inserts of the same
+    # coordinate stay strictly increasing.
+    p = jnp.sum(((xs_d <= x_val) & active).astype(jnp.int32))
+    left = jnp.take(xs_d, jnp.clip(p - 1, 0, C - 1))
+    right = jnp.take(xs_d, jnp.clip(p, 0, C - 1))
+    gap = jnp.where(p < k, right - left, jnp.inf)
     bump = jnp.minimum(span * TIE_EPS, 0.5 * gap)
     x_val = jnp.where((p > 0) & (x_val <= left), left + bump, x_val)
     xs_new = _splice_vec(xs_d, p, x_val)
-    sort_new = _splice_vec(sort_d, p, jnp.asarray(n, sort_d.dtype))
-    rank_new = jnp.concatenate(
-        [rank_d + (rank_d >= p), jnp.asarray(p, rank_d.dtype)[None]])
+    # permutations in closed form; canonical identity tails past the new
+    # active count k+1 (rows 0..k are active)
+    sort_new = _splice_vec(sort_d, p, jnp.asarray(k, sort_d.dtype))
+    sort_new = jnp.where(j <= k, sort_new, j.astype(sort_d.dtype))
+    rank_new = jnp.where(
+        j < k, rank_d + (rank_d >= p).astype(rank_d.dtype),
+        jnp.where(j == k, jnp.asarray(p, rank_d.dtype),
+                  j.astype(rank_d.dtype)))
 
+    k1 = k + 1
     ra = 2 * q + 4
-    rows_a = jnp.clip(p - ra + jnp.arange(2 * ra + 1), 0, n)
-    a_rows = kp_coefficient_rows(q, omega_d, xs_new, rows_a)
+    rows_a = jnp.clip(p - ra + jnp.arange(2 * ra + 1), 0, k)
+    a_rows = kp_coefficient_rows(q, omega_d, xs_new, rows_a, n_active=k1)
     a_new = _expand_rows(a_d, p).at[rows_a].set(a_rows)
     kfun = lambda x, y: mk.matern(q, omega_d, x, y)
-    phi_rows = gram_band_rows(kfun, xs_new, a_rows, rows_a, q + 1, q + 1, q)
+    phi_rows = gram_band_rows(kfun, xs_new, a_rows, rows_a, q + 1, q + 1, q,
+                              n_active=k1)
     phi_new = _expand_rows(phi_d, p).at[rows_a].set(phi_rows)
 
     rb = 2 * q + 6
-    rows_b = jnp.clip(p - rb + jnp.arange(2 * rb + 1), 0, n)
-    b_rows = kp_coefficient_rows(q + 1, omega_d, xs_new, rows_b)
+    rows_b = jnp.clip(p - rb + jnp.arange(2 * rb + 1), 0, k)
+    b_rows = kp_coefficient_rows(q + 1, omega_d, xs_new, rows_b, n_active=k1)
     b_new = _expand_rows(b_d, p).at[rows_b].set(b_rows)
     dkfun = lambda x, y: mk.matern_domega(q, omega_d, x, y)
     psi_rows = gram_band_rows(dkfun, xs_new, b_rows, rows_b, q + 2, q + 2,
-                              q + 1)
+                              q + 1, n_active=k1)
     psi_new = _expand_rows(psi_d, p).at[rows_b].set(psi_rows)
+    # canonical identity tails: the stored factors equal what a padded
+    # from-scratch fit stores, bit-for-bit outside the solve windows
+    a_new = canonical_band(a_new, q + 1, q + 1, k1)
+    phi_new = canonical_band(phi_new, q, q, k1)
+    b_new = canonical_band(b_new, q + 2, q + 2, k1)
+    psi_new = canonical_band(psi_new, q + 1, q + 1, k1)
     return xs_new, sort_new, rank_new, a_new, phi_new, b_new, psi_new, p
 
 
@@ -121,33 +168,38 @@ def _insert_impl(gp: AdditiveGP, x_new: jax.Array, y_new: jax.Array,
                  iters: int) -> AdditiveGP:
     config = gp.config
     q = config.q
-    n = gp.n
+    C = gp.n
+    k = jnp.asarray(gp.active(), jnp.int32)
     xs, sort_idx, rank_idx, a, phi, b, psi, p = jax.vmap(
-        partial(_insert_dim, q)
+        lambda om, xd, sd, rd, ad, pd, bd, qd, xv: _insert_dim(
+            q, k, om, xd, sd, rd, ad, pd, bd, qd, xv)
     )(gp.omega, gp.xs, gp.ops.sort_idx, gp.ops.rank_idx, gp.ops.A.data,
       gp.ops.Phi.data, gp.B.data, gp.Psi.data, x_new)
-    A = Banded(a, q + 1, q + 1)
-    Phi = Banded(phi, q, q)
-    B = Banded(b, q + 2, q + 2)
-    Psi = Banded(psi, q + 1, q + 1)
+    k1 = k + 1
+    A = Banded(a, q + 1, q + 1, k1)
+    Phi = Banded(phi, q, q, k1)
+    B = Banded(b, q + 2, q + 2, k1)
+    Psi = Banded(psi, q + 1, q + 1, k1)
     SAPhi = add(scale(A, gp.sigma**2), Phi)
     ops = DimOps(A=A, Phi=Phi, SAPhi=SAPhi, sort_idx=sort_idx,
-                 rank_idx=rank_idx, sigma2=gp.sigma**2)
-    X = jnp.concatenate([gp.X, x_new[None]], axis=0)
-    Y = jnp.concatenate([gp.Y, y_new[None]])
-    # warm start: splice the pre-insert solution; the new point (original
-    # index n) inherits its sorted left neighbour's value — the solve is a
-    # smoothed field per dim, so this is already near-converged.
-    us = gp.ops.to_sorted(gp.u_sy)  # (D, n)
-    est = jnp.take_along_axis(us, jnp.clip(p - 1, 0, n - 1)[:, None], axis=1)
-    x0 = jnp.concatenate([gp.u_sy, est], axis=1)
+                 rank_idx=rank_idx, sigma2=gp.sigma**2, n_active=k1)
+    # the new observation's original index is k: one in-place slot write
+    X = gp.X.at[k].set(x_new)
+    Y = mask_rows(gp.Y, k, axis=0).at[k].set(y_new)
+    # warm start: the pre-insert solution with slot k seeded from its sorted
+    # left neighbour — the solve is a smoothed field per dim, so this is
+    # already near-converged.
+    us = gp.ops.to_sorted(gp.u_sy)  # (D, C), canonical zero tail
+    est = jnp.take_along_axis(us, jnp.clip(p - 1, 0, C - 1)[:, None], axis=1)
+    x0 = mask_rows(gp.u_sy, k, axis=1).at[jnp.arange(gp.D), k].set(est[:, 0])
     u_sy, bY, Gband = posterior_caches(config, ops, Y, x0=x0, iters=iters)
     return AdditiveGP(X=X, Y=Y, omega=gp.omega, sigma=gp.sigma, xs=xs,
                       ops=ops, B=B, Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband,
-                      config=config)
+                      config=config, n_active=k1)
 
 
-def insert(gp: AdditiveGP, x_new, y_new, *, iters: int | None = None) -> AdditiveGP:
+def insert(gp: AdditiveGP, x_new, y_new, *, iters: int | None = None,
+           count: int | None = None) -> AdditiveGP:
     """Grow ``gp`` by one observation with O(q)-window factor updates.
 
     Posterior mean/variance match a full ``fit`` on the concatenated dataset
@@ -155,12 +207,123 @@ def insert(gp: AdditiveGP, x_new, y_new, *, iters: int | None = None) -> Additiv
     solve inside). ``iters`` caps the warm backfitting solve; the default
     ``solver_iters // 4`` (>= 8) reconverges from the spliced previous
     solution on well-conditioned problems.
+
+    With free capacity (``n_active < capacity``) the update is fully in
+    place: one compiled step serves every insert at that capacity — zero
+    recompilation. A full (or unpadded) GP is first re-homed into a
+    one-larger allocation, which recompiles; callers that stream many
+    inserts should pre-pad via ``fit(..., capacity=)`` /
+    ``with_capacity`` (the serving engine grows by doubling).
+
+    ``count`` optionally supplies the host-known active point count; without
+    it the capacity-overflow guard reads ``n_active`` back from the device,
+    which blocks on the previous insert's computation (one sync per insert —
+    callers that track the count, like the serving engine, should pass it
+    so back-to-back inserts dispatch asynchronously).
     """
     if iters is None:
         iters = max(8, gp.config.solver_iters // 4)
+    if gp.n_active is None:
+        gp = with_capacity(gp, gp.n + 1)
+    elif (gp.num_points() if count is None else int(count)) >= gp.n:
+        gp = with_capacity(gp, gp.n + 1)
     x_new = jnp.asarray(x_new, gp.X.dtype)
     y_new = jnp.asarray(y_new, gp.Y.dtype)
     return _insert_impl(gp, x_new, y_new, int(iters))
+
+
+def _evict_dim(q: int, k, omega_d, xs_d, sort_d, rank_d, a_d, phi_d, b_d,
+               psi_d, p):
+    """One dimension's windowed deletion at sorted position ``p``.
+
+    The mirror image of ``_insert_dim``: rows past ``p`` shift up, the O(q)
+    window around ``p`` is rebuilt exactly at the new active count ``k - 1``,
+    and the permutations update in closed form (the evicted point is original
+    index 0, so every surviving original index decrements).
+    """
+    C = xs_d.shape[0]
+    j = jnp.arange(C)
+    xs_new = _delete_vec(xs_d, p)
+    k1 = k - 1
+    sort_new = jnp.where(j < k1, _delete_vec(sort_d, p) - 1,
+                         j.astype(sort_d.dtype))
+    rank_shift = _delete_vec(rank_d, 0)  # original-index axis shifts down
+    rank_new = jnp.where(
+        j < k1, rank_shift - (rank_shift > p).astype(rank_d.dtype),
+        j.astype(rank_d.dtype))
+
+    ra = 2 * q + 4
+    rows_a = jnp.clip(p - ra + jnp.arange(2 * ra + 1), 0, jnp.maximum(k1 - 1, 0))
+    a_rows = kp_coefficient_rows(q, omega_d, xs_new, rows_a, n_active=k1)
+    a_new = _delete_rows(a_d, p).at[rows_a].set(a_rows)
+    kfun = lambda x, y: mk.matern(q, omega_d, x, y)
+    phi_rows = gram_band_rows(kfun, xs_new, a_rows, rows_a, q + 1, q + 1, q,
+                              n_active=k1)
+    phi_new = _delete_rows(phi_d, p).at[rows_a].set(phi_rows)
+
+    rb = 2 * q + 6
+    rows_b = jnp.clip(p - rb + jnp.arange(2 * rb + 1), 0, jnp.maximum(k1 - 1, 0))
+    b_rows = kp_coefficient_rows(q + 1, omega_d, xs_new, rows_b, n_active=k1)
+    b_new = _delete_rows(b_d, p).at[rows_b].set(b_rows)
+    dkfun = lambda x, y: mk.matern_domega(q, omega_d, x, y)
+    psi_rows = gram_band_rows(dkfun, xs_new, b_rows, rows_b, q + 2, q + 2,
+                              q + 1, n_active=k1)
+    psi_new = _delete_rows(psi_d, p).at[rows_b].set(psi_rows)
+    a_new = canonical_band(a_new, q + 1, q + 1, k1)
+    phi_new = canonical_band(phi_new, q, q, k1)
+    b_new = canonical_band(b_new, q + 2, q + 2, k1)
+    psi_new = canonical_band(psi_new, q + 1, q + 1, k1)
+    return xs_new, sort_new, rank_new, a_new, phi_new, b_new, psi_new
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _evict_impl(gp: AdditiveGP, iters: int) -> AdditiveGP:
+    config = gp.config
+    q = config.q
+    k = jnp.asarray(gp.active(), jnp.int32)
+    p = gp.ops.rank_idx[:, 0]  # sorted position of the oldest point, per dim
+    xs, sort_idx, rank_idx, a, phi, b, psi = jax.vmap(
+        lambda om, xd, sd, rd, ad, pd, bd, qd, pp: _evict_dim(
+            q, k, om, xd, sd, rd, ad, pd, bd, qd, pp)
+    )(gp.omega, gp.xs, gp.ops.sort_idx, gp.ops.rank_idx, gp.ops.A.data,
+      gp.ops.Phi.data, gp.B.data, gp.Psi.data, p)
+    k1 = k - 1
+    A = Banded(a, q + 1, q + 1, k1)
+    Phi = Banded(phi, q, q, k1)
+    B = Banded(b, q + 2, q + 2, k1)
+    Psi = Banded(psi, q + 1, q + 1, k1)
+    SAPhi = add(scale(A, gp.sigma**2), Phi)
+    ops = DimOps(A=A, Phi=Phi, SAPhi=SAPhi, sort_idx=sort_idx,
+                 rank_idx=rank_idx, sigma2=gp.sigma**2, n_active=k1)
+    # original order shifts down by one everywhere (index 0 evicted)
+    X = _delete_rows(gp.X, 0)
+    Y = mask_rows(_delete_vec(gp.Y, 0), k1, axis=0)
+    # warm start: the surviving entries of the pre-evict solution
+    x0 = mask_rows(jax.vmap(lambda u: _delete_vec(u, 0))(gp.u_sy), k1, axis=1)
+    u_sy, bY, Gband = posterior_caches(config, ops, Y, x0=x0, iters=iters)
+    return AdditiveGP(X=X, Y=Y, omega=gp.omega, sigma=gp.sigma, xs=xs,
+                      ops=ops, B=B, Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband,
+                      config=config, n_active=k1)
+
+
+def evict(gp: AdditiveGP, *, iters: int | None = None,
+          count: int | None = None) -> AdditiveGP:
+    """Drop the *oldest* observation (sliding-window mode) — in place.
+
+    The capacity (and therefore peak memory and the compiled step) is
+    unchanged: the freed slot becomes padding and the next ``insert`` reuses
+    it. ``insert`` + ``evict`` pairs at a fixed capacity are the
+    bounded-memory serving loop of a long-running stream. ``iters`` caps the
+    warm re-solve exactly like ``insert``'s; ``count`` is the same optional
+    host-known active count (skips the device sync of the emptiness guard).
+    """
+    if iters is None:
+        iters = max(8, gp.config.solver_iters // 4)
+    if gp.n_active is None:
+        gp = with_capacity(gp, gp.n)  # mark active count; capacity unchanged
+    if (gp.num_points() if count is None else int(count)) <= 1:
+        raise ValueError("cannot evict from a GP with a single observation")
+    return _evict_impl(gp, int(iters))
 
 
 def refresh_local_cache(gp: AdditiveGP, cache: LocalAcqCache, *,
@@ -169,8 +332,11 @@ def refresh_local_cache(gp: AdditiveGP, cache: LocalAcqCache, *,
     """Update the dense ``M~`` acquisition cache after one ``insert``.
 
     ``gp`` is the post-insert GP (n points); ``cache`` is the pre-insert
-    cache (n-1 points). The spliced row/column at each dimension's insertion
-    position start as copies of the nearest sorted neighbour:
+    cache (n-1 points). Requires a *full* GP (``n_active == capacity`` — the
+    shape of the dense cache tracks the point count, so the capacity-padded
+    partial case has no O(1) cache to refresh). The spliced row/column at
+    each dimension's insertion position start as copies of the nearest
+    sorted neighbour:
 
       * ``mode="copy"`` stops there — zero solves, the paper's O(1)
         small-learning-rate path. Entries are stale by the (exponentially
@@ -181,6 +347,10 @@ def refresh_local_cache(gp: AdditiveGP, cache: LocalAcqCache, *,
         O(n D) full rebuild of ``build_local_cache``.
     """
     D, n = gp.D, gp.n
+    if gp.num_points() != n:
+        raise ValueError(
+            "refresh_local_cache needs a full GP (n_active == capacity); "
+            f"got {gp.num_points()} active of {n}")
     q = gp.config.q
     R = exact_radius if exact_radius is not None else 2 * q + 4
     M = cache.M_tilde  # (D, n-1, D, n-1), sorted indices on both sides

@@ -1,0 +1,380 @@
+"""Capacity-padded, mask-aware GP core (PR 5).
+
+Load-bearing properties:
+
+  * padded-vs-unpadded parity: a GP fitted at ``capacity > n`` must produce
+    the same fit caches (bit-for-bit), posterior mean/var, MLL and MLL
+    gradients as the unpadded fit — the padding is a no-op, not an
+    approximation (stochastic estimators included: probes are row-keyed, so
+    the draw is capacity-invariant);
+  * in-place streaming: ``insert``/``evict`` at fixed capacity reuse ONE
+    compiled step (zero recompilation) and match fresh fits on the
+    surviving window;
+  * tail isolation: NaN/garbage poison in every padded tail slot must never
+    influence any active result;
+  * diagnostics: ``solve_mhat(return_info=True)`` reports ``n_active`` and
+    the PCG tol early-exit norm is computed over the active prefix only.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GPConfig, fit, log_likelihood, mll_gradients,
+                        posterior_mean, posterior_var, with_capacity)
+from repro.core.backfitting import DimOps, SolveConfig, solve_mhat
+from repro.core.banded import Banded
+from repro.streaming import GPServeEngine, evict, insert
+import repro.streaming.updates as updates_mod
+
+CFG = GPConfig(q=0, solver="pcg", solver_iters=60, backend="jax")
+
+
+def _data(n, D=2, seed=0, scale=5.0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.random((n, D)) * scale)
+    Y = jnp.asarray(np.sin(np.asarray(X)).sum(1) + 0.1 * rng.standard_normal(n))
+    omega = jnp.asarray(0.8 + rng.random(D))
+    return X, Y, omega
+
+
+def _poison_tails(gp):
+    """NaN every float tail slot and garbage every int tail slot."""
+    k, C = gp.num_points(), gp.n
+    assert k < C, "poison test needs spare capacity"
+
+    def prow(x, axis):
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(k, None)
+        bad = (jnp.nan if jnp.issubdtype(x.dtype, jnp.floating)
+               else jnp.asarray(2**30, x.dtype))
+        return x.at[tuple(idx)].set(bad)
+
+    def pband(b, axis=1):
+        return Banded(prow(b.data, axis), b.lo, b.hi, b.n_active)
+
+    ops = gp.ops
+    ops_p = DimOps(A=pband(ops.A), Phi=pband(ops.Phi), SAPhi=pband(ops.SAPhi),
+                   sort_idx=prow(ops.sort_idx, 1), rank_idx=prow(ops.rank_idx, 1),
+                   sigma2=ops.sigma2, n_active=ops.n_active)
+    return dataclasses.replace(
+        gp, X=prow(gp.X, 0), Y=prow(gp.Y, 0), xs=prow(gp.xs, 1), ops=ops_p,
+        B=pband(gp.B), Psi=pband(gp.Psi), bY=prow(gp.bY, 1),
+        u_sy=prow(gp.u_sy, 1), Gband=pband(gp.Gband))
+
+
+# ---------------------------------------------------------------------------
+# padded-vs-unpadded parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,cap",
+    [(16, 24), pytest.param(20, 32, marks=pytest.mark.slow)])
+def test_padded_fit_parity_jax(n, cap):
+    X, Y, omega = _data(n, seed=1)
+    gp = fit(CFG, X, Y, omega, 0.3)
+    gpp = fit(CFG, X, Y, omega, 0.3, capacity=cap)
+    assert gpp.n == cap and gpp.num_points() == n
+    # fit caches are padded copies: bit-for-bit on the active prefix
+    for got, want in [
+        (gpp.ops.A.data[:, :n], gp.ops.A.data),
+        (gpp.ops.Phi.data[:, :n], gp.ops.Phi.data),
+        (gpp.B.data[:, :n], gp.B.data),
+        (gpp.u_sy[:, :n], gp.u_sy),
+        (gpp.bY[:, :n], gp.bY),
+        (gpp.Gband.data[:, :n], gp.Gband.data),
+        (gpp.xs[:, :n], gp.xs),
+    ]:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # query-path parity (capacity-wide solves/reductions under the mask)
+    rng = np.random.default_rng(3)
+    Xq = jnp.asarray(rng.random((6, gp.D)) * 5)
+    np.testing.assert_array_equal(np.asarray(posterior_mean(gp, Xq)),
+                                  np.asarray(posterior_mean(gpp, Xq)))
+    np.testing.assert_allclose(np.asarray(posterior_var(gp, Xq)),
+                               np.asarray(posterior_var(gpp, Xq)),
+                               rtol=0, atol=1e-12)
+    # MLL + gradients: bit-parity of the *stochastic* parts too (f64), via
+    # the row-keyed capacity-invariant probe draw
+    key = jax.random.PRNGKey(7)
+    l0, l1 = log_likelihood(gp, key), log_likelihood(gpp, key)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-12)
+    g0, g1 = mll_gradients(gp, key), mll_gradients(gpp, key)
+    np.testing.assert_allclose(np.asarray(g0[0]), np.asarray(g1[0]),
+                               rtol=0, atol=1e-11)
+    np.testing.assert_allclose(float(g0[1]), float(g1[1]), rtol=1e-10,
+                               atol=1e-11)
+
+
+def test_padded_fit_parity_pallas_interpret():
+    # interpret-mode pallas is python-overhead-bound: keep it tiny
+    cfg = GPConfig(q=1, solver="pcg", solver_iters=20, backend="pallas")
+    X, Y, omega = _data(8, seed=2)
+    gp = fit(cfg, X, Y, omega, 1.0)
+    gpp = fit(cfg, X, Y, omega, 1.0, capacity=12)
+    rng = np.random.default_rng(3)
+    Xq = jnp.asarray(rng.random((4, gp.D)) * 5)
+    np.testing.assert_allclose(np.asarray(posterior_mean(gp, Xq)),
+                               np.asarray(posterior_mean(gpp, Xq)),
+                               rtol=0, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(posterior_var(gp, Xq)),
+                               np.asarray(posterior_var(gpp, Xq)),
+                               rtol=0, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# in-place streaming: insert / evict
+# ---------------------------------------------------------------------------
+
+
+def test_insert_in_place_matches_padded_fresh_fit():
+    n, cap = 20, 32
+    X, Y, omega = _data(n + 1, seed=4)
+    gpp = fit(CFG, X[:n], Y[:n], omega, 0.3, capacity=cap)
+    grown = insert(gpp, X[n], Y[n], iters=60)
+    assert grown.n == cap and grown.num_points() == n + 1  # no reallocation
+    ref = fit(CFG, X, Y, omega, 0.3, capacity=cap)
+    k = n + 1
+    # the windowed factor update is exact; stored factors are canonical, so
+    # the whole capacity arrays (active + identity tails) match bit-for-bit
+    np.testing.assert_array_equal(np.asarray(grown.ops.A.data),
+                                  np.asarray(ref.ops.A.data))
+    np.testing.assert_array_equal(np.asarray(grown.ops.Phi.data),
+                                  np.asarray(ref.ops.Phi.data))
+    np.testing.assert_array_equal(np.asarray(grown.B.data),
+                                  np.asarray(ref.B.data))
+    np.testing.assert_array_equal(np.asarray(grown.ops.sort_idx),
+                                  np.asarray(ref.ops.sort_idx))
+    np.testing.assert_array_equal(np.asarray(grown.ops.rank_idx),
+                                  np.asarray(ref.ops.rank_idx))
+    np.testing.assert_allclose(np.asarray(grown.xs[:, :k]),
+                               np.asarray(ref.xs[:, :k]), rtol=0, atol=1e-12)
+    rng = np.random.default_rng(5)
+    Xq = jnp.asarray(rng.random((6, gpp.D)) * 5)
+    np.testing.assert_allclose(np.asarray(posterior_mean(grown, Xq)),
+                               np.asarray(posterior_mean(ref, Xq)),
+                               rtol=0, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(posterior_var(grown, Xq)),
+                               np.asarray(posterior_var(ref, Xq)),
+                               rtol=0, atol=1e-7)
+
+
+def test_insert_then_evict_roundtrip_matches_surviving_window_fit():
+    n, cap = 18, 32
+    X, Y, omega = _data(n + 2, seed=6)
+    gp = fit(CFG, X[:n], Y[:n], omega, 0.3, capacity=cap)
+    for i in range(n, n + 2):
+        gp = insert(gp, X[i], Y[i], iters=60)
+    for _ in range(2):
+        gp = evict(gp, iters=60)  # drops the two oldest: X[0], X[1]
+    assert gp.num_points() == n and gp.n == cap
+    ref = fit(CFG, X[2:], Y[2:], omega, 0.3, capacity=cap)
+    k = gp.num_points()
+    np.testing.assert_array_equal(np.asarray(gp.ops.A.data[:, :k]),
+                                  np.asarray(ref.ops.A.data[:, :k]))
+    np.testing.assert_array_equal(np.asarray(gp.ops.sort_idx[:, :k]),
+                                  np.asarray(ref.ops.sort_idx[:, :k]))
+    rng = np.random.default_rng(7)
+    Xq = jnp.asarray(rng.random((6, gp.D)) * 5)
+    np.testing.assert_allclose(np.asarray(posterior_mean(gp, Xq)),
+                               np.asarray(posterior_mean(ref, Xq)),
+                               rtol=0, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(posterior_var(gp, Xq)),
+                               np.asarray(posterior_var(ref, Xq)),
+                               rtol=0, atol=1e-7)
+
+
+def test_insert_evict_zero_recompile_at_fixed_capacity():
+    n, cap = 10, 64
+    X, Y, omega = _data(40, seed=8)
+    gp = fit(CFG, X[:n], Y[:n], omega, 0.3, capacity=cap)
+    gp = insert(gp, X[n], Y[n], iters=8)   # warm the insert trace
+    gp = evict(gp, iters=8)                # warm the evict trace
+    c_ins = updates_mod._insert_impl._cache_size()
+    c_evi = updates_mod._evict_impl._cache_size()
+    for i in range(n + 1, n + 13):
+        gp = insert(gp, X[i], Y[i], iters=8)
+    for _ in range(6):
+        gp = evict(gp, iters=8)
+    # ZERO new traces across 12 inserts + 6 evicts at fixed capacity
+    assert updates_mod._insert_impl._cache_size() == c_ins
+    assert updates_mod._evict_impl._cache_size() == c_evi
+    # warm insert/evict cancel: n + 1 - 1 + 12 - 6
+    assert gp.num_points() == n + 6 and gp.n == cap
+
+
+# ---------------------------------------------------------------------------
+# tail isolation (property test: poison every padded slot)
+# ---------------------------------------------------------------------------
+
+
+def test_tail_poison_never_influences_active_results():
+    n, cap = 14, 32
+    X, Y, omega = _data(n + 1, seed=9)
+    gp = fit(CFG, X[:n], Y[:n], omega, 0.3, capacity=cap)
+    bad = _poison_tails(gp)
+    rng = np.random.default_rng(10)
+    Xq = jnp.asarray(rng.random((5, gp.D)) * 5)
+    np.testing.assert_array_equal(np.asarray(posterior_mean(gp, Xq)),
+                                  np.asarray(posterior_mean(bad, Xq)))
+    np.testing.assert_array_equal(np.asarray(posterior_var(gp, Xq)),
+                                  np.asarray(posterior_var(bad, Xq)))
+    key = jax.random.PRNGKey(11)
+    np.testing.assert_array_equal(np.asarray(log_likelihood(gp, key)),
+                                  np.asarray(log_likelihood(bad, key)))
+    g0, g1 = mll_gradients(gp, key), mll_gradients(bad, key)
+    np.testing.assert_array_equal(np.asarray(g0[0]), np.asarray(g1[0]))
+    np.testing.assert_array_equal(np.asarray(g0[1]), np.asarray(g1[1]))
+    # a solve through the poisoned operator stack is identical too
+    SY = jnp.broadcast_to(Y[None, :n], (gp.D, n))
+    SYp = jnp.zeros((gp.D, cap), SY.dtype).at[:, :n].set(SY)
+    cfg = SolveConfig(method="pcg", iters=30, backend="jax")
+    np.testing.assert_array_equal(
+        np.asarray(solve_mhat(gp.ops, SYp, cfg)),
+        np.asarray(solve_mhat(bad.ops, SYp, cfg)))
+    # and mutations on the poisoned GP produce identical active state
+    a = insert(gp, X[n], Y[n], iters=10)
+    b = insert(bad, X[n], Y[n], iters=10)
+    k = a.num_points()
+    np.testing.assert_array_equal(np.asarray(a.u_sy[:, :k]),
+                                  np.asarray(b.u_sy[:, :k]))
+    np.testing.assert_array_equal(np.asarray(a.ops.A.data[:, :k]),
+                                  np.asarray(b.ops.A.data[:, :k]))
+    a2, b2 = evict(a, iters=10), evict(b, iters=10)
+    k2 = a2.num_points()
+    np.testing.assert_array_equal(np.asarray(a2.u_sy[:, :k2]),
+                                  np.asarray(b2.u_sy[:, :k2]))
+
+
+# ---------------------------------------------------------------------------
+# solver diagnostics under padding
+# ---------------------------------------------------------------------------
+
+
+def test_solve_info_reports_n_active_and_active_prefix_tol():
+    n, cap = 16, 48
+    X, Y, omega = _data(n, seed=12)
+    gp = fit(CFG, X, Y, omega, 0.3)
+    gpp = with_capacity(gp, cap)
+    cfg = SolveConfig(method="pcg", iters=50, tol=1e-8, backend="jax")
+    SY = jnp.broadcast_to(Y[None, :], (gp.D, n))
+    SYp = jnp.zeros((gp.D, cap), SY.dtype).at[:, :n].set(SY)
+    _, info = solve_mhat(gp.ops, SY, cfg, return_info=True)
+    _, info_p = solve_mhat(gpp.ops, SYp, cfg, return_info=True)
+    assert int(info.n_active) == n
+    assert int(info_p.n_active) == n
+    # the tol residual norm sees the active prefix only: the padded solve
+    # must exit after exactly as many iterations as the unpadded one
+    assert int(info_p.iters) == int(info.iters) < 50
+    # ... even when the tail is poisoned
+    bad = _poison_tails(gpp)
+    _, info_b = solve_mhat(bad.ops, SYp, cfg, return_info=True)
+    assert int(info_b.iters) == int(info.iters)
+
+
+# ---------------------------------------------------------------------------
+# engine: capacity tiers, sliding window, version fence across evict
+# ---------------------------------------------------------------------------
+
+
+def test_engine_version_fence_across_evict_and_window():
+    n = 12
+    X, Y, omega = _data(n + 6, seed=13)
+    cfg = GPConfig(q=0, solver="pcg", solver_iters=40, backend="jax")
+    gp = fit(cfg, X[:n], Y[:n], omega, 0.3)
+    bounds = jnp.asarray([[0.0, 5.0]] * 2)
+    eng = GPServeEngine(gp, bounds, batch_slots=2, insert_iters=40,
+                        window=n + 2)
+    assert eng.capacity == 16 and eng.num_points == n  # window tier, padded
+    inflight = eng.submit(np.asarray(X[0]), kind="ascend", steps=3)
+    eng.step()  # admit + first tick
+    for i in range(n, n + 4):  # 4 inserts; the window (14) forces 2 evicts
+        eng.insert(np.asarray(X[i]), float(Y[i]))
+    after = eng.submit(np.asarray(X[1]), kind="mean")
+    eng.run_until_done()
+    assert inflight.result["version"] == 0          # pinned pre-mutation
+    # 4 inserts + 2 evicts = 6 version bumps, all applied at one fence
+    assert eng.version == 6 and after.result["version"] == 6
+    assert eng.num_points == n + 2 and eng.capacity == 16  # memory bounded
+    # the served posterior equals a fresh fit on the surviving window
+    survive = slice(2, n + 4)  # 2 oldest evicted
+    ref = fit(cfg, X[survive], Y[survive], omega, 0.3)
+    mu = float(posterior_mean(ref, X[1][None])[0])
+    assert abs(after.result["mean"] - mu) < 1e-5
+
+
+def test_engine_over_evict_fails_at_stage_time_without_wedging():
+    n = 4
+    X, Y, omega = _data(n + 1, seed=15)
+    cfg = GPConfig(q=0, solver="pcg", solver_iters=20, backend="jax")
+    gp = fit(cfg, X[:n], Y[:n], omega, 0.3)
+    eng = GPServeEngine(gp, jnp.asarray([[0.0, 5.0]] * 2), batch_slots=2,
+                        insert_iters=20)
+    for _ in range(n - 1):
+        eng.evict()
+    # dropping the last observation is rejected when staged, not at the
+    # fence — a fence-time failure would poison every subsequent step()
+    with pytest.raises(ValueError, match="below one observation"):
+        eng.evict()
+    # the engine still serves: staged (valid) evicts apply and queries run
+    q = eng.submit(np.asarray(X[0]), kind="mean")
+    eng.run_until_done()
+    assert q.done and eng.num_points == 1
+
+
+def test_engine_window_drains_oversized_start():
+    # constructed ABOVE the window: inserts must drain the excess, not pin
+    # the count at the initial size forever
+    n, W = 12, 8
+    X, Y, omega = _data(n + 2, seed=16)
+    cfg = GPConfig(q=0, solver="pcg", solver_iters=20, backend="jax")
+    gp = fit(cfg, X[:n], Y[:n], omega, 0.3)
+    eng = GPServeEngine(gp, jnp.asarray([[0.0, 5.0]] * 2), batch_slots=2,
+                        insert_iters=20, window=W)
+    eng.insert(np.asarray(X[n]), float(Y[n]))
+    eng.step()
+    assert eng.num_points == W  # drained 12 -> 7, then inserted -> 8
+    eng.insert(np.asarray(X[n + 1]), float(Y[n + 1]))
+    eng.step()
+    assert eng.num_points == W  # steady sliding state
+
+
+def test_engine_set_posterior_accepts_larger_prepadded_fit():
+    # a replacement fitted with a bigger capacity than the engine's tier
+    # (the recommended pre-padded refit form) must re-home, not wedge the
+    # fence with a capacity-shrink error
+    n = 6
+    X, Y, omega = _data(n, seed=17)
+    cfg = GPConfig(q=0, solver="pcg", solver_iters=20, backend="jax")
+    gp = fit(cfg, X, Y, omega, 0.3)
+    eng = GPServeEngine(gp, jnp.asarray([[0.0, 5.0]] * 2), batch_slots=2,
+                        insert_iters=20)
+    assert eng.capacity == 8
+    big = fit(cfg, X, Y, omega, 0.3, capacity=64)
+    eng.set_posterior(big)
+    q = eng.submit(np.asarray(X[0]), kind="mean")
+    eng.run_until_done()
+    assert q.done and eng.capacity == 64 and eng.num_points == n
+    assert abs(q.result["mean"] - float(posterior_mean(big, X[0][None])[0])) < 1e-9
+
+
+@pytest.mark.slow
+def test_engine_grows_by_capacity_doubling():
+    n = 7
+    X, Y, omega = _data(30, seed=14)
+    cfg = GPConfig(q=0, solver="pcg", solver_iters=20, backend="jax")
+    gp = fit(cfg, X[:n], Y[:n], omega, 0.3)
+    bounds = jnp.asarray([[0.0, 5.0]] * 2)
+    eng = GPServeEngine(gp, bounds, batch_slots=2, insert_iters=20)
+    assert eng.capacity == 8
+    caps = set()
+    for i in range(n, n + 12):
+        eng.insert(np.asarray(X[i]), float(Y[i]))
+        eng.step()
+        caps.add(eng.capacity)
+    assert eng.num_points == n + 12
+    # grow-by-doubling: capacity tiers only, never per-n allocations
+    assert caps == {8, 16, 32}

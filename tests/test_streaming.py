@@ -269,7 +269,7 @@ def test_engine_insert_fence_and_versioning(base):
     # the mutation applied only after the fence, and later queries see it
     assert inflight.result["version"] == 0
     assert after.result["version"] == 1
-    assert eng.version == 1 and eng.gp.n == N + 1
+    assert eng.version == 1 and eng.num_points == N + 1
     mu = float(posterior_mean(eng.gp, X[1][None])[0])
     assert abs(after.result["mean"] - mu) < 1e-9
 

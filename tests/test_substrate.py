@@ -1,18 +1,14 @@
-"""Substrate tests: optimizer, checkpoint/restore, pipeline determinism,
-grad compression, serving engine, elastic re-mesh, short end-to-end training."""
-import os
-
+"""Substrate tests: checkpoint/restore, pipeline determinism, serving
+engine, elastic re-mesh. The LM model/training scaffolding the seed shipped
+was pruned (see ROADMAP "Pruned seed scaffolding"); the serving engine is
+exercised with a minimal stub model instead of a transformer build."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.checkpoint import Checkpointer
-from repro.configs import ARCHS, reduced
 from repro.data import ShardedBatches, rastrigin, schwefel
-from repro.models import Parallel, build
-from repro.training import AdamWConfig, adamw_init, make_train_step
-from repro.training.grad_compress import ef_state_init, make_ef_int8_compressor
 
 
 def test_test_functions_match_paper_formulas():
@@ -31,92 +27,46 @@ def test_pipeline_deterministic_skip():
     assert np.array_equal(np.array(batches[3]["tokens"]), np.array(b3["tokens"]))
 
 
-@pytest.mark.slow
-def test_adamw_descends_quadratic():
-    cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=100, weight_decay=0.0)
-    params = {"w": jnp.asarray([3.0, -2.0])}
-    state = adamw_init(params)
-    for _ in range(100):
-        grads = {"w": 2 * params["w"]}
-        params, state, m = jax.jit(
-            lambda p, g, s: __import__("repro.training.optimizer",
-                                       fromlist=["adamw_update"]).adamw_update(cfg, p, g, s)
-        )(params, grads, state)
-    assert float(jnp.abs(params["w"]).max()) < 0.2
-
-
 def test_checkpoint_roundtrip(tmp_path):
     ck = Checkpointer(str(tmp_path), keep=2)
     tree = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 3))}}
     ck.save(10, tree, blocking=True)
     ck.save(20, tree, blocking=True)
-    restored, step = ck.restore(tree)
-    assert step == 20
+    restored, step = ck.restore(jax.tree_util.tree_map(jnp.zeros_like, tree))
     assert np.array_equal(np.array(restored["a"]), np.arange(5.0))
     # atomic LATEST pointer
-    assert ck.latest_step() == 20
+    assert ck.latest_step() == 20 and step == 20
 
 
-def test_grad_compressor_error_feedback():
-    comp = make_ef_int8_compressor()
-    params = {"w": jnp.zeros(100)}
-    state = {"ef": ef_state_init(params)}
-    rng = np.random.default_rng(0)
-    total_true = np.zeros(100)
-    total_comp = np.zeros(100)
-    for _ in range(50):
-        g = {"w": jnp.asarray(rng.standard_normal(100), jnp.float32)}
-        gq, state = comp(g, state)
-        total_true += np.array(g["w"])
-        total_comp += np.array(gq["w"])
-    # error feedback keeps the *accumulated* gradient nearly unbiased
-    denom = np.abs(total_true).mean()
-    assert np.abs(total_true - total_comp).mean() < 0.05 * denom + 0.05
+class _StubModel:
+    """Minimal decode-only model: greedy next token = (token + 1) % vocab."""
 
+    vocab = 17
 
-@pytest.mark.slow
-def test_end_to_end_training_loss_decreases(tmp_path):
-    from repro.launch.train import main
+    def init_cache(self, B, ctx):
+        return {"pos": jnp.zeros((B,), jnp.int32)}
 
-    loss = main([
-        "--arch", "smollm-360m", "--reduced", "--width", "128", "--layers", "2",
-        "--steps", "30", "--batch", "8", "--seq", "64", "--lr", "5e-3",
-        "--ckpt-dir", str(tmp_path), "--ckpt-every", "1000",
-    ])
-    # zipf+bigram stream: must beat the trivial initial loss by a clear margin
-    assert loss < 4.5, loss
-
-
-@pytest.mark.slow
-def test_checkpoint_resume_continues(tmp_path):
-    from repro.launch.train import main
-
-    main(["--arch", "smollm-360m", "--reduced", "--width", "64", "--layers", "2",
-          "--steps", "6", "--batch", "4", "--seq", "32",
-          "--ckpt-dir", str(tmp_path), "--ckpt-every", "5"])
-    ck = Checkpointer(str(tmp_path))
-    assert ck.latest_step() == 5
-    # resume picks up from step 5 and reaches 8
-    main(["--arch", "smollm-360m", "--reduced", "--width", "64", "--layers", "2",
-          "--steps", "8", "--batch", "4", "--seq", "32", "--resume",
-          "--ckpt-dir", str(tmp_path), "--ckpt-every", "3"])
-    assert ck.latest_step() >= 6
+    def decode_step(self, params, cache, tokens, pos, par):
+        nxt = (tokens[:, 0] + 1) % self.vocab
+        logits = jax.nn.one_hot(nxt, self.vocab)[:, None, :] * 10.0
+        return logits, cache
 
 
 def test_serving_engine_completes_requests():
     from repro.serving import ServeEngine
     from repro.serving.engine import Request
 
-    cfg = reduced(ARCHS["smollm-360m"], layers=2, width=64)
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(model, params, Parallel(mesh=None), batch_slots=4,
+    eng = ServeEngine(_StubModel(), params={}, par=None, batch_slots=4,
                       ctx=64, eos_id=-1)
     for rid in range(6):
         eng.submit(Request(rid=rid, prompt=[1 + rid, 2, 3], max_new=5))
     done = eng.run_until_done(max_ticks=200)
     assert len(done) == 6
     assert all(len(r.out) == 5 for r in done)
+    # greedy stub decodes deterministically: token + 1 chains from the
+    # last prompt token
+    for r in done:
+        assert r.out[0] == 4 and r.out[1] == 5
 
 
 def test_elastic_mesh_rebuild():
