@@ -1,0 +1,139 @@
+"""Multi-tenant fleet serving: throughput scaling + compile-count flatness.
+
+``PYTHONPATH=src python -m benchmarks.fleet_serving [--full]``
+
+The claim under test (PR 6 acceptance): a ``GPFleetEngine`` holding T tenants
+serves mixed query streams and per-tenant insert/evict streams through ONE
+jitted step per capacity-tier group — the tenant axis rides the vmapped lane
+dimension of the same kernels, so
+
+  * the compile count stays flat in T at a fixed tier mix (``step_retraces``
+    / ``insert_retraces`` / ``evict_retraces`` per row must be <= 2, the CI
+    artifact gate, mirroring ``BENCH_capacity.json``);
+  * per-tenant serving cost COLLAPSES as T grows: one lane-batched dispatch
+    amortizes the fixed XLA/dispatch overhead over all tenants, so the
+    per-query wall at T=64 must stay well under 2x the T=1 wall (it is
+    typically far BELOW 1x).
+
+Measured per row (artifact ``benchmarks/BENCH_fleet.json``): queries/sec and
+inserts/sec at T in {1, 8, 64} ({1, 8, 64, 256} with ``--full``), per-query /
+per-insert milliseconds, and the jit-cache deltas across the measured stream.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GPConfig, fit
+from repro.streaming import GPFleetEngine
+import repro.streaming.updates as updates_mod
+
+
+def _build_engine(T, n0, D, cfg, bounds, rng, window):
+    gps = []
+    for _ in range(T):
+        X = rng.uniform(size=(n0, D)) * 10.0
+        Y = np.sin(X).sum(axis=1) + 0.1 * rng.standard_normal(n0)
+        gps.append(fit(cfg, jnp.asarray(X), jnp.asarray(Y),
+                       jnp.ones(D), 0.5))
+    return GPFleetEngine(gps, bounds, batch_slots=4, kind="ucb",
+                         insert_iters=8, window=window)
+
+
+def run(Ts=(1, 8, 64), n0=12, D=2, query_rounds=4, insert_rounds=2,
+        out_rows=None):
+    """One row per T: throughput + retrace counts at a fixed tier mix."""
+    rows = out_rows if out_rows is not None else []
+    cfg = GPConfig(q=0, solver="pcg", solver_iters=30, backend="jax")
+    rng = np.random.default_rng(0)
+    bounds = np.stack([np.zeros(D), np.ones(D) * 10.0], axis=1)
+    window = n0 + 1  # steady sliding state: every measured insert drains
+
+    per_query_ms_at = {}
+    for T in Ts:
+        eng = _build_engine(T, n0, D, cfg, bounds, rng, window)
+        # warm: one query tick + one mutation round per tier group
+        for t in range(T):
+            eng.submit(t, rng.uniform(size=D) * 10.0, kind="acq")
+        eng.run_until_done()
+        for _ in range(2):  # second round hits the window drain path too
+            for t in range(T):
+                eng.insert(t, rng.uniform(size=D) * 10.0,
+                           float(rng.standard_normal()))
+            eng.run_until_done()
+
+        step0 = GPFleetEngine.step_cache_size()
+        ins0 = updates_mod._fleet_insert_impl._cache_size()
+        ev0 = updates_mod._fleet_evict_impl._cache_size()
+
+        # measured queries: batch_slots per tenant per tick, all lanes at once
+        t0 = time.time()
+        for _ in range(query_rounds):
+            for t in range(T):
+                eng.submit(t, rng.uniform(size=D) * 10.0, kind="acq")
+            eng.run_until_done()
+        q_wall = time.time() - t0
+        n_queries = query_rounds * T
+
+        # measured inserts: per-tenant streams, one vectorized round per tick
+        t0 = time.time()
+        for _ in range(insert_rounds):
+            for t in range(T):
+                eng.insert(t, rng.uniform(size=D) * 10.0,
+                           float(rng.standard_normal()))
+            eng.run_until_done()
+        i_wall = time.time() - t0
+        n_inserts = insert_rounds * T
+
+        row = {
+            "bench": "fleet_serving",
+            "T": T,
+            "lanes": T,
+            "capacity": int(eng.capacities()[0]),
+            "queries": n_queries,
+            "queries_per_s": n_queries / q_wall,
+            "per_query_ms": 1e3 * q_wall / n_queries,
+            "inserts": n_inserts,
+            "inserts_per_s": n_inserts / i_wall,
+            "per_insert_ms": 1e3 * i_wall / n_inserts,
+            "step_retraces": GPFleetEngine.step_cache_size() - step0,
+            "insert_retraces":
+                updates_mod._fleet_insert_impl._cache_size() - ins0,
+            "evict_retraces":
+                updates_mod._fleet_evict_impl._cache_size() - ev0,
+        }
+        per_query_ms_at[T] = row["per_query_ms"]
+        rows.append(row)
+        print(f"fleet_serving,T={T},q/s={row['queries_per_s']:.1f},"
+              f"ins/s={row['inserts_per_s']:.1f},"
+              f"per_query_ms={row['per_query_ms']:.2f},"
+              f"retraces={row['step_retraces']}/{row['insert_retraces']}/"
+              f"{row['evict_retraces']}", flush=True)
+
+    if 1 in per_query_ms_at and 64 in per_query_ms_at:
+        ratio = per_query_ms_at[64] / per_query_ms_at[1]
+        print(f"fleet_serving,per_tenant_cost_T64_over_T1={ratio:.3f}",
+              flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    import json
+    import os
+    rows: list[dict] = []
+    run(Ts=(1, 8, 64, 256) if args.full else (1, 8, 64), out_rows=rows)
+    out = os.path.join(os.path.dirname(__file__), "BENCH_fleet.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {len(rows)} rows to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import backend_ablation, capacity_streaming, fig5_prediction, \
-        fig6_bayesopt, fused_sweep, streaming_updates, table1_complexity
+        fig6_bayesopt, fleet_serving, fused_sweep, streaming_updates, \
+        table1_complexity
 
     rows: list[dict] = []
     print("== Fig 5: prediction RMSE/time vs n ==", flush=True)
@@ -77,6 +78,13 @@ def main() -> None:
                                out_rows=capacity_rows)
     rows += capacity_rows
 
+    print("== Fleet serving: multi-tenant throughput, flat compile count ==",
+          flush=True)
+    fleet_rows: list[dict] = []
+    fleet_serving.run(Ts=(1, 8, 64, 256) if args.full else (1, 8, 64),
+                      out_rows=fleet_rows)
+    rows += fleet_rows
+
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {len(rows)} rows to {args.out}", flush=True)
@@ -107,6 +115,13 @@ def main() -> None:
     with open(cap_out, "w") as f:
         json.dump(capacity_rows, f, indent=1)
     print(f"wrote {len(capacity_rows)} rows to {cap_out}", flush=True)
+
+    # multi-tenant fleet serving artifact (PR 6 acceptance: throughput
+    # scaling in T with <= 2 retraces per capacity-tier group)
+    fleet_out = os.path.join(os.path.dirname(args.out), "BENCH_fleet.json")
+    with open(fleet_out, "w") as f:
+        json.dump(fleet_rows, f, indent=1)
+    print(f"wrote {len(fleet_rows)} rows to {fleet_out}", flush=True)
 
 
 if __name__ == "__main__":

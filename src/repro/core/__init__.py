@@ -25,6 +25,14 @@ from .backfitting import (  # noqa: F401
     solve_mhat,
 )
 from .band_inverse import inverse_band, variance_band  # noqa: F401
+from .fleet import (  # noqa: F401
+    GPFleet,
+    fleet_acquisition_stats,
+    fleet_fit,
+    fleet_posterior_mean,
+    fleet_posterior_var,
+    stack_gps,
+)
 from .banded import Banded  # noqa: F401
 from .kernel_packets import gkp_factors, kp_factors, phi_at, phi_grad_at  # noqa: F401
 from .stochastic import hutchinson, logdet_taylor, power_method  # noqa: F401

@@ -30,7 +30,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..masking import canonical_perm, mask_rows
+from ..masking import canonical_perm, mask_rows, tree_sum
 from .banded import Banded, matvec, solve
 
 __all__ = ["SolveConfig", "SolveInfo", "DimOps", "solve_mhat", "mhat_matvec"]
@@ -153,7 +153,9 @@ def mhat_matvec(ops: DimOps, u: jax.Array, pivot: bool = False,
                 backend: str | None = None,
                 alg: str | None = None) -> jax.Array:
     """Mhat u = Khat^{-1} u + sigma^{-2} S S^T u; u: (D, n, B)."""
-    ssT = jnp.sum(u, axis=0, keepdims=True)
+    # fixed-association sum over dims: keeps the matvec (and every Krylov
+    # iterate built on it) bitwise batch-invariant — see masking.tree_sum
+    ssT = tree_sum(u, axis=0)[None]
     return ops.khat_inv_mv(u, pivot=pivot, backend=backend,
                            alg=alg) + ssT / ops.sigma2
 
@@ -222,7 +224,7 @@ def _gauss_seidel(ops: DimOps, v: jax.Array, cfg: SolveConfig,
         return mask_rows(out, na, axis=0)
 
     def sweep(_, vt):
-        total = jnp.sum(vt, axis=0)
+        total = tree_sum(vt, axis=0)
         for d in range(D):
             r_d = v[d] - (total - vt[d]) / ops.sigma2
             new_d = solve_one_dim(d, r_d)
@@ -252,13 +254,19 @@ def _jacobi(ops: DimOps, v: jax.Array, cfg: SolveConfig,
         return fs.unpad(out)
 
     def sweep(_, vt):
-        total = jnp.sum(vt, axis=0, keepdims=True)
+        total = tree_sum(vt, axis=0)[None]
         r = v - (total - vt) / ops.sigma2
         new = ops.block_solve(r, pivot=cfg.pivot, backend=cfg.backend,
                               alg=cfg.alg)
         return (1.0 - alpha) * vt + alpha * new
 
     return jax.lax.fori_loop(0, cfg.iters, sweep, vt)
+
+
+def _det_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Per-column inner products <a, b> over the (D, n) axes of (D, n, B)
+    states, with fixed-association reductions (bitwise batch-invariant)."""
+    return tree_sum(tree_sum(a * b, axis=1), axis=0)
 
 
 def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
@@ -284,7 +292,7 @@ def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
     r = v if x0 is None else v - amv(x0)
     z = pre(r)
     p = z
-    rz = jnp.sum(r * z, axis=(0, 1))
+    rz = _det_dot(r, z)
 
     fs = _maybe_fused(ops, v, cfg)
     if fs is not None:
@@ -299,12 +307,12 @@ def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
         def body(state):
             x, r, p, rz = state
             ap = amv(p)
-            denom = jnp.sum(p * ap, axis=(0, 1))
+            denom = _det_dot(p, ap)
             alpha = rz / jnp.where(denom == 0, 1.0, denom)
             x = x + alpha * p
             r = r - alpha * ap
             z = pre(r)
-            rz_new = jnp.sum(r * z, axis=(0, 1))
+            rz_new = _det_dot(r, z)
             beta = rz_new / jnp.where(rz == 0, 1.0, rz)
             p = z + beta * p
             return (x, r, p, rz_new)

@@ -22,9 +22,44 @@ import jax
 import jax.numpy as jnp
 
 from ..masking import canonical_band
-from .banded import Banded, band_band_matmul, mask_band, transpose
+from .banded import (Banded, _solve_scan, band_band_matmul, mask_band,
+                     transpose)
 
 __all__ = ["inverse_band", "variance_band"]
+
+
+def _mm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(..., w, w) @ (..., w, w) with a fixed-association k-loop.
+
+    ``@`` / ``einsum`` lower to dot_general, whose CPU tiling (and therefore
+    accumulation order) varies with the surrounding batch width — the same
+    block product then rounds differently inside a vmapped fleet stack than
+    standalone. ``w`` is a small static bandwidth, so an unrolled
+    multiply-accumulate loop costs the same and is bitwise batch-invariant.
+    """
+    w = a.shape[-1]
+    out = a[..., :, 0:1] * b[..., 0:1, :]
+    for k in range(1, w):
+        out = out + a[..., :, k : k + 1] * b[..., k : k + 1, :]
+    return out
+
+
+def _block_solve(M: jax.Array, B: jax.Array) -> jax.Array:
+    """Solve M X = B for dense (..., w, w) blocks via the banded scan LU.
+
+    ``jnp.linalg.solve`` is a LAPACK custom call wrapped in shape-dependent
+    XLA glue; the repo's scan-based pivoted LU compiles to a self-contained
+    loop that rounds identically at every batch width. A w x w dense block
+    is just a band of half-width w-1.
+    """
+    w = M.shape[-1]
+    i = jnp.arange(w)[:, None]
+    j = i + jnp.arange(-(w - 1), w)[None, :]
+    valid = (j >= 0) & (j < w)
+    jc = jnp.clip(j, 0, w - 1)
+    band = jnp.where(valid, jnp.take_along_axis(
+        M, jnp.broadcast_to(jc, M.shape[:-2] + jc.shape), axis=-1), 0.0)
+    return _solve_scan(Banded(band, w - 1, w - 1), B, pivot=True)
 
 
 def _to_blocks(b: Banded, w: int):
@@ -77,7 +112,7 @@ def _rgf(Dg, U, L):
     # forward Schur: F_0 = D_0, F_j = D_j - L_j F_{j-1}^{-1} U_{j-1}
     def fwd(F_prev, inputs):
         D_j, U_prevj, L_j = inputs
-        F_j = D_j - L_j @ jnp.linalg.solve(F_prev, U_prevj)
+        F_j = D_j - _mm(L_j, _block_solve(F_prev, U_prevj))
         return F_j, F_j
 
     U_shift = jnp.concatenate([jnp.zeros((1, w, w), Dg.dtype), U[:-1]], axis=0)
@@ -87,7 +122,7 @@ def _rgf(Dg, U, L):
     # backward Schur: W_{T-1} = D_{T-1}, W_j = D_j - U_j W_{j+1}^{-1} L_{j+1}
     def bwd(W_next, inputs):
         D_j, U_j, L_next = inputs
-        W_j = D_j - U_j @ jnp.linalg.solve(W_next, L_next)
+        W_j = D_j - _mm(U_j, _block_solve(W_next, L_next))
         return W_j, W_j
 
     L_shift = jnp.concatenate([L[1:], jnp.zeros((1, w, w), Dg.dtype)], axis=0)
@@ -97,11 +132,11 @@ def _rgf(Dg, U, L):
     W = jnp.concatenate([W_rest, Dg[-1][None]], axis=0)
 
     # G_jj = (F_j + W_j - D_j)^{-1}
-    Gd = jnp.linalg.solve(F + W - Dg, jnp.broadcast_to(eye, Dg.shape))
+    Gd = _block_solve(F + W - Dg, jnp.broadcast_to(eye, Dg.shape))
     # G_{j, j+1} = -F_j^{-1} U_j G_{j+1, j+1}  (from block forward substitution)
-    Gu = -jax.vmap(jnp.linalg.solve)(F[:-1], jnp.einsum("jab,jbc->jac", U[:-1], Gd[1:]))
+    Gu = -_block_solve(F[:-1], _mm(U[:-1], Gd[1:]))
     # G_{j+1, j} = -W_{j+1}^{-1} L_{j+1} G_{jj}
-    Gl = -jax.vmap(jnp.linalg.solve)(W[1:], jnp.einsum("jab,jbc->jac", L[1:], Gd[:-1]))
+    Gl = -_block_solve(W[1:], _mm(L[1:], Gd[:-1]))
     zpad = jnp.zeros((1, w, w), Dg.dtype)
     return Gd, jnp.concatenate([Gu, zpad]), jnp.concatenate([Gl, zpad])
 

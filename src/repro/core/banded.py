@@ -444,8 +444,17 @@ def solve(b: Banded, rhs: jax.Array, pivot: bool = True,
 
 
 def _solve_scan(b: Banded, rhs: jax.Array, pivot: bool = True) -> jax.Array:
-    """Pure-jax banded LU solve (the "jax" backend implementation)."""
-    if b.lo == 1 and b.hi == 1 and not pivot:
+    """Pure-jax banded LU solve (the "jax" backend implementation).
+
+    Tridiagonal systems route to ``lax.linalg.tridiagonal_solve`` only where
+    it has a native kernel (GPU). Elsewhere that op is a ``lower_fun``
+    fallback XLA fuses into the surrounding graph, and the fused clones can
+    round differently per program *shape* — the same solve inside a vmapped
+    tenant stack then differs from the standalone solve by ~1 ulp, breaking
+    the fleet's per-tenant bit-identity. The repo's scan-based LU compiles
+    to a self-contained loop and is bit-stable across batching.
+    """
+    if b.lo == 1 and b.hi == 1 and not pivot and jax.default_backend() == "gpu":
         return _tridiag_solve(b, rhs)
     fn = _solve_pivot_single if pivot else _solve_nopivot_single
     return _batched(fn, b, rhs)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..masking import mask_rows, tree_sum
 from .additive_gp import AdditiveGP, GPConfig, fit, fit_hyperparams, _phi_windows
 from .backfitting import solve_mhat
 from .banded import Banded, solve, transpose
@@ -106,7 +107,10 @@ def _acq_core(gp: AdditiveGP, Xq: jax.Array, beta, best_y, kind: str):
                alg=gp.config.solve_alg)                         # sorted
     w = gp.ops.from_sorted(ws)
     z = solve_mhat(gp.ops, w, gp.config.solve_cfg())
-    term3 = jnp.sum(w * z, axis=(0, 1))
+    # fixed-association reduction over the (D, capacity) axes: the zero tail
+    # collapses bitwise, so the padded acquisition variance equals the
+    # unpadded one bit-for-bit at any capacity tier (and under any vmap)
+    term3 = tree_sum(tree_sum(w * z, axis=1), axis=0)
     var = jnp.maximum(jnp.asarray(float(D), Xq.dtype) - term2 + term3, 1e-12)
 
     # variance gradient: dvar/dx_d = -2 dphi^T (G phi) + 2 dphi^T Phi^{-T} z
@@ -252,10 +256,12 @@ def bayes_opt_loop(
             gp = fit(gp_config, X, Y, omega, sigma)
             if engine is not None:
                 engine.set_posterior(gp)
-        hist["x"].append(x_new)
+        hist["x"].append(np.asarray(x_new))
         hist["y"].append(float(y_new))
         hist["best"].append(float(jnp.max(Y)))
-        hist["omega"].append(omega)
+        # host-side copies: every hist field is numpy/python — appending the
+        # device array would retain traced buffers for the loop's lifetime
+        hist["omega"].append(np.asarray(omega))
         hist["sigma"].append(float(sigma))
         if verbose and (t + 1) % 10 == 0:
             print(f"  BO iter {t+1}/{budget} best={hist['best'][-1]:.4f}")
@@ -280,9 +286,17 @@ class LocalAcqCache:
 
 
 def build_local_cache(gp: AdditiveGP) -> LocalAcqCache:
-    """Operation 2 of Sec. 5.1.1 — O(n^2) time/memory; small n only."""
+    """Operation 2 of Sec. 5.1.1 — O(n^2) time/memory; small n only.
+
+    Layout: ``M_tilde[d_row, i_row, d_col, i_col]`` in sorted indices on both
+    sides. ``Mhat`` is SPD, so ``M~`` equals its ``(d,i) <-> (e,j)``
+    transpose (pinned by a symmetry test). Under capacity padding the e_i
+    right-hand sides are masked to the active prefix, so padded tail
+    rows/columns are exact zeros and the active block matches the unpadded
+    cache bit-for-bit (no identity-tail garbage in the dense cache).
+    """
     D, n = gp.D, gp.n
-    eye = jnp.eye(n, dtype=gp.Y.dtype)
+    eye = mask_rows(jnp.eye(n, dtype=gp.Y.dtype), gp.n_active, axis=0)
     cols = []
     for d in range(D):
         rhs = jnp.zeros((D, n, n), gp.Y.dtype).at[d].set(eye)  # Phi^{-1} e_i batch
@@ -294,8 +308,7 @@ def build_local_cache(gp: AdditiveGP) -> LocalAcqCache:
                   pivot=gp.config.pivot, backend=gp.config.backend,
                   alg=gp.config.solve_alg)
         cols.append(y)  # (D, n, n): row block d', cols for dim d
-    M = jnp.stack(cols, axis=2)  # (D', n', D, n) -> index [d_row, i_row, d_col, i_col]
-    M = M.transpose(0, 1, 2, 3)
+    M = jnp.stack(cols, axis=2)  # [d_row, i_row, d_col, i_col]
     return LocalAcqCache(M_tilde=M)
 
 

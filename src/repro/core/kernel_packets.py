@@ -243,7 +243,10 @@ def phi_at(q: int, omega, xs: jax.Array, A: Banded, xq: jax.Array,
     else:
         rows = t[..., None] + jnp.arange(-(q + 1), q + 1)
     valid = (rows >= 0) & (rows < na)
-    rows_c = jnp.clip(rows, 0, n - 1)
+    # clamp into the ACTIVE prefix, not just the capacity: consumers gather
+    # bY / Gband at these rows and multiply by the (zeroed) vals — a clamp to
+    # a padded tail slot would turn stale/NaN tail contents into 0 * NaN
+    rows_c = jnp.clip(rows, 0, jnp.maximum(na - 1, 0))
     # window points for each row: j = row + s, s in [-(q+1), q+1]
     s = jnp.arange(-(q + 1), q + 2)
     j = rows_c[..., None] + s
@@ -272,7 +275,7 @@ def phi_grad_at(q: int, omega, xs: jax.Array, A: Banded, xq: jax.Array,
     else:
         rows = t[..., None] + jnp.arange(-(q + 1), q + 1)
     valid = (rows >= 0) & (rows < na)
-    rows_c = jnp.clip(rows, 0, n - 1)
+    rows_c = jnp.clip(rows, 0, jnp.maximum(na - 1, 0))  # active prefix (see phi_at)
     s = jnp.arange(-(q + 1), q + 2)
     j = rows_c[..., None] + s
     jv = (j >= 0) & (j < na)

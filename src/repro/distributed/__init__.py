@@ -1,6 +1,7 @@
 from .sharding import (  # noqa: F401
     batch_pspecs,
     cache_pspecs,
+    fleet_pspecs,
     shardings_for,
     spec_for_axes,
 )

@@ -6,6 +6,10 @@ divisibility checks and first-match-wins conflict resolution (a mesh axis is
 used at most once per array).
 
   batch    -> (pod, data)    data parallelism (pod = outer DP axis)
+  tenant   -> (pod, data)    multi-tenant GP fleet: the leading tenant axis
+                             of a stacked ``GPFleet`` is embarrassingly
+                             parallel (tenants never exchange data), so it
+                             shards exactly like a data batch
   ctx      -> (pod, data)    decode-cache sequence sharding; only claims the
                              data axes when `batch` could not (e.g. batch=1)
   embed    -> data           FSDP / ZeRO-3: weights gathered per layer
@@ -24,7 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["make_abstract_mesh", "spec_for_axes", "shardings_for",
-           "batch_pspecs", "cache_pspecs"]
+           "batch_pspecs", "cache_pspecs", "fleet_pspecs"]
 
 
 def make_abstract_mesh(shape: tuple, names: tuple):
@@ -47,6 +51,7 @@ def _rules(mesh: Mesh, mode: str = "train") -> dict[str, tuple]:
     model = ("model",) if "model" in names else ()
     return {
         "batch": (data_axes,),
+        "tenant": (data_axes,),
         "ctx": (data_axes,),
         # decode mode: NO FSDP — params replicated over data (TP only), so
         # no per-token weight all-gathers (§Perf hillclimb #3)
@@ -110,6 +115,36 @@ def batch_pspecs(batch_tree, mesh: Mesh):
         return NamedSharding(mesh, P(data_axes, *([None] * (ab.ndim - 1))))
 
     return jax.tree_util.tree_map(one, batch_tree)
+
+
+def fleet_pspecs(fleet_tree, mesh: Mesh, T: int | None = None):
+    """Shard a stacked tenant fleet: leading ``tenant`` axis over (pod, data).
+
+    ``fleet_tree`` is a pytree of arrays / ShapeDtypeStructs whose leaves all
+    carry the tenant axis first — e.g. a ``GPFleet`` (every stacked leaf is
+    ``(T, ...)``) or the per-lane query batches ``(T, B, D)`` the fleet engine
+    assembles. Tenants never exchange data (each lane is an independent
+    posterior), so the tenant axis behaves exactly like a data batch: it maps
+    to the combined (pod, data) axes when divisible and falls back to
+    replication otherwise (a 6-tenant tier group on an 8-way data axis stays
+    replicated rather than erroring).
+
+    Pass ``T`` to pin the tenant-axis length: leaves whose dim 0 differs
+    (static metadata that survived as arrays, per-tenant scalars of another
+    length) are replicated instead of mis-sharded.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = _axes_size(mesh, data_axes)
+
+    def one(ab):
+        shape = getattr(ab, "shape", ())
+        if (not data_axes or len(shape) == 0 or shape[0] % dp != 0
+                or (T is not None and shape[0] != T)):
+            return NamedSharding(mesh, P())
+        lead = data_axes if len(data_axes) > 1 else data_axes[0]
+        return NamedSharding(mesh, P(lead, *([None] * (len(shape) - 1))))
+
+    return jax.tree_util.tree_map(one, fleet_tree)
 
 
 # -- decode-cache sharding ---------------------------------------------------

@@ -17,12 +17,26 @@ what the padding slots hold — every op canonicalizes its operands first:
 ``n_active=None`` means "fully active" and every helper is the identity —
 the unpadded representation is the ``n_active=None`` special case, not a
 separate code path.
+
+Batched counts (the multi-tenant fleet): ``n_active`` may carry leading
+batch dims — e.g. a ``(T,)`` per-tenant active count against a stacked
+``(T, D, n, w)`` band. The count's dims are aligned with the operand's
+*leading* dims and broadcast, so one call canonicalizes a whole fleet
+stack; a scalar count is the unbatched special case of the same rule.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["canonical_band", "mask_rows", "canonical_perm"]
+__all__ = ["canonical_band", "mask_rows", "canonical_perm", "tree_sum"]
+
+
+def _align(n_active, ndim: int):
+    """Reshape a (possibly batched) count to broadcast against an operand's
+    leading dims: counts (B...,) -> (B..., 1, ..., 1) at ``ndim`` dims."""
+    na = jnp.asarray(n_active)
+    return na.reshape(na.shape + (1,) * (ndim - na.ndim))
 
 
 def canonical_band(band, lo: int, hi: int, n_active):
@@ -31,7 +45,7 @@ def canonical_band(band, lo: int, hi: int, n_active):
     Active rows ``i < n_active`` keep entries with ``0 <= i + m < n_active``;
     everything else becomes the decoupled identity row. Overwrites (rather
     than trusts) the padding, so NaN/garbage in tail slots cannot reach
-    active results.
+    active results. ``n_active`` may be batched over the band's leading dims.
     """
     if n_active is None:
         return band
@@ -39,20 +53,25 @@ def canonical_band(band, lo: int, hi: int, n_active):
     i = jnp.arange(n)[:, None]
     m = jnp.arange(-lo, hi + 1)[None, :]
     j = i + m
-    active = (i < n_active) & (j >= 0) & (j < n_active)
+    na = _align(n_active, band.ndim)
+    active = (i < na) & (j >= 0) & (j < na)
     ident = jnp.zeros((n, lo + hi + 1), band.dtype).at[:, lo].set(1.0)
     return jnp.where(active, band, ident)
 
 
 def mask_rows(x, n_active, axis: int = -2):
-    """Zero rows ``>= n_active`` along ``axis`` (states, RHS batches)."""
+    """Zero rows ``>= n_active`` along ``axis`` (states, RHS batches).
+
+    A batched ``n_active`` broadcasts against the dims *before* ``axis``
+    (its dims must lie within them).
+    """
     if n_active is None:
         return x
     ax = axis % x.ndim
     n = x.shape[ax]
     shape = [1] * x.ndim
     shape[ax] = n
-    keep = jnp.arange(n).reshape(shape) < n_active
+    keep = jnp.arange(n).reshape(shape) < _align(n_active, x.ndim)
     return jnp.where(keep, x, jnp.zeros((), x.dtype))
 
 
@@ -62,4 +81,43 @@ def canonical_perm(idx, n_active):
         return idx
     n = idx.shape[-1]
     j = jnp.arange(n, dtype=idx.dtype)
-    return jnp.where(j < n_active, idx, j)
+    return jnp.where(j < _align(n_active, idx.ndim), idx, j)
+
+
+def tree_sum(x, axis: int):
+    """Sum along ``axis`` with a *fixed* halving-tree association.
+
+    ``jnp.sum`` lowers to an XLA reduce whose accumulation order is a
+    backend choice — on CPU it depends on how the reduction fuses into the
+    surrounding program, so the same mathematical sum can round differently
+    between a standalone call and the identical call under ``vmap`` (or
+    between different batch widths). That breaks the fleet's per-tenant
+    bit-identity guarantee wherever a reduction feeds an iterative solver.
+
+    This version pads to a power of two with zeros and repeatedly adds the
+    two halves: nothing but elementwise adds, whose per-element rounding no
+    batching or fusion decision can change. Two invariances follow:
+
+      * **batch invariance** — the result is bitwise identical under any
+        ``vmap`` nesting / batch width;
+      * **capacity invariance** — a zero tail collapses level by level
+        (``a + 0.0 == a`` bitwise for the finite values masked states
+        hold), so a capacity-padded state whose tail was zeroed by
+        ``mask_rows`` reduces bit-identically to its unpadded counterpart
+        at *any* power-of-two capacity.
+    """
+    ax = axis % x.ndim
+    n = x.shape[ax]
+    if n == 0:
+        return jnp.sum(x, axis=ax)
+    p = 1 << (n - 1).bit_length()
+    if p != n:
+        pad = [(0, 0)] * x.ndim
+        pad[ax] = (0, p - n)
+        x = jnp.pad(x, pad)
+    while p > 1:
+        h = p // 2
+        x = (jax.lax.slice_in_dim(x, 0, h, axis=ax)
+             + jax.lax.slice_in_dim(x, h, p, axis=ax))
+        p = h
+    return jnp.squeeze(x, axis=ax)

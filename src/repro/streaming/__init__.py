@@ -7,11 +7,18 @@ drop-oldest sliding-window counterpart; both mutate a capacity-padded GP
 per capacity tier, zero recompilation along a stream.
 ``refresh_local_cache`` is the O(1) small-learning-rate acquisition-cache
 path; ``GPServeEngine`` serves slot-batched posterior/acquisition queries
-against a versioned, incrementally updated posterior. See README.md here.
+against a versioned, incrementally updated posterior. ``fleet_insert`` /
+``fleet_evict`` are the masked vmapped tenant-axis mutation steps over a
+stacked ``repro.core.GPFleet``, and ``GPFleetEngine`` is the multi-tenant
+front end: one jit'd step per capacity-tier group serving mixed query +
+mutation streams for every tenant at once. See README.md here.
 """
+from .fleet_engine import GPFleetEngine  # noqa: F401
 from .gp_engine import GPServeEngine, Query, propose_via_engine  # noqa: F401
 from .updates import (  # noqa: F401
     evict,
+    fleet_evict,
+    fleet_insert,
     insert,
     refresh_local_cache,
     with_capacity,

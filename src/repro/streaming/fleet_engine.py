@@ -1,0 +1,443 @@
+"""Multi-tenant serving: one jit'd step per capacity-tier group.
+
+``GPFleetEngine`` is the fleet front end over :class:`repro.core.GPFleet`:
+``T`` independent capacity-padded posteriors served together. Tenants are
+grouped by (static) capacity tier into stacked pytrees — one
+``_TierGroup`` per tier, its lane count padded to a power of two — and the
+whole mixed query stream routes to ``(tenant, slot)`` pairs through ONE
+shape-stable jit'd step per group:
+
+  * **queries** — each tenant owns a fixed pool of ``B`` request slots
+    (mean / var / acq / ascend, exactly the single-engine kinds). Every
+    tick gathers each group's slot batches into one ``(lanes, B, D)``
+    block and runs one vmapped engine step; multi-tick ascend requests
+    iterate in place. Per-tenant results are bit-identical (f64) to a
+    standalone :class:`GPServeEngine` on that tenant's GP — the vmapped
+    body is the same traced math, and no core op mixes lanes.
+  * **mutations** — ``insert`` / ``evict`` / ``set_posterior`` are staged
+    *per tenant* and act as a per-tenant versioned fence: only that
+    tenant's admission pauses, its slots drain, then its ops apply (the
+    fleet keeps serving everyone else). Applies are vectorized: each tick
+    runs at most one masked ``fleet_evict`` round and one masked
+    ``fleet_insert`` round per group, so any number of tenants mutate in
+    the same two compiled steps.
+  * **sliding windows** — per-tenant ``window``: a staged insert first
+    drains drop-oldest evictions (one per tick, vectorized across
+    tenants) until the tenant is below its window, pinning its tier.
+  * **tier re-homing** — a tenant whose insert would overflow its tier is
+    individually re-homed into the doubled tier's group (lanes grow by
+    powers of two; a new tier group is created on demand). Compile count
+    is therefore flat in ``T`` at a fixed tier mix: one trace per
+    (tier, lanes, B, kind) shape, and lanes only takes O(log T) values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.additive_gp import AdditiveGP, with_capacity
+from ..core.bayesopt import acquisition_stats, ascent_step
+from ..core.fleet import GPFleet, set_tenant_gp, tenant_gp
+from .gp_engine import Query, _next_tier
+from .updates import fleet_evict, fleet_insert
+
+__all__ = ["GPFleetEngine"]
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def _fleet_engine_step(stack: AdditiveGP, X: jax.Array, beta, best_y, lo, hi,
+                       step_len, kind: str):
+    """One batched fleet tick: per-lane stats + next ascent iterates.
+
+    ``X`` is ``(lanes, B, D)``, ``best_y`` ``(lanes, B)``; the body is the
+    single-engine ``_engine_step`` math vmapped over the lane axis, so each
+    lane's outputs match the standalone engine bit-for-bit.
+    """
+    def one(gp, Xt, byt):
+        val, grad, mu, var = acquisition_stats(gp, Xt, beta, byt, kind=kind)
+        return val, grad, mu, var, ascent_step(Xt, grad, lo, hi, step_len)
+
+    return jax.vmap(one)(stack, X, best_y)
+
+
+@dataclasses.dataclass
+class _TierGroup:
+    """One capacity tier: a stacked GP over ``lanes`` (power-of-two) slots.
+
+    ``tenants[l]`` is the tenant id occupying lane ``l`` (None = free; free
+    lanes hold stale copies of real states so every vmapped op stays
+    NaN-free, and their results are masked/ignored).
+    """
+
+    capacity: int
+    lanes: int
+    stack: AdditiveGP
+    tenants: list
+
+
+@dataclasses.dataclass
+class _Tenant:
+    tid: int
+    group: _TierGroup
+    lane: int
+    count: int
+    window: int | None
+    best_y: float
+    version: int = 0
+    staged: list = dataclasses.field(default_factory=list)
+    slots: list = dataclasses.field(default_factory=list)
+    pending: deque = dataclasses.field(default_factory=deque)
+    xs: np.ndarray | None = None
+    besty: np.ndarray | None = None
+
+
+def _as_per_tenant(val, T, name):
+    if val is None or np.isscalar(val):
+        return [val] * T
+    vals = list(val)
+    if len(vals) != T:
+        raise ValueError(f"{name} must be a scalar or length-{T}; "
+                         f"got length {len(vals)}")
+    return vals
+
+
+class GPFleetEngine:
+    """Serve ``T`` tenant posteriors through one jit'd step per tier group.
+
+    ``gps`` is a sequence of fitted :class:`AdditiveGP`\\ s sharing one
+    ``GPConfig`` / ``D`` / dtype; ``capacity`` and ``window`` may be
+    scalars (shared) or per-tenant sequences. All other settings
+    (``bounds``, ``kind``, ``beta``, ``lr``, ``batch_slots``) are fleet-wide
+    — the jit'd step is specialized on them.
+    """
+
+    def __init__(self, gps, bounds, batch_slots: int = 8, kind: str = "ucb",
+                 beta: float = 2.0, lr: float = 0.05,
+                 insert_iters: int | None = None,
+                 capacity=None, window=None):
+        gps = list(gps)
+        if not gps:
+            raise ValueError("GPFleetEngine needs at least one tenant GP")
+        cfg0, D0 = gps[0].config, gps[0].D
+        for g in gps:
+            if g.config != cfg0 or g.D != D0:
+                raise ValueError("all fleet tenants must share one GPConfig "
+                                 "and input dimension")
+        T = len(gps)
+        caps = _as_per_tenant(capacity, T, "capacity")
+        wins = _as_per_tenant(window, T, "window")
+        self.bounds = jnp.asarray(bounds)
+        self.B = batch_slots
+        self.kind = kind
+        self.beta = beta
+        self.lr = lr
+        self.insert_iters = insert_iters
+        self._next_rid = 0
+        self._xdt = np.asarray(gps[0].X).dtype
+        self._ydt = np.asarray(gps[0].Y).dtype
+
+        # resolve per-tenant tiers with the single-engine rule, then build
+        # one stacked group per distinct tier
+        self.tenants: list[_Tenant] = []
+        by_tier: dict[int, list[tuple[int, AdditiveGP]]] = {}
+        for tid, (gp, cap, win) in enumerate(zip(gps, caps, wins)):
+            if win is not None and win < 2:
+                raise ValueError(f"window must be >= 2; got {win} "
+                                 f"(tenant {tid})")
+            n_points = gp.num_points()
+            if cap is None:
+                cap = _next_tier(min(n_points + 1, win) if win is not None
+                                 else n_points + 1)
+            cap = max(int(cap), gp.n)
+            t = _Tenant(tid=tid, group=None, lane=-1, count=n_points,
+                        window=win, best_y=0.0,
+                        slots=[None] * batch_slots,
+                        xs=np.zeros((batch_slots, D0), self._xdt),
+                        besty=np.zeros(batch_slots, self._ydt))
+            self.tenants.append(t)
+            by_tier.setdefault(cap, []).append((tid, with_capacity(gp, cap)))
+        self.groups: dict[int, _TierGroup] = {}
+        for cap, members in sorted(by_tier.items()):
+            lanes = 1 << (len(members) - 1).bit_length()
+            padded = [g for _, g in members]
+            padded += [padded[-1]] * (lanes - len(members))  # stale filler
+            stack = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *padded)
+            grp = _TierGroup(capacity=cap, lanes=lanes, stack=stack,
+                             tenants=[tid for tid, _ in members]
+                             + [None] * (lanes - len(members)))
+            self.groups[cap] = grp
+            for lane, (tid, _) in enumerate(members):
+                self.tenants[tid].group = grp
+                self.tenants[tid].lane = lane
+        for t in self.tenants:
+            t.best_y = self._fresh_best_y(t)
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def num_tenants(self) -> int:
+        return len(self.tenants)
+
+    def counts(self) -> np.ndarray:
+        """Per-tenant active observation counts (host state, no sync)."""
+        return np.array([t.count for t in self.tenants])
+
+    def versions(self) -> np.ndarray:
+        """Per-tenant posterior version counters."""
+        return np.array([t.version for t in self.tenants])
+
+    def capacities(self) -> np.ndarray:
+        """Per-tenant capacity tier (the owning group's static capacity)."""
+        return np.array([t.group.capacity for t in self.tenants])
+
+    def tenant_gp(self, tenant: int) -> AdditiveGP:
+        """Extract one tenant's standalone capacity-padded GP."""
+        t = self.tenants[tenant]
+        return tenant_gp(t.group.stack, jnp.asarray(t.lane, jnp.int32))
+
+    @staticmethod
+    def step_cache_size() -> int:
+        """Number of compiled fleet-step variants (for retrace assertions)."""
+        return _fleet_engine_step._cache_size()
+
+    def _fresh_best_y(self, t: _Tenant) -> float:
+        return float(jnp.max(t.group.stack.Y[t.lane, : t.count]))
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, tenant: int, x, kind: str = "acq",
+               steps: int = 0) -> Query:
+        """Queue a query against one tenant; returns its handle."""
+        if kind not in ("mean", "var", "acq", "ascend"):
+            raise ValueError(f"unknown query kind {kind!r}")
+        t = self.tenants[tenant]
+        q = Query(rid=self._next_rid, x=np.asarray(x, self._xdt), kind=kind,
+                  steps=steps if kind == "ascend" else 0, tenant=tenant)
+        self._next_rid += 1
+        t.pending.append(q)
+        return q
+
+    def step(self) -> list[Query]:
+        """One fleet tick; returns every query retired this tick.
+
+        Order per tick mirrors the single engine: apply ready mutations
+        (vectorized per group), admit where not fenced, then one vmapped
+        engine step per tier group with occupied slots.
+        """
+        self._apply_ready_mutations()
+        for t in self.tenants:
+            if t.staged:  # this tenant's fence: pause only its admission
+                continue
+            for i in range(self.B):
+                if t.slots[i] is None and t.pending:
+                    q = t.pending.popleft()
+                    q.version = t.version
+                    t.slots[i] = q
+                    t.xs[i] = q.x
+                    t.besty[i] = t.best_y
+        lo, hi = self.bounds[:, 0], self.bounds[:, 1]
+        step_len = self.lr * (hi - lo)
+        finished: list[Query] = []
+        for grp in self.groups.values():
+            serving = [l for l, tid in enumerate(grp.tenants)
+                       if tid is not None
+                       and any(s is not None for s in self.tenants[tid].slots)]
+            if not serving:
+                continue
+            X = np.zeros((grp.lanes, self.B, self.bounds.shape[0]), self._xdt)
+            BY = np.zeros((grp.lanes, self.B), self._ydt)
+            for l in serving:
+                t = self.tenants[grp.tenants[l]]
+                X[l] = t.xs
+                BY[l] = t.besty
+            out = _fleet_engine_step(grp.stack, jnp.asarray(X), self.beta,
+                                     jnp.asarray(BY), lo, hi, step_len,
+                                     self.kind)
+            val, grad, mu, var, Xn = map(np.asarray, out)
+            for l in serving:
+                t = self.tenants[grp.tenants[l]]
+                for i, q in enumerate(t.slots):
+                    if q is None:
+                        continue
+                    if q.kind == "ascend" and q.steps > 0:
+                        t.xs[i] = Xn[l, i]
+                        q.steps -= 1
+                        continue
+                    q.result = {"x": t.xs[i].copy(), "mean": float(mu[l, i]),
+                                "var": float(var[l, i]),
+                                "value": float(val[l, i]),
+                                "grad": grad[l, i].copy(),
+                                "version": q.version}
+                    q.done = True
+                    finished.append(q)
+                    t.slots[i] = None
+        return finished
+
+    def run_until_done(self, max_ticks: int = 10_000) -> list[Query]:
+        done: list[Query] = []
+        for _ in range(max_ticks):
+            done += self.step()
+            if all(not t.pending and not t.staged
+                   and all(s is None for s in t.slots)
+                   for t in self.tenants):
+                break
+        return done
+
+    # -- per-tenant mutations (versioned fences, vectorized application) -----
+
+    def insert(self, tenant: int, x_new, y_new) -> None:
+        """Stage an observation insert for one tenant (applied at its
+        fence; other tenants keep serving)."""
+        self.tenants[tenant].staged.append(
+            ("insert", np.asarray(x_new), float(y_new)))
+
+    def evict(self, tenant: int) -> None:
+        """Stage a drop-oldest eviction for one tenant (validated against
+        its projected count, exactly like the single engine)."""
+        t = self.tenants[tenant]
+        projected = t.count
+        for op in t.staged:
+            if op[0] == "insert":
+                projected += 1
+            elif op[0] == "evict":
+                projected -= 1
+            else:
+                projected = op[1].num_points()
+        if projected <= 1:
+            raise ValueError(
+                f"cannot stage evict for tenant {tenant}: it would drop "
+                f"below one observation ({projected} projected)")
+        t.staged.append(("evict",))
+
+    def set_posterior(self, tenant: int, gp: AdditiveGP) -> None:
+        """Stage a full posterior replacement for one tenant."""
+        if gp.config != self.tenant_config():
+            raise ValueError("replacement GP must share the fleet's GPConfig")
+        self.tenants[tenant].staged.append(("set", gp))
+
+    def tenant_config(self):
+        return next(iter(self.groups.values())).stack.config
+
+    def _apply_ready_mutations(self) -> None:
+        """Apply (at most) one staged op per fenced-and-drained tenant.
+
+        Host-side ops first — posterior replacement, and tier re-homing for
+        inserts that would overflow (only once any window drain is done, so
+        the op order per tenant matches the single engine exactly). Then one
+        masked ``fleet_evict`` round (evict ops + window drains) and one
+        masked ``fleet_insert`` round per group. A tenant with several
+        staged ops drains them over successive ticks; its fence holds —
+        admission for it stays paused — until the list empties.
+        """
+        ready = [t for t in self.tenants
+                 if t.staged and all(s is None for s in t.slots)]
+        if not ready:
+            return
+        for t in ready:
+            op = t.staged[0]
+            if op[0] == "set":
+                gp = op[1]
+                cap = max(t.group.capacity, gp.n,
+                          _next_tier(gp.num_points() + 1))
+                self._release_lane(t)
+                self._place(t, with_capacity(gp, cap), cap)
+                t.count = gp.num_points()
+                t.version += 1
+                t.staged.pop(0)
+            elif (op[0] == "insert"
+                  and (t.window is None or t.count < t.window)
+                  and t.count >= t.group.capacity):
+                # tier overflow: re-home this tenant alone into the doubled
+                # tier's group (no version bump — same posterior)
+                cap = _next_tier(2 * t.group.capacity)
+                gp = tenant_gp(t.group.stack, jnp.asarray(t.lane, jnp.int32))
+                self._release_lane(t)
+                self._place(t, with_capacity(gp, cap), cap)
+        # vectorized rounds: one masked evict + one masked insert per group
+        for grp in list(self.groups.values()):
+            members = [self.tenants[tid] for tid in grp.tenants
+                       if tid is not None]
+            ready_here = [t for t in members
+                          if t.staged and all(s is None for s in t.slots)]
+            if not ready_here:
+                continue
+            fleet = GPFleet(gp=grp.stack)
+            counts = np.zeros(grp.lanes, int)
+            for t in members:
+                counts[t.lane] = t.count
+            drains = [t for t in ready_here if t.staged[0][0] == "insert"
+                      and t.window is not None and t.count >= t.window]
+            evicts = [t for t in ready_here if t.staged[0][0] == "evict"]
+            if drains or evicts:
+                do = np.zeros(grp.lanes, bool)
+                for t in drains + evicts:
+                    do[t.lane] = True
+                fleet = fleet_evict(fleet, do, iters=self.insert_iters,
+                                    counts=counts)
+                for t in drains:  # drain does NOT consume the insert op
+                    t.count -= 1
+                    t.version += 1
+                    counts[t.lane] -= 1
+                for t in evicts:
+                    t.count -= 1
+                    t.version += 1
+                    counts[t.lane] -= 1
+                    t.staged.pop(0)
+            inserts = [t for t in ready_here if t.staged
+                       and t.staged[0][0] == "insert"
+                       and (t.window is None or t.count < t.window)
+                       and t.count < grp.capacity]
+            if inserts:
+                do = np.zeros(grp.lanes, bool)
+                x_new = np.zeros((grp.lanes, self.bounds.shape[0]), self._xdt)
+                y_new = np.zeros(grp.lanes, self._ydt)
+                for t in inserts:
+                    do[t.lane] = True
+                    _, x, y = t.staged[0]
+                    x_new[t.lane] = x
+                    y_new[t.lane] = y
+                fleet = fleet_insert(fleet, x_new, y_new, do,
+                                     iters=self.insert_iters, counts=counts)
+                for t in inserts:
+                    t.count += 1
+                    t.version += 1
+                    t.staged.pop(0)
+            grp.stack = fleet.gp
+        for t in ready:
+            if not t.staged:  # fence lifts: refresh the incumbent
+                t.best_y = self._fresh_best_y(t)
+
+    # -- tier-group lane management ------------------------------------------
+
+    def _release_lane(self, t: _Tenant) -> None:
+        grp = t.group
+        grp.tenants[t.lane] = None
+        t.group, t.lane = None, -1
+        if all(tid is None for tid in grp.tenants):
+            del self.groups[grp.capacity]
+
+    def _place(self, t: _Tenant, gp: AdditiveGP, cap: int) -> None:
+        """Seat ``gp`` (already padded to ``cap``) in the ``cap``-tier group,
+        growing lanes by powers of two / creating the group on demand."""
+        grp = self.groups.get(cap)
+        if grp is None:
+            stack = jax.tree_util.tree_map(lambda a: a[None], gp)
+            grp = _TierGroup(capacity=cap, lanes=1, stack=stack,
+                             tenants=[None])
+            self.groups[cap] = grp
+        if None not in grp.tenants:
+            # duplicate the stack: the new upper half starts as stale
+            # copies (valid states, masked out of every round)
+            grp.stack = jax.tree_util.tree_map(
+                lambda a: jnp.concatenate([a, a]), grp.stack)
+            grp.tenants += [None] * grp.lanes
+            grp.lanes *= 2
+        lane = grp.tenants.index(None)
+        grp.stack = set_tenant_gp(grp.stack, gp, jnp.asarray(lane, jnp.int32))
+        grp.tenants[lane] = t.tid
+        t.group, t.lane = grp, lane

@@ -65,6 +65,9 @@ class Query:
     version: int = -1
     result: dict | None = None
     done: bool = False
+    # owning tenant id when served by the multi-tenant GPFleetEngine (the
+    # single-GP engine leaves it 0)
+    tenant: int = 0
 
 
 @partial(jax.jit, static_argnames=("kind",))

@@ -53,16 +53,20 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from ..core import matern as mk
 from ..core.additive_gp import (AdditiveGP, TIE_EPS, posterior_caches,
                                 with_capacity)
 from ..core.backfitting import DimOps, solve_mhat
 from ..core.banded import Banded, add, scale, solve, transpose
 from ..core.bayesopt import LocalAcqCache
+from ..core.fleet import GPFleet, select_tenants
 from ..core.kernel_packets import gram_band_rows, kp_coefficient_rows
 from ..masking import canonical_band, mask_rows
 
-__all__ = ["insert", "evict", "with_capacity", "refresh_local_cache"]
+__all__ = ["insert", "evict", "with_capacity", "refresh_local_cache",
+           "fleet_insert", "fleet_evict"]
 
 
 def _splice_vec(v: jax.Array, p, val) -> jax.Array:
@@ -163,9 +167,10 @@ def _insert_dim(q: int, k, omega_d, xs_d, sort_d, rank_d, a_d, phi_d, b_d,
     return xs_new, sort_new, rank_new, a_new, phi_new, b_new, psi_new, p
 
 
-@partial(jax.jit, static_argnums=(3,))
-def _insert_impl(gp: AdditiveGP, x_new: jax.Array, y_new: jax.Array,
+def _insert_core(gp: AdditiveGP, x_new: jax.Array, y_new: jax.Array,
                  iters: int) -> AdditiveGP:
+    """Traced in-place insert body — shared by the jitted single-GP step and
+    the fleet's masked vmapped tenant-axis step (``_fleet_insert_impl``)."""
     config = gp.config
     q = config.q
     C = gp.n
@@ -196,6 +201,37 @@ def _insert_impl(gp: AdditiveGP, x_new: jax.Array, y_new: jax.Array,
     return AdditiveGP(X=X, Y=Y, omega=gp.omega, sigma=gp.sigma, xs=xs,
                       ops=ops, B=B, Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband,
                       config=config, n_active=k1)
+
+
+def _lane1(core_call):
+    """Run a single-GP traced body as the one-lane case of its vmapped form.
+
+    The compiled single-GP and vmapped-fleet programs would otherwise be
+    *different* XLA programs, and CPU XLA's fusion choices (reduce chunking,
+    FMA contraction) round shape-dependently — the same insert could then
+    differ by ~1 ulp per solver iterate between a standalone GP and a fleet
+    lane, breaking the fleet's bit-identity guarantee. The vmapped program
+    is bitwise invariant in the lane count (verified T = 1..64 in
+    tests/test_fleet.py), so routing the single-GP step through a one-lane
+    vmap makes single == fleet-lane hold by construction.
+    """
+    def wrapped(args, lane_args):
+        stacked = jax.tree_util.tree_map(lambda a: a[None], args)
+        lane = jax.tree_util.tree_map(lambda a: jnp.asarray(a)[None],
+                                      lane_args)
+        out = core_call(stacked, lane)
+        return jax.tree_util.tree_map(lambda a: a[0], out)
+
+    return wrapped
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _insert_impl(gp: AdditiveGP, x_new: jax.Array, y_new: jax.Array,
+                 iters: int) -> AdditiveGP:
+    return _lane1(
+        lambda s, xy: jax.vmap(
+            lambda g, x, y: _insert_core(g, x, y, iters))(s, *xy)
+    )(gp, (x_new, y_new))
 
 
 def insert(gp: AdditiveGP, x_new, y_new, *, iters: int | None = None,
@@ -276,8 +312,9 @@ def _evict_dim(q: int, k, omega_d, xs_d, sort_d, rank_d, a_d, phi_d, b_d,
     return xs_new, sort_new, rank_new, a_new, phi_new, b_new, psi_new
 
 
-@partial(jax.jit, static_argnums=(1,))
-def _evict_impl(gp: AdditiveGP, iters: int) -> AdditiveGP:
+def _evict_core(gp: AdditiveGP, iters: int) -> AdditiveGP:
+    """Traced drop-oldest evict body — shared by the jitted single-GP step
+    and the fleet's masked vmapped tenant-axis step (``_fleet_evict_impl``)."""
     config = gp.config
     q = config.q
     k = jnp.asarray(gp.active(), jnp.int32)
@@ -306,6 +343,13 @@ def _evict_impl(gp: AdditiveGP, iters: int) -> AdditiveGP:
                       config=config, n_active=k1)
 
 
+@partial(jax.jit, static_argnums=(1,))
+def _evict_impl(gp: AdditiveGP, iters: int) -> AdditiveGP:
+    return _lane1(
+        lambda s, _: jax.vmap(lambda g: _evict_core(g, iters))(s)
+    )(gp, ())
+
+
 def evict(gp: AdditiveGP, *, iters: int | None = None,
           count: int | None = None) -> AdditiveGP:
     """Drop the *oldest* observation (sliding-window mode) — in place.
@@ -324,6 +368,79 @@ def evict(gp: AdditiveGP, *, iters: int | None = None,
     if (gp.num_points() if count is None else int(count)) <= 1:
         raise ValueError("cannot evict from a GP with a single observation")
     return _evict_impl(gp, int(iters))
+
+
+@partial(jax.jit, static_argnums=(4,))
+def _fleet_insert_impl(stack: AdditiveGP, do: jax.Array, x_new: jax.Array,
+                       y_new: jax.Array, iters: int) -> AdditiveGP:
+    """Masked vmapped insert over a tenant stack: every lane runs the same
+    traced body, lanes with ``do[t]`` False keep their old state.
+
+    The keep/discard choice is a ``jnp.where`` select per leaf, so whatever a
+    discarded lane computed (e.g. the dropped out-of-range writes of an
+    insert into a full lane) can never reach a kept lane.
+    """
+    new = jax.vmap(lambda g, x, y: _insert_core(g, x, y, iters))(
+        stack, x_new, y_new)
+    return select_tenants(do, new, stack)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _fleet_evict_impl(stack: AdditiveGP, do: jax.Array,
+                      iters: int) -> AdditiveGP:
+    """Masked vmapped drop-oldest evict over a tenant stack."""
+    new = jax.vmap(lambda g: _evict_core(g, iters))(stack)
+    return select_tenants(do, new, stack)
+
+
+def fleet_insert(fleet: GPFleet, x_new, y_new, do=None, *,
+                 iters: int | None = None, counts=None) -> GPFleet:
+    """Insert one observation into each selected tenant — ONE compiled step.
+
+    ``x_new`` (T, D), ``y_new`` (T,); ``do`` (T,) bool selects the tenants
+    that mutate this round (default: all). Selected lanes must have free
+    capacity — re-home the fleet to a doubled tier first (the fleet engine
+    does this per tenant); a full selected lane raises. ``counts`` optionally
+    supplies the host-known per-tenant active counts, skipping the device
+    sync of the guard exactly like ``insert(..., count=)``.
+
+    Each selected tenant's post-insert state is bit-identical to running the
+    single-GP ``insert`` on its unstacked GP; unselected lanes are returned
+    bit-identical to their inputs.
+    """
+    if iters is None:
+        iters = max(8, fleet.config.solver_iters // 4)
+    T = fleet.T
+    do_h = np.ones(T, bool) if do is None else np.asarray(do, bool)
+    counts_h = np.asarray(fleet.counts() if counts is None else counts)
+    if np.any(do_h & (counts_h >= fleet.capacity)):
+        full = np.nonzero(do_h & (counts_h >= fleet.capacity))[0]
+        raise ValueError(
+            f"fleet_insert into full tenant lanes {full.tolist()} at capacity "
+            f"{fleet.capacity}; re-home those tenants to a larger tier first")
+    x_new = jnp.asarray(x_new, fleet.gp.X.dtype)
+    y_new = jnp.asarray(y_new, fleet.gp.Y.dtype)
+    return GPFleet(gp=_fleet_insert_impl(fleet.gp, jnp.asarray(do_h), x_new,
+                                         y_new, int(iters)))
+
+
+def fleet_evict(fleet: GPFleet, do=None, *, iters: int | None = None,
+                counts=None) -> GPFleet:
+    """Drop the oldest observation of each selected tenant — ONE compiled
+    step. Selected lanes must keep >= 1 observation (a 1-point selected lane
+    raises); see :func:`fleet_insert` for ``do`` / ``counts`` semantics."""
+    if iters is None:
+        iters = max(8, fleet.config.solver_iters // 4)
+    T = fleet.T
+    do_h = np.ones(T, bool) if do is None else np.asarray(do, bool)
+    counts_h = np.asarray(fleet.counts() if counts is None else counts)
+    if np.any(do_h & (counts_h <= 1)):
+        low = np.nonzero(do_h & (counts_h <= 1))[0]
+        raise ValueError(
+            f"fleet_evict from tenant lanes {low.tolist()} holding a single "
+            "observation")
+    return GPFleet(gp=_fleet_evict_impl(fleet.gp, jnp.asarray(do_h),
+                                        int(iters)))
 
 
 def refresh_local_cache(gp: AdditiveGP, cache: LocalAcqCache, *,

@@ -7,6 +7,7 @@ from jax.sharding import PartitionSpec as P
 from repro.distributed.sharding import (
     batch_pspecs,
     cache_pspecs,
+    fleet_pspecs,
     make_abstract_mesh,
     spec_for_axes,
 )
@@ -68,6 +69,42 @@ def test_cache_pspecs_state_leaves():
     st = jax.ShapeDtypeStruct((128, 64, 64, 64), jnp.float32)
     sh = cache_pspecs({"ssm": st}, MESH, batch=128)["ssm"]
     assert sh.spec == P(("data",), "model", None, None)
+
+
+def test_tenant_axis_rule():
+    # tenant shards like a data batch: divisible -> data axes, else replicate
+    assert spec_for_axes(("tenant", None, None), (64, 10, 5), MESH) == \
+        P("data")
+    assert spec_for_axes(("tenant", None), (6, 10), MESH) == P()
+    assert spec_for_axes(("tenant", None), (64, 10), MESH3) == \
+        P(("pod", "data"))
+
+
+def test_fleet_pspecs_stacked_leaves():
+    # a GPFleet-shaped pytree: every leaf carries the tenant axis first
+    tree = {
+        "band": jax.ShapeDtypeStruct((64, 2, 128, 3), jnp.float64),
+        "Y": jax.ShapeDtypeStruct((64, 128), jnp.float64),
+        "n": jax.ShapeDtypeStruct((64,), jnp.int32),
+    }
+    sh = fleet_pspecs(tree, MESH3, T=64)
+    assert sh["band"].spec == P(("pod", "data"), None, None, None)
+    assert sh["Y"].spec == P(("pod", "data"), None)
+    assert sh["n"].spec == P(("pod", "data"))
+
+
+def test_fleet_pspecs_fallbacks():
+    tree = {"band": jax.ShapeDtypeStruct((6, 2, 128, 3), jnp.float64)}
+    # 6 tenants on a 16-way data axis: replicate, don't error
+    assert fleet_pspecs(tree, MESH)["band"].spec == P()
+    # T pin: a leaf whose dim 0 is not the tenant axis stays replicated
+    tree = {
+        "band": jax.ShapeDtypeStruct((64, 2, 128, 3), jnp.float64),
+        "meta": jax.ShapeDtypeStruct((16, 4), jnp.float64),
+    }
+    sh = fleet_pspecs(tree, MESH, T=64)
+    assert sh["band"].spec == P("data", None, None, None)
+    assert sh["meta"].spec == P()
 
 
 def test_data_axes_helper():

@@ -1,0 +1,327 @@
+"""Multi-tenant posterior fleet (PR 6).
+
+Load-bearing properties:
+
+  * stacked-vs-single parity: every fleet op (fit, posterior mean/var,
+    acquisition stats, masked insert/evict) run over a ``(T, ...)`` stack is
+    bit-identical (f64) per tenant to the same op on the lone GP — the
+    tenant axis is folded into kernel grids, never into the math;
+  * lane-width invariance: the vmapped mutation step produces bitwise
+    identical lanes at every stack width T (the single-GP ``insert``/``evict``
+    are served by the SAME program at T=1, so engine and fleet can never
+    drift apart);
+  * masked rounds: lanes excluded from a mutation round keep their state
+    bit-for-bit;
+  * serving: ``GPFleetEngine`` over a mixed query/insert/evict stream equals
+    T independent ``GPServeEngine`` runs — results, versions, counts, and
+    capacity tiers — while compiling ONE step per capacity-tier group
+    (compile count flat in T at a fixed tier mix).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GPConfig, fit, posterior_mean, posterior_var
+from repro.core.bayesopt import acquisition_stats
+from repro.core.fleet import (fleet_acquisition_stats, fleet_fit,
+                              fleet_posterior_mean, fleet_posterior_var,
+                              stack_gps)
+from repro.streaming import (GPFleetEngine, GPServeEngine, evict as s_evict,
+                             fleet_evict, fleet_insert, insert as s_insert)
+
+CFG = GPConfig(q=1, solver="pcg", solver_iters=40, backend="jax")
+
+
+def _fit_gps(cfg, T, n=10, D=2, seed=0, capacity=16):
+    rng = np.random.default_rng(seed)
+    gps, Xs, Ys = [], [], []
+    for _ in range(T):
+        X = rng.uniform(size=(n, D))
+        Y = np.cos(2 * X).sum(axis=1) + 0.05 * rng.standard_normal(n)
+        Xs.append(X)
+        Ys.append(Y)
+        gps.append(fit(cfg, jnp.asarray(X), jnp.asarray(Y), jnp.ones(D), 0.25,
+                       capacity=capacity))
+    return gps, np.stack(Xs), np.stack(Ys)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return [i for i, (x, y) in enumerate(zip(la, lb))
+            if not np.array_equal(np.asarray(x), np.asarray(y),
+                                  equal_nan=True)]
+
+
+# ---------------------------------------------------------------------------
+# stacked queries + fleet_fit: bitwise per-tenant parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_fleet_query_parity(backend):
+    cfg = GPConfig(q=1, solver="pcg", solver_iters=20, backend=backend)
+    T, m = 3, 4
+    gps, _, _ = _fit_gps(cfg, T, n=8, capacity=16, seed=1)
+    fl = stack_gps(gps)
+    rng = np.random.default_rng(2)
+    Xq = jnp.asarray(rng.uniform(size=(T, m, 2)))
+    mu = np.asarray(fleet_posterior_mean(fl, Xq))
+    var = np.asarray(fleet_posterior_var(fl, Xq))
+    acq = fleet_acquisition_stats(fl, Xq, 2.0, 0.0, kind="ucb")
+    for t in range(T):
+        np.testing.assert_array_equal(
+            mu[t], np.asarray(posterior_mean(gps[t], Xq[t])))
+        np.testing.assert_array_equal(
+            var[t], np.asarray(posterior_var(gps[t], Xq[t])))
+        ref = acquisition_stats(gps[t], Xq[t], 2.0, 0.0, kind="ucb")
+        for got, want in zip(acq, ref):
+            np.testing.assert_array_equal(np.asarray(got)[t],
+                                          np.asarray(want))
+
+
+def test_fleet_fit_parity():
+    T = 3
+    gps, Xs, Ys = _fit_gps(CFG, T, n=10, capacity=16, seed=3)
+    fl = fleet_fit(CFG, jnp.asarray(Xs), jnp.asarray(Ys), jnp.ones(2), 0.25,
+                   capacity=16)
+    for t in range(T):
+        assert _leaves_equal(fl.tenant(t), gps[t]) == []
+
+
+# ---------------------------------------------------------------------------
+# vmapped mutations: lane-width invariance + masked-round isolation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T", [1, 2, 4, 8])
+def test_insert_evict_lane_width_invariance(T):
+    # every lane of a T-wide replicated stack mutates bit-identically to the
+    # single-GP path — which itself runs as the T=1 case of the same program
+    gps, _, _ = _fit_gps(CFG, 1, n=9, capacity=16, seed=4)
+    gp = gps[0]
+    rng = np.random.default_rng(5)
+    x_new = rng.uniform(size=2)
+    y_new = float(rng.standard_normal())
+    ref = s_insert(gp, x_new, y_new, iters=20)
+    ref2 = s_evict(ref, iters=20)
+    fl = stack_gps([gp] * T)
+    fl2 = fleet_insert(fl, np.tile(x_new, (T, 1)), np.full(T, y_new),
+                       iters=20)
+    fl3 = fleet_evict(fl2, iters=20)
+    for t in range(T):
+        assert _leaves_equal(fl2.tenant(t), ref) == []
+        assert _leaves_equal(fl3.tenant(t), ref2) == []
+
+
+@pytest.mark.slow
+def test_insert_lane_width_invariance_T64():
+    gps, _, _ = _fit_gps(CFG, 1, n=9, capacity=16, seed=4)
+    gp = gps[0]
+    rng = np.random.default_rng(5)
+    x_new = rng.uniform(size=2)
+    y_new = float(rng.standard_normal())
+    ref = s_insert(gp, x_new, y_new, iters=20)
+    fl2 = fleet_insert(stack_gps([gp] * 64), np.tile(x_new, (64, 1)),
+                       np.full(64, y_new), iters=20)
+    for t in range(64):
+        assert _leaves_equal(fl2.tenant(t), ref) == []
+
+
+def test_masked_rounds_leave_excluded_lanes_bitwise():
+    T = 4
+    gps, _, _ = _fit_gps(CFG, T, n=9, capacity=16, seed=6)
+    fl = stack_gps(gps)
+    rng = np.random.default_rng(7)
+    x_new = rng.uniform(size=(T, 2))
+    y_new = rng.standard_normal(T)
+    do = np.array([True, False, True, False])
+    fl2 = fleet_insert(fl, x_new, y_new, do=do, iters=20)
+    for t in range(T):
+        if do[t]:
+            ref = s_insert(gps[t], x_new[t], y_new[t], iters=20)
+            assert _leaves_equal(fl2.tenant(t), ref) == []
+        else:
+            assert _leaves_equal(fl2.tenant(t), gps[t]) == []
+    fl3 = fleet_evict(fl2, do=~do, iters=20)
+    for t in range(T):
+        if do[t]:
+            assert _leaves_equal(fl3.tenant(t), fl2.tenant(t)) == []
+        else:
+            ref = s_evict(gps[t], iters=20)
+            assert _leaves_equal(fl3.tenant(t), ref) == []
+
+
+def test_fleet_insert_rejects_full_lanes():
+    gps, _, _ = _fit_gps(CFG, 2, n=8, capacity=8, seed=8)
+    fl = stack_gps(gps)
+    with pytest.raises(ValueError, match="capacity"):
+        fleet_insert(fl, np.zeros((2, 2)), np.zeros(2))
+
+
+# ---------------------------------------------------------------------------
+# serving: GPFleetEngine == T independent GPServeEngines, one jit per tier
+# ---------------------------------------------------------------------------
+
+
+def _mixed_stream(fe, singles, events):
+    fq, sq = [], []
+    for ev in events:
+        if ev[0] == "q":
+            _, t, x, kind, steps = ev
+            fq.append(fe.submit(t, x, kind=kind, steps=steps))
+            sq.append((t, singles[t].submit(x, kind=kind, steps=steps)))
+        elif ev[0] == "ins":
+            _, t, x, y = ev
+            fe.insert(t, x, y)
+            singles[t].insert(x, y)
+        else:
+            _, t = ev
+            ok = []
+            for target in (lambda: fe.evict(t), singles[t].evict):
+                try:
+                    target()
+                    ok.append(True)
+                except ValueError:
+                    ok.append(False)
+            assert ok[0] == ok[1]
+    fe.run_until_done()
+    for e in singles:
+        e.run_until_done()
+    return fq, sq
+
+
+def _events(rng, T, steps, D):
+    events = []
+    for _ in range(steps):
+        t = int(rng.integers(0, T))
+        r = rng.random()
+        x = rng.uniform(size=D)
+        if r < 0.45:
+            kind = ["mean", "var", "acq", "ascend"][int(rng.integers(0, 4))]
+            events.append(("q", t, x, kind, int(rng.integers(1, 4))))
+        elif r < 0.8:
+            events.append(("ins", t, x, float(rng.standard_normal())))
+        else:
+            events.append(("ev", t))
+    return events
+
+
+def test_fleet_engine_bit_parity_mixed_stream():
+    rng = np.random.default_rng(0)
+    D = 2
+    cfg = GPConfig(q=1, solver="pcg", solver_iters=30, backend="jax")
+    bounds = np.stack([np.zeros(D), np.ones(D)], axis=1)
+    ns = [10, 18, 10]
+    gps = []
+    for n in ns:
+        X = rng.uniform(size=(n, D))
+        Y = np.sin(3 * X).sum(axis=1) + 0.1 * rng.standard_normal(n)
+        gps.append(fit(cfg, jnp.asarray(X), jnp.asarray(Y), jnp.ones(D), 0.3))
+    windows = [None, 20, 12]
+    fe = GPFleetEngine(gps, bounds, batch_slots=4, kind="ei", beta=2.0,
+                       window=windows)
+    singles = [GPServeEngine(g, bounds, batch_slots=4, kind="ei", beta=2.0,
+                             window=w) for g, w in zip(gps, windows)]
+    assert list(fe.capacities()) == [e.capacity for e in singles]
+
+    fq, sq = _mixed_stream(fe, singles, _events(rng, len(ns), 24, D))
+    assert all(q.done for q in fq) and all(q.done for _, q in sq)
+    for qf, (t, qs) in zip(fq, sq):
+        for k in ("x", "mean", "var", "value", "grad", "version"):
+            np.testing.assert_array_equal(np.asarray(qf.result[k]),
+                                          np.asarray(qs.result[k]),
+                                          err_msg=f"tenant {t} key {k}")
+    for t, e in enumerate(singles):
+        assert fe.counts()[t] == e.num_points
+        assert fe.versions()[t] == e.version
+        assert fe.capacities()[t] == e.capacity
+        assert _leaves_equal(fe.tenant_gp(t), e.gp) == []
+
+
+def test_fleet_engine_compile_count_flat_in_T():
+    # at a fixed tier mix the engine compiles ONE step per (lanes, capacity)
+    # group — growing T within the same lane tier adds ZERO new traces
+    rng = np.random.default_rng(11)
+    D = 2
+    cfg = GPConfig(q=1, solver="pcg", solver_iters=20, backend="jax")
+    bounds = np.stack([np.zeros(D), np.ones(D)], axis=1)
+
+    def build(T):
+        gps = []
+        for s in range(T):
+            X = rng.uniform(size=(8, D))
+            Y = np.sin(3 * X).sum(axis=1)
+            gps.append(fit(cfg, jnp.asarray(X), jnp.asarray(Y),
+                           jnp.ones(D), 0.3))
+        return gps
+
+    fe3 = GPFleetEngine(build(3), bounds, batch_slots=2)  # lanes = 4
+    for t in range(3):
+        fe3.submit(t, np.asarray(rng.uniform(size=D)), kind="acq")
+    fe3.run_until_done()
+    c3 = GPFleetEngine.step_cache_size()
+    fe4 = GPFleetEngine(build(4), bounds, batch_slots=2)  # same lane tier
+    for t in range(4):
+        fe4.submit(t, np.asarray(rng.uniform(size=D)), kind="acq")
+    fe4.run_until_done()
+    # 3 and 4 tenants share the lanes=4 tier group: zero new traces
+    assert GPFleetEngine.step_cache_size() == c3
+    # more queries/steps on a warm engine never re-trace either
+    for t in range(4):
+        fe4.submit(t, np.asarray(rng.uniform(size=D)), kind="mean")
+    fe4.run_until_done()
+    assert GPFleetEngine.step_cache_size() == c3
+
+
+@pytest.mark.slow
+def test_fleet_engine_T64_acceptance():
+    # ISSUE acceptance: T=64 mixed serving through one jit step per tier
+    # group, per-tenant results bit-identical to lone-engine runs (spot-
+    # checked on a subset; full parity is the T=3 test above)
+    rng = np.random.default_rng(21)
+    D = 2
+    T = 64
+    cfg = GPConfig(q=1, solver="pcg", solver_iters=20, backend="jax")
+    bounds = np.stack([np.zeros(D), np.ones(D)], axis=1)
+    gps = []
+    for s in range(T):
+        n = 8 if s % 2 == 0 else 12
+        X = rng.uniform(size=(n, D))
+        Y = np.sin(3 * X).sum(axis=1) + 0.1 * rng.standard_normal(n)
+        gps.append(fit(cfg, jnp.asarray(X), jnp.asarray(Y), jnp.ones(D), 0.3))
+    fe = GPFleetEngine(gps, bounds, batch_slots=4, kind="ucb")
+    base = GPFleetEngine.step_cache_size()
+    spot = [0, 1, 31, 63]
+    singles = {t: GPServeEngine(gps[t], bounds, batch_slots=4, kind="ucb")
+               for t in spot}
+    fq, sq = [], []
+    for i in range(40):
+        t = int(rng.integers(0, T))
+        x = rng.uniform(size=D)
+        if rng.random() < 0.5:
+            kind = ["mean", "var", "acq", "ascend"][i % 4]
+            q = fe.submit(t, x, kind=kind, steps=2)
+            if t in spot:
+                fq.append(q)
+                sq.append((t, singles[t].submit(x, kind=kind, steps=2)))
+        else:
+            y = float(rng.standard_normal())
+            fe.insert(t, x, y)
+            if t in spot:
+                singles[t].insert(x, y)
+    fe.run_until_done()
+    for e in singles.values():
+        e.run_until_done()
+    for qf, (t, qs) in zip(fq, sq):
+        for k in ("x", "mean", "var", "value", "grad", "version"):
+            np.testing.assert_array_equal(np.asarray(qf.result[k]),
+                                          np.asarray(qs.result[k]),
+                                          err_msg=f"tenant {t} key {k}")
+    for t, e in singles.items():
+        assert fe.counts()[t] == e.num_points
+        assert _leaves_equal(fe.tenant_gp(t), e.gp) == []
+    # all 64 tenants share one capacity tier (both n=8 and n=12 pad to 16):
+    # at most one new trace beyond the warm baseline, regardless of T
+    assert GPFleetEngine.step_cache_size() <= base + 1

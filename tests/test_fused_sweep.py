@@ -2,9 +2,11 @@
 
 The fused path (one ``pallas_call`` per iteration, ``kernels/fused_sweep.py``)
 is pinned against the unfused dispatch path on BOTH backends for all three
-solver methods — the unfused pallas comparison is bit-level at f64 (identical
-op order on identical operands), the jax-scan comparison is
-convergence-level. The satellite contracts ride along:
+solver methods — the unfused pallas comparison is bit-level at f64 for
+jacobi/gauss_seidel (identical op order on identical operands) and
+convergence-level for PCG (the host loop's inner products use the
+batch-invariant ``_det_dot`` association, the kernel its own in-kernel
+order); the jax-scan comparison is convergence-level. The satellite contracts ride along:
 
   * ``SolveConfig.tol`` early exit (bounded ``lax.while_loop``) and the
     ``solve_mhat(..., return_info=True)`` iteration count;
@@ -74,7 +76,8 @@ def _parity_params():
 
 @pytest.mark.parametrize("method,q,dtype", _parity_params())
 def test_fused_matches_unfused(method, q, dtype):
-    """fused == unfused-pallas (bit-level at f64) == jax scan (tolerance)."""
+    """fused == unfused-pallas (bit-level at f64 for the stationary sweeps)
+    == jax scan (tolerance)."""
     rng = np.random.default_rng(10 * q + len(method))
     n, D, B = 37, 3, 2
     ops_d = _make_ops(rng, n, D, q, 0.4, dtype)
@@ -85,11 +88,20 @@ def test_fused_matches_unfused(method, q, dtype):
                       ("fused", dict(backend="pallas", fused="on"))]:
         cfg = SolveConfig(method=method, iters=8, **kw)
         out[label] = solve_mhat(ops_d, v, cfg)
-    # acceptance bar: bit-identical-level f64 / <= 1e-5 rel f32 vs unfused.
-    # The jax-scan comparison is cross-backend: at f32 the *unconverged*
-    # iterates of any iterative scheme drift between backends, so that bar is
-    # convergence-level only.
-    tol_u = 1e-5 if dtype == jnp.float32 else 1e-13
+    # acceptance bar vs unfused: bit-identical-level f64 / <= 1e-5 rel f32
+    # for jacobi/gauss_seidel (same FP ops, same order). PCG is the
+    # exception since the batch-invariant host reductions landed: the host
+    # loop's inner products use the fixed-association `_det_dot` tree (the
+    # fleet bit-parity contract, tests/test_fleet.py) while the fused kernel
+    # accumulates in-kernel in its own order, so unconverged PCG iterates
+    # amplify the ulp-level association difference — that comparison is
+    # convergence-level, like the jax-scan one. The jax-scan comparison is
+    # cross-backend: at f32 the *unconverged* iterates of any iterative
+    # scheme drift between backends, so that bar is convergence-level only.
+    if method == "pcg":
+        tol_u = 1e-2 if dtype == jnp.float32 else 1e-9
+    else:
+        tol_u = 1e-5 if dtype == jnp.float32 else 1e-13
     tol_j = 1e-2 if dtype == jnp.float32 else 1e-9
     assert _rel(out["fused"], out["unfused"]) < tol_u
     assert _rel(out["fused"], out["jax"]) < tol_j
@@ -139,7 +151,9 @@ def test_fused_pivot_and_warm_start_parity():
                            backend="pallas", fused="off")
         got = solve_mhat(ops_d, v, cfgf, x0=x0)
         want = solve_mhat(ops_d, v, cfgu, x0=x0)
-        assert _rel(got, want) < 1e-13, method
+        # pcg: convergence-level — host `_det_dot` tree order vs in-kernel
+        # accumulation (see test_fused_matches_unfused)
+        assert _rel(got, want) < (1e-9 if method == "pcg" else 1e-13), method
 
 
 # ---------------------------------------------------------------------------
