@@ -25,8 +25,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import backend_ablation, capacity_streaming, fig5_prediction, \
-        fig6_bayesopt, fleet_serving, fused_sweep, streaming_updates, \
-        table1_complexity
+        fig6_bayesopt, fleet_serving, fused_sweep, multigrid, \
+        streaming_updates, table1_complexity
 
     rows: list[dict] = []
     print("== Fig 5: prediction RMSE/time vs n ==", flush=True)
@@ -85,6 +85,13 @@ def main() -> None:
                       out_rows=fleet_rows)
     rows += fleet_rows
 
+    print("== Kernel multigrid: V-cycle vs plain PCG iterations-to-tol ==",
+          flush=True)
+    mg_rows: list[dict] = []
+    multigrid.run(ns=(4096, 16384) if args.full else (4096,),
+                  reps=3 if args.full else 1, out_rows=mg_rows)
+    rows += mg_rows
+
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {len(rows)} rows to {args.out}", flush=True)
@@ -122,6 +129,13 @@ def main() -> None:
     with open(fleet_out, "w") as f:
         json.dump(fleet_rows, f, indent=1)
     print(f"wrote {len(fleet_rows)} rows to {fleet_out}", flush=True)
+
+    # kernel-multigrid preconditioner artifact (PR 7 acceptance: kmg_iters <
+    # plain_iters at the largest n on both backends at the same tol)
+    mg_out = os.path.join(os.path.dirname(args.out), "BENCH_multigrid.json")
+    with open(mg_out, "w") as f:
+        json.dump(mg_rows, f, indent=1)
+    print(f"wrote {len(mg_rows)} rows to {mg_out}", flush=True)
 
 
 if __name__ == "__main__":

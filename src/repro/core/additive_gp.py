@@ -45,7 +45,8 @@ TIE_EPS = 1e-9
     data_fields=(),
     meta_fields=("q", "solver", "solver_iters", "pivot", "logdet_order",
                  "logdet_probes", "trace_probes", "power_iters", "logdet_method",
-                 "backend", "solve_alg", "fused"),
+                 "backend", "solve_alg", "fused", "precond", "precond_levels",
+                 "precond_coarsen", "precond_smooth"),
 )
 @dataclasses.dataclass(frozen=True)
 class GPConfig:
@@ -63,6 +64,16 @@ class GPConfig:
     # fits VMEM) | "on" | "off"; also settable process-wide via REPRO_FUSED.
     # Reaches every solve_mhat — fit, MLL, gradients, streaming inserts.
     fused: str = "auto"
+    # backfitting PCG preconditioner: "auto" (kernel multigrid at q == 0 and
+    # n >= kernels.ops.KMG_AUTO_MIN_N, else plain block) | "none" | "kmg";
+    # also settable process-wide via REPRO_PRECOND. Resolved and baked at
+    # fit() like backend/solve_alg; "kmg" additionally stores the coarse
+    # hierarchy on the fitted GP (gp.hier) and threads it through every
+    # solve — posterior caches, variance, MLL gradients, streaming inserts.
+    precond: str = "auto"
+    precond_levels: int = 2  # hierarchy depth incl. the fine level
+    precond_coarsen: int = 8  # subsampling stride per level
+    precond_smooth: int = 1  # coarse deflated-Jacobi sweeps per V-cycle
     logdet_order: int = 30
     logdet_probes: int = 16
     trace_probes: int = 16
@@ -76,13 +87,17 @@ class GPConfig:
     def solve_cfg(self) -> SolveConfig:
         return SolveConfig(method=self.solver, iters=self.solver_iters,
                            pivot=self.pivot, backend=self.backend,
-                           alg=self.solve_alg, fused=self.fused)
+                           alg=self.solve_alg, fused=self.fused,
+                           precond=self.precond,
+                           precond_levels=self.precond_levels,
+                           precond_coarsen=self.precond_coarsen,
+                           precond_smooth=self.precond_smooth)
 
 
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=("X", "Y", "omega", "sigma", "xs", "ops", "B", "Psi", "bY",
-                 "u_sy", "Gband", "n_active"),
+                 "u_sy", "Gband", "n_active", "hier"),
     meta_fields=("config",),
 )
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +124,10 @@ class AdditiveGP:
     Gband: Banded         # (D, n, 4q+3) band of (A Phi^T)^{-1)
     config: GPConfig
     n_active: jax.Array | None = None
+    # coarse KMG hierarchy (tuple of precond.CoarseLevel) when
+    # config.precond == "kmg"; None otherwise. Rebuilt (cheap, no solve)
+    # whenever the point set changes: fit, insert, evict, with_capacity.
+    hier: tuple | None = None
 
     @property
     def n(self) -> int:
@@ -138,6 +157,23 @@ def _build_factors(q: int, omega: jax.Array, xs: jax.Array):
     A, Phi = jax.vmap(lambda om, x: kp_factors(q, om, x))(omega, xs)
     B, Psi = jax.vmap(lambda om, x: gkp_factors(q, om, x))(omega, xs)
     return A, Phi, B, Psi
+
+
+def build_gp_hier(config: GPConfig, omega: jax.Array, sigma, X: jax.Array,
+                  xs: jax.Array, ops: DimOps):
+    """Coarse KMG hierarchy for a fitted system; None unless precond="kmg".
+
+    O(n) band assembly at the subsampled points — no solves — so fit,
+    ``with_capacity`` and every streaming insert/evict rebuild it outright
+    instead of patching levels incrementally. vmap-safe (fleet stacking).
+    """
+    if config.precond != "kmg":
+        return None
+    from ..precond.coarse import build_hierarchy
+
+    return build_hierarchy(config.q, omega, jnp.asarray(sigma) ** 2, X, xs,
+                           ops, levels=config.precond_levels,
+                           coarsen=config.precond_coarsen)
 
 
 def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma,
@@ -171,7 +207,9 @@ def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma,
         solve_alg=(config.solve_alg if config.solve_alg != "auto"
                    else _kops.get_solve_alg()),
         fused=(config.fused if config.fused != "auto"
-               else _kops.get_fused()))
+               else _kops.get_fused()),
+        precond=_kops.resolve_precond(config.precond, q=config.q,
+                                      n=X.shape[0]))
     gp = _fit_impl(config, X, Y, omega, sigma)
     if capacity is not None:
         gp = with_capacity(gp, capacity)
@@ -221,15 +259,19 @@ def _with_capacity_impl(gp: AdditiveGP, capacity: int) -> AdditiveGP:
     steps = jnp.arange(1, capacity - gp.n + 1, dtype=gp.xs.dtype)
     xs_tail = gp.xs[:, -1:] + span * steps[None, :]
     xs_p = jnp.concatenate([gp.xs, xs_tail], axis=1)
+    X_p = _pad_rows(gp.X, capacity, axis=0)
+    # the coarse hierarchy is capacity-shaped (strided subset of the padded
+    # rows): rebuild it at the new allocation rather than padding levels
+    hier_p = build_gp_hier(gp.config, gp.omega, gp.sigma, X_p, xs_p, ops_p)
     return AdditiveGP(
-        X=_pad_rows(gp.X, capacity, axis=0), Y=_pad_rows(gp.Y, capacity, 0),
+        X=X_p, Y=_pad_rows(gp.Y, capacity, 0),
         omega=gp.omega, sigma=gp.sigma, xs=xs_p, ops=ops_p,
         B=_pad_band_rows(gp.B, capacity, na),
         Psi=_pad_band_rows(gp.Psi, capacity, na),
         bY=_pad_rows(gp.bY, capacity, axis=1),
         u_sy=_pad_rows(gp.u_sy, capacity, axis=1),
         Gband=_pad_band_rows(gp.Gband, capacity, na),
-        config=gp.config, n_active=na)
+        config=gp.config, n_active=na, hier=hier_p)
 
 
 def with_capacity(gp: AdditiveGP, capacity: int) -> AdditiveGP:
@@ -252,19 +294,22 @@ def with_capacity(gp: AdditiveGP, capacity: int) -> AdditiveGP:
 
 
 def posterior_caches(config: GPConfig, ops: DimOps, Y: jax.Array,
-                     x0: jax.Array | None = None, iters: int | None = None):
+                     x0: jax.Array | None = None, iters: int | None = None,
+                     hier=None):
     """(u_sy, bY, Gband) posterior caches from assembled banded factors.
 
     Shared by ``fit`` (cold start) and ``repro.streaming`` inserts, which pass
     ``x0`` — the pre-insert ``Mhat^{-1} S Y`` spliced at the new point — to
-    warm-start the backfitting solve and ``iters`` to cap it.
+    warm-start the backfitting solve and ``iters`` to cap it. ``hier`` is
+    the KMG coarse hierarchy (required when config.precond == "kmg").
     """
     cfg = config.solve_cfg()
     if iters is not None:
         cfg = dataclasses.replace(cfg, iters=iters)
     D, n = ops.D, ops.n
     SY = jnp.broadcast_to(Y[None, :], (D, n))
-    u_sy = solve_mhat(ops, SY, cfg, x0=x0)  # Mhat^{-1} S Y, original order
+    u_sy = solve_mhat(ops, SY, cfg, x0=x0,
+                      hier=hier)  # Mhat^{-1} S Y, original order
     bY = solve(transpose(ops.Phi), ops.to_sorted(u_sy) / ops.sigma2,
                pivot=config.pivot, backend=config.backend,
                alg=config.solve_alg)
@@ -292,9 +337,11 @@ def _fit_impl(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array,
     SAPhi = add(scale(A, sigma**2), Phi)
     ops = DimOps(A=A, Phi=Phi, SAPhi=SAPhi, sort_idx=sort_idx, rank_idx=rank_idx,
                  sigma2=sigma**2)
-    u_sy, bY, Gband = posterior_caches(config, ops, Y)
+    hier = build_gp_hier(config, omega, sigma, X, xs, ops)
+    u_sy, bY, Gband = posterior_caches(config, ops, Y, hier=hier)
     return AdditiveGP(X=X, Y=Y, omega=omega, sigma=sigma, xs=xs, ops=ops, B=B,
-                      Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband, config=config)
+                      Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband, config=config,
+                      hier=hier)
 
 
 # ---------------------------------------------------------------------------
@@ -355,7 +402,7 @@ def posterior_var(gp: AdditiveGP, Xq: jax.Array) -> jax.Array:
                      backend=gp.config.backend,
                      alg=gp.config.solve_alg)  # (D, n, m)
     w = gp.ops.from_sorted(w_sorted)
-    z = solve_mhat(gp.ops, w, gp.config.solve_cfg())
+    z = solve_mhat(gp.ops, w, gp.config.solve_cfg(), hier=gp.hier)
     term3 = jnp.sum(w * z, axis=(0, 1))
 
     prior = jnp.asarray(float(D), Xq.dtype)  # sum_d k_d(x*, x*) = D (unit scale)
@@ -371,7 +418,7 @@ def _r_apply(gp: AdditiveGP, v: jax.Array, cfg: SolveConfig) -> jax.Array:
     """R v = sigma^{-2} v - sigma^{-4} S^T Mhat^{-1} S v, v: (n,) or (n, B)."""
     D = gp.D
     SV = jnp.broadcast_to(v[None], (D,) + v.shape)
-    z = solve_mhat(gp.ops, SV, cfg)
+    z = solve_mhat(gp.ops, SV, cfg, hier=gp.hier)
     return v / gp.sigma**2 - jnp.sum(z, axis=0) / gp.sigma**4
 
 
@@ -487,14 +534,15 @@ def mll_gradients(gp: AdditiveGP, key: jax.Array):
     rhs = jnp.broadcast_to(
         Wd.transpose(1, 0, 2).reshape(1, n, D * Q), (D, n, D * Q)
     )
-    z = solve_mhat(gp.ops, rhs, cfg)  # (D, n, D*Q)
+    z = solve_mhat(gp.ops, rhs, cfg, hier=gp.hier)  # (D, n, D*Q)
     stz = jnp.sum(z, axis=0).reshape(n, D, Q)
     second = jnp.einsum("nq,ndq->dq", V, stz) / gp.sigma**4
     trace = jnp.mean(first - second, axis=1)  # (D,)
     grad_omega = 0.5 * (term1 - trace)
 
     # sigma gradient: dMLL/dsigma^2 = 0.5 (||u||^2 - tr R), tr R via same probes
-    zs = solve_mhat(gp.ops, jnp.broadcast_to(V[None], (D, n, Q)), cfg)
+    zs = solve_mhat(gp.ops, jnp.broadcast_to(V[None], (D, n, Q)), cfg,
+                    hier=gp.hier)
     quadS = jnp.einsum("nq,nq->q", V, jnp.sum(zs, axis=0))
     tr_r = na / gp.sigma**2 - jnp.mean(quadS) / gp.sigma**4
     grad_sigma2 = 0.5 * (u @ u - tr_r)

@@ -40,7 +40,8 @@ __all__ = ["SolveConfig", "SolveInfo", "DimOps", "solve_mhat", "mhat_matvec"]
     jax.tree_util.register_dataclass,
     data_fields=(),
     meta_fields=("method", "iters", "damping", "pivot", "tol", "backend",
-                 "alg", "fused"),
+                 "alg", "fused", "precond", "precond_levels",
+                 "precond_coarsen", "precond_smooth"),
 )
 @dataclasses.dataclass(frozen=True)
 class SolveConfig:
@@ -48,13 +49,22 @@ class SolveConfig:
     iters: int = 30
     damping: float = 0.0  # jacobi under-relaxation; 0 -> auto (1/D, provably safe)
     pivot: bool = False  # banded LU pivoting
-    # pcg-only early exit: stop once sqrt(rz_k / rz_0) <= tol in the
+    # pcg-only early exit: stop once sqrt(|rz_k| / |rz_0|) <= tol in the
     # preconditioned residual norm (jit-friendly bounded lax.while_loop);
     # 0 -> fixed iteration count. gauss_seidel/jacobi always run `iters`.
     tol: float = 0.0
     backend: str = "auto"  # banded-algebra backend ("auto" | "jax" | "pallas")
     alg: str = "auto"  # pallas solve kernel ("auto" | "lu" | "cr")
     fused: str = "auto"  # fused-sweep kernel ("auto" | "on" | "off")
+    # pcg preconditioner: "none" (per-dim block solve) | "kmg" (kernel
+    # multigrid V-cycle over a coarse hierarchy — requires the caller to
+    # thread ``hier`` into solve_mhat) | "auto" (resolved at GP fit time
+    # via kernels.ops.resolve_precond; at solve time, "auto" with no
+    # hierarchy degrades to "none")
+    precond: str = "none"
+    precond_levels: int = 2  # hierarchy depth incl. the fine level
+    precond_coarsen: int = 8  # subsampling stride per level
+    precond_smooth: int = 1  # deflated block-Jacobi sweeps per coarse solve
 
 
 class SolveInfo(NamedTuple):
@@ -64,6 +74,11 @@ class SolveInfo(NamedTuple):
     # active system size the solve ran over (== the static n when unpadded;
     # the traced active prefix length under capacity padding)
     n_active: jax.Array = None
+    # L2 norm of the residual v - Mhat x at exit, over the active prefix
+    # and all RHS columns (pcg: the recursively-updated r it already
+    # carries; jacobi/gauss_seidel: one extra matvec, only materialized
+    # when return_info=True)
+    resid: jax.Array = None
 
 
 @partial(
@@ -270,22 +285,49 @@ def _det_dot(a: jax.Array, b: jax.Array) -> jax.Array:
 
 
 def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
-         x0: jax.Array | None = None):
-    """Preconditioned CG on the SPD system Mhat x = v, M_pre = block solve.
+         x0: jax.Array | None = None, hier=None):
+    """Preconditioned CG on the SPD system Mhat x = v.
 
-    Returns ``(x, iters_used)``. With ``cfg.tol > 0`` the loop is a bounded
+    The preconditioner is the per-dim block solve (``cfg.precond ==
+    "none"``) or the kernel-multigrid V-cycle over ``hier``
+    (``cfg.precond == "kmg"`` — see :mod:`repro.precond`). Returns
+    ``(x, iters_used, resid)``. With ``cfg.tol > 0`` the loop is a bounded
     ``lax.while_loop`` that exits once every RHS column satisfies
-    ``sqrt(rz_k / rz_0) <= tol`` (rz = r^T M_pre^{-1} r, the quantity PCG
-    already carries — no extra reductions on the hot path).
+    ``sqrt(|rz_k| / |rz_0|) <= tol`` (rz = r^T M_pre^{-1} r, the quantity
+    PCG already carries — no extra reductions on the hot path). The
+    magnitudes matter: the KMG cycle is symmetric but can be indefinite on
+    part of the spectrum (the damped smoother does not contract every
+    mode), so rz may pass through negative values on the way down; PCG
+    still converges on these systems and |rz| -> 0 remains the exit signal.
     """
 
     def amv(u):
         return mhat_matvec(ops, u, pivot=cfg.pivot, backend=cfg.backend,
                            alg=cfg.alg)
 
-    def pre(u):
-        return ops.block_solve(u, pivot=cfg.pivot, backend=cfg.backend,
-                               alg=cfg.alg)
+    if cfg.precond == "kmg":
+        if hier is None:
+            raise ValueError(
+                "precond='kmg' needs the coarse hierarchy: pass hier= to "
+                "solve_mhat (fitted GPs carry it as gp.hier)")
+        if cfg.fused == "on":
+            raise ValueError(
+                "fused='on' is incompatible with precond='kmg': the fused "
+                "pcg kernel hard-codes the block preconditioner")
+        # the V-cycle spans the full (D, n, B) state through transfer
+        # operators the fused kernel knows nothing about — host-level loop
+        fs = None
+        from ..precond.vcycle import kmg_preconditioner
+
+        pre = kmg_preconditioner(ops, hier, damping=cfg.damping,
+                                 smooth=cfg.precond_smooth, pivot=cfg.pivot,
+                                 backend=cfg.backend, alg=cfg.alg)
+    else:
+        fs = _maybe_fused(ops, v, cfg)
+
+        def pre(u):
+            return ops.block_solve(u, pivot=cfg.pivot, backend=cfg.backend,
+                                   alg=cfg.alg)
 
     x = jnp.zeros_like(v) if x0 is None else x0
     # amv(0) == 0 exactly: skip the two dispatches on a cold start
@@ -294,7 +336,6 @@ def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
     p = z
     rz = _det_dot(r, z)
 
-    fs = _maybe_fused(ops, v, cfg)
     if fs is not None:
         x, r, p = fs.pad_state(x), fs.pad_state(r), fs.pad_state(p)
 
@@ -319,12 +360,11 @@ def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
 
     state = (x, r, p, rz)
     if cfg.tol > 0:
-        rz0 = rz
-        thresh = cfg.tol**2 * rz0
+        thresh = cfg.tol**2 * jnp.abs(rz)
 
         def cond(carry):
             i, state = carry
-            return (i < cfg.iters) & jnp.any(state[3] > thresh)
+            return (i < cfg.iters) & jnp.any(jnp.abs(state[3]) > thresh)
 
         iters_used, state = jax.lax.while_loop(
             cond, lambda c: (c[0] + 1, body(c[1])),
@@ -332,12 +372,16 @@ def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
     else:
         state = jax.lax.fori_loop(0, cfg.iters, lambda _, s: body(s), state)
         iters_used = jnp.asarray(cfg.iters, jnp.int32)
-    x = state[0]
-    return (x if fs is None else fs.unpad(x)), iters_used
+    x, r_fin = state[0], state[1]
+    if fs is not None:
+        x, r_fin = fs.unpad(x), fs.unpad(r_fin)
+    resid = jnp.sqrt(tree_sum(_det_dot(r_fin, r_fin), axis=0))
+    return x, iters_used, resid
 
 
 def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig(),
-               x0: jax.Array | None = None, return_info: bool = False):
+               x0: jax.Array | None = None, return_info: bool = False,
+               hier=None):
     """Apply Mhat^{-1} to v: (D, n) or (D, n, B), original point order.
 
     ``x0`` optionally warm-starts the iteration from a previous solution
@@ -348,7 +392,26 @@ def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig(),
     back-fitting argument). Combined with ``cfg.tol > 0`` (pcg) the solve
     then actually *exits* after those few iterations; ``return_info=True``
     additionally returns a :class:`SolveInfo` with the realized count.
+
+    ``hier`` is the tuple of :class:`~repro.precond.CoarseLevel` built by
+    ``precond.build_hierarchy`` (fitted GPs carry it as ``gp.hier``); it is
+    required when ``cfg.precond == "kmg"`` and ignored otherwise.
     """
+    precond = cfg.precond
+    if precond == "auto":
+        # unresolved config reaching a raw solve: enable kmg only when a
+        # hierarchy was actually threaded through, using the static gate
+        if hier is None or cfg.method != "pcg":
+            precond = "none"
+        else:
+            from ..kernels import ops as _kops
+
+            precond = _kops.resolve_precond("auto", q=ops.Phi.lo, n=ops.n)
+        cfg = dataclasses.replace(cfg, precond=precond)
+    if precond == "kmg" and cfg.method != "pcg":
+        raise ValueError(
+            f"precond='kmg' applies to method='pcg' only (got "
+            f"{cfg.method!r}); use precond='none' for relaxation sweeps")
     vec_in = v.ndim == 2
     if vec_in:
         v = v[..., None]
@@ -365,17 +428,24 @@ def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig(),
     if x0 is not None:
         x0 = mask_rows(x0.astype(dtype), ops.n_active, axis=1)
     iters_used = jnp.asarray(cfg.iters, jnp.int32)
+    resid = None
     if cfg.method == "gauss_seidel":
         out = _gauss_seidel(ops, v, cfg, x0)
     elif cfg.method == "jacobi":
         out = _jacobi(ops, v, cfg, x0)
     elif cfg.method == "pcg":
-        out, iters_used = _pcg(ops, v, cfg, x0)
+        out, iters_used, resid = _pcg(ops, v, cfg, x0, hier)
     else:
         raise ValueError(f"unknown method {cfg.method!r}")
-    out = out[..., 0] if vec_in else out
     if not return_info:
-        return out
+        return out[..., 0] if vec_in else out
+    if resid is None:
+        # relaxation sweeps don't carry a residual — one extra matvec,
+        # only paid when diagnostics were asked for
+        r = v - mhat_matvec(ops, out, pivot=cfg.pivot, backend=cfg.backend,
+                            alg=cfg.alg)
+        resid = jnp.sqrt(tree_sum(_det_dot(r, r), axis=0))
+    out = out[..., 0] if vec_in else out
     n_active = jnp.asarray(
         ops.n if ops.n_active is None else ops.n_active, jnp.int32)
-    return out, SolveInfo(iters=iters_used, n_active=n_active)
+    return out, SolveInfo(iters=iters_used, n_active=n_active, resid=resid)

@@ -106,7 +106,7 @@ def _acq_core(gp: AdditiveGP, Xq: jax.Array, beta, best_y, kind: str):
                backend=gp.config.backend,
                alg=gp.config.solve_alg)                         # sorted
     w = gp.ops.from_sorted(ws)
-    z = solve_mhat(gp.ops, w, gp.config.solve_cfg())
+    z = solve_mhat(gp.ops, w, gp.config.solve_cfg(), hier=gp.hier)
     # fixed-association reduction over the (D, capacity) axes: the zero tail
     # collapses bitwise, so the padded acquisition variance equals the
     # unpadded one bit-for-bit at any capacity tier (and under any vmap)
@@ -303,7 +303,7 @@ def build_local_cache(gp: AdditiveGP) -> LocalAcqCache:
         ws = solve(gp.ops.Phi, rhs, pivot=gp.config.pivot,
                    backend=gp.config.backend, alg=gp.config.solve_alg)
         w = gp.ops.from_sorted(ws)
-        z = solve_mhat(gp.ops, w, gp.config.solve_cfg())
+        z = solve_mhat(gp.ops, w, gp.config.solve_cfg(), hier=gp.hier)
         y = solve(transpose(gp.ops.Phi), gp.ops.to_sorted(z),
                   pivot=gp.config.pivot, backend=gp.config.backend,
                   alg=gp.config.solve_alg)

@@ -10,8 +10,6 @@ fused_sweep   — ONE pallas_call per backfitting iteration: permutation
                 gathers, A/Phi matvecs, the SAPhi block-CR solve and the
                 sum-over-D coupling fused in VMEM for all three solvers
                 (pcg / jacobi / gauss_seidel)
-tridiag_pcr   — parallel-cyclic-reduction tridiagonal solve (Matérn-1/2 path;
-                TPU replacement for the paper's sequential banded LU)
 kp_gram       — fused Phi = A·K band assembly (Algorithm 2) without forming K
 
 ``ops`` is the backend dispatch layer: every banded op in ``repro.core``
@@ -44,4 +42,3 @@ from .fused_sweep import (  # noqa: F401
     fused_vmem_bytes,
 )
 from .kp_gram import kp_gram_pallas  # noqa: F401
-from .tridiag_pcr import tridiag_pcr_pallas  # noqa: F401

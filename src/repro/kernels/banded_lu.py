@@ -1,8 +1,8 @@
 """Pallas TPU kernel: banded LU solve (forward/backward) + log-determinant.
 
 One kernel runs the no-pivot banded LU forward elimination and back
-substitution with the whole system resident in VMEM (same residency model as
-``tridiag_pcr``): U rows and forward-substituted right-hand sides live in
+substitution with the whole system resident in VMEM: U rows and
+forward-substituted right-hand sides live in
 scratch refs, and the row recurrences run as ``fori_loop``s over ``pl.ds``
 dynamic slices. The elimination is sequential by nature (each U row feeds the
 next ``lo`` rows); the per-row work is a static ``lo x (hi+1)`` update that

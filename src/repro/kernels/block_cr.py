@@ -1,7 +1,7 @@
 """Pallas TPU kernel: block cyclic-reduction banded solve + log-determinant.
 
-Generalizes ``tridiag_pcr`` to arbitrary symmetric bandwidth ``lo = hi = w``
-(the KP Gram systems: every factor the GP core solves against has this shape
+Solves any symmetric bandwidth ``lo = hi = w``, including the scalar
+tridiagonal case w = 1 (the KP Gram systems: every factor the GP core solves against has this shape
 by construction). The band is viewed as a block-tridiagonal system of
 ``w x w`` blocks
 
@@ -36,8 +36,8 @@ the other kernels — one ``pallas_call``, D grid steps.
 
 Whole system lives in VMEM per grid step — the band (n, 2w+1), the RHS
 (n, B) and the 3 w^2-per-block working triples, ~n(3w + B + 1) floats at
-once — so a single f32 call caps out around n ~ 4e6/(3w + B) (same residency
-model as ``tridiag_pcr``; larger n: the blocked host-level fallback in
+once — so a single f32 call caps out around n ~ 4e6/(3w + B) (larger n:
+the blocked host-level fallback in
 ``repro.core.banded``).
 """
 from __future__ import annotations

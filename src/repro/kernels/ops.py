@@ -1,8 +1,8 @@
 """Backend dispatch for all banded algebra in the GP core.
 
 Every banded op the core performs — matvec, solve, logdet, band x band
-matmul, KP Gram assembly, tridiagonal solve — routes through this module and
-is served by one of two backends:
+matmul, KP Gram assembly — routes through this module and is served by one
+of two backends:
 
   * ``"jax"``    — the pure-jax ``lax.scan`` reference implementations in
                    ``repro.core.banded`` (compiled, CPU/GPU/TPU).
@@ -80,15 +80,14 @@ from .block_cr import block_cr_logdet_pallas, block_cr_solve_pallas
 from .fused_sweep import fused_vmem_bytes
 from .kp_gram import kp_gram_pallas
 from ..masking import canonical_band, mask_rows
-from .tridiag_pcr import tridiag_pcr_pallas
 
 __all__ = [
-    "BACKENDS", "SOLVE_ALGS", "FUSED_MODES", "on_tpu", "get_backend",
-    "set_backend", "use_backend", "resolve_backend", "get_solve_alg",
-    "set_solve_alg", "use_solve_alg", "resolve_solve_alg", "get_fused",
-    "set_fused", "use_fused", "resolve_fused", "banded_matvec",
-    "banded_solve", "banded_logdet", "band_band_matmul", "tridiag_solve",
-    "kp_gram",
+    "BACKENDS", "SOLVE_ALGS", "FUSED_MODES", "PRECOND_MODES", "on_tpu",
+    "get_backend", "set_backend", "use_backend", "resolve_backend",
+    "get_solve_alg", "set_solve_alg", "use_solve_alg", "resolve_solve_alg",
+    "get_fused", "set_fused", "use_fused", "resolve_fused", "get_precond",
+    "set_precond", "use_precond", "resolve_precond", "banded_matvec",
+    "banded_solve", "banded_logdet", "band_band_matmul", "kp_gram",
 ]
 
 BACKENDS = ("auto", "jax", "pallas")
@@ -100,9 +99,22 @@ ENV_SOLVE_ALG = "REPRO_SOLVE_ALG"
 FUSED_MODES = ("auto", "on", "off")
 ENV_FUSED = "REPRO_FUSED"
 
+PRECOND_MODES = ("auto", "none", "kmg")
+ENV_PRECOND = "REPRO_PRECOND"
+
+# "auto" precond gate: enable the kernel-multigrid V-cycle at q == 0 once
+# the system is large enough that the coarse correction pays for its extra
+# matvecs (~2-3x per iteration vs a 2-4x iteration-count cut, so the
+# crossover sits around 4k points); q >= 1 declines — assembling
+# Khat^{-1} = Phi^{-1} A at q >= 1 amplifies f64 cancellation to ~1e13
+# spectral range and the coarse correction stops resembling the fine
+# operator (see kernels/README.md)
+KMG_AUTO_MIN_N = 4096
+
 _backend = os.environ.get(ENV_VAR, "auto")
 _solve_alg = os.environ.get(ENV_SOLVE_ALG, "auto")
 _fused = os.environ.get(ENV_FUSED, "auto")
+_precond = os.environ.get(ENV_PRECOND, "auto")
 
 
 def on_tpu() -> bool:
@@ -293,6 +305,60 @@ def resolve_fused(fused: str | None, backend: str | None, *, widths,
     return est <= fused_sweep.VMEM_CAP_BYTES
 
 
+def get_precond() -> str:
+    """Current process-wide preconditioner mode (may be "auto")."""
+    return _precond
+
+
+def set_precond(name: str) -> None:
+    """Set the process-wide preconditioner mode ("auto" | "none" | "kmg")."""
+    global _precond
+    if name not in PRECOND_MODES:
+        raise ValueError(
+            f"unknown precond mode {name!r}; expected one of {PRECOND_MODES}")
+    _precond = name
+
+
+@contextlib.contextmanager
+def use_precond(name: str):
+    """Temporarily override the preconditioner mode (trace-time scope)."""
+    prev = _precond
+    set_precond(name)
+    try:
+        yield
+    finally:
+        set_precond(prev)
+
+
+def resolve_precond(precond: str | None, *, q: int, n: int) -> str:
+    """Resolve the backfitting PCG preconditioner to "none" | "kmg".
+
+    An explicit "none"/"kmg" wins; "auto" (the GPConfig/SolveConfig
+    default) and None defer to the process default (``set_precond`` /
+    ``REPRO_PRECOND``). A final "auto" enables the kernel-multigrid
+    V-cycle exactly when ``q == 0`` and ``n >= KMG_AUTO_MIN_N`` (both
+    static): below that the coarse correction's extra work outweighs the
+    iteration cut, and at q >= 1 the f64 cancellation in assembling
+    Khat^{-1} makes the coarse operator unreliable (forcing "kmg" there
+    stays SPD-safe via the clamped deflation, just not profitable).
+    ``fit()`` calls this once and bakes the result into the GP config, so
+    jit caches key on the resolved choice.
+    """
+    p = precond if precond is not None else _precond
+    if p not in PRECOND_MODES:
+        raise ValueError(
+            f"unknown precond mode {p!r}; expected one of {PRECOND_MODES}")
+    if p == "auto":
+        p = _precond
+        if p not in PRECOND_MODES:
+            raise ValueError(
+                f"unknown precond mode {p!r} (from {ENV_PRECOND} or "
+                f"set_precond); expected one of {PRECOND_MODES}")
+    if p == "auto":
+        return "kmg" if q == 0 and n >= KMG_AUTO_MIN_N else "none"
+    return p
+
+
 def _interpret() -> bool:
     return not on_tpu()
 
@@ -440,15 +506,6 @@ def band_band_matmul(a_band, b_band, a_lo: int, a_hi: int, b_lo: int,
     out = out.reshape(batch + out.shape[-2:])
     n = a_band.shape[-2]
     return out * bd._band_mask(n, a_lo + b_lo, a_hi + b_hi)
-
-
-def tridiag_solve(dl, d, du, rhs, backend: str | None = None):
-    """Tridiagonal solve; PCR kernel on pallas, lax.tridiagonal_solve on jax."""
-    if resolve_backend(backend) == "jax":
-        from .ref import tridiag_ref
-
-        return tridiag_ref(dl, d, du, rhs)
-    return tridiag_pcr_pallas(dl, d, du, rhs, interpret=_interpret())
 
 
 def kp_gram(q: int, omega, xs, a_band, block: int = 512,

@@ -84,14 +84,6 @@ def block_cr_logdet_ref(band: jax.Array, w: int):
         _blocks_to_dense(*band_to_blocks_ref(band, w)))[1]
 
 
-def tridiag_ref(dl, d, du, rhs):
-    from jax.lax.linalg import tridiagonal_solve
-
-    dl = dl.at[0].set(0.0)
-    du = du.at[-1].set(0.0)
-    return tridiagonal_solve(dl, d, du, rhs)
-
-
 def kp_gram_ref(q: int, omega, xs: jax.Array, a_band: jax.Array):
     """Phi band via explicit windowed gathers (same math as kernel_packets)."""
     n = xs.shape[0]

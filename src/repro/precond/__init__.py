@@ -1,0 +1,23 @@
+"""Kernel-multigrid (KMG) preconditioning for additive-GP backfitting.
+
+A sparse-GP coarse-grid correction (arXiv 2403.13300) layered over the
+repo's banded kernel stack: ``coarse`` builds capacity-padded, mask-aware
+coarse levels from subsampled kernel-packet rows; ``vcycle`` composes them
+into a symmetric, batch-invariant V-cycle preconditioner that
+``backfitting.solve_mhat`` applies inside PCG when
+``SolveConfig.precond == "kmg"``.
+"""
+from .coarse import CoarseLevel, build_hierarchy, coarse_capacity
+from .vcycle import (coarse_matvec, coarse_solve, kmg_preconditioner,
+                     prolong, restrict)
+
+__all__ = [
+    "CoarseLevel",
+    "build_hierarchy",
+    "coarse_capacity",
+    "coarse_matvec",
+    "coarse_solve",
+    "kmg_preconditioner",
+    "prolong",
+    "restrict",
+]

@@ -1,0 +1,188 @@
+"""KMG V-cycle: the coarse-grid-corrected preconditioner for backfitting.
+
+Implements the solver side of the kernel-multigrid method (arXiv 2403.13300)
+on the hierarchy built by :mod:`coarse`:
+
+  * ``prolong`` / ``restrict`` — the sparse transfer pair. Prolongation is
+    windowed Lagrange interpolation in per-dimension sorted order
+    (gather ``npts`` coarse values, weight, scatter back to original
+    order); restriction is its *exact adjoint* (same windows, same
+    weights, scatter-add), which is what keeps the preconditioner
+    symmetric and PCG happy.
+  * ``coarse_matvec`` — the mixed coarse operator
+    ``M_c u = Khat_c^{-1} u + sigma^{-2} R (S S^T) P u``: banded
+    rediscretized prior plus the data term applied exactly through the
+    fine grid (Galerkin on the data part). The naive rediscretized data
+    term ``sigma_c^{-2} S S^T`` misweights the subsampled points badly
+    enough to make the correction useless — this mixed form is what the
+    prototype validated.
+  * ``coarse_solve`` — deflated damped block-Jacobi on ``M_c``: the
+    per-dimension banded block solves go through the standard kernel
+    dispatch (block cyclic reduction on the pallas backend — the ISSUE's
+    "solve the coarsest level exactly with block_cr"; the banded factor
+    IS solved exactly, the cross-dimension coupling is relaxed), wrapped
+    in rank-D deflation of the per-dimension-constant modes that additive
+    backfitting provably stalls on (zero-sum constant shifts between
+    dimensions are near-null for the data term and cheap for the prior).
+  * ``kmg_preconditioner`` — the symmetric multiplicative cycle
+    ``z = aB r;  z += P M_c^{-1} R (r - M z)  [per level, forward then
+    mirrored];  z += aB (r - M z)`` with ``B`` the fine block-Jacobi
+    preconditioner and ``a = damping`` (default ``1/D``). Fixed smoother
+    counts and fixed-association reductions (``masking.tree_sum``) make
+    the map linear, symmetric, and batch-invariant — a *fixed* SPD
+    operator, so it can sit inside plain PCG, and fleet/vmap lanes are
+    bit-reproducible per tenant.
+
+Everything here is shape-static per (capacity, stride) and mask-aware:
+padded tails stay exactly zero through every transfer (gathers read
+masked state, scatters add zeros), so padded and unpadded solves agree
+bit-for-bit on the active prefix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.backfitting import DimOps, mhat_matvec
+from ..masking import mask_rows, tree_sum
+
+from .coarse import CoarseLevel
+
+__all__ = ["prolong", "restrict", "coarse_matvec", "coarse_solve",
+           "kmg_preconditioner"]
+
+
+def _window_idx(level: CoarseLevel) -> jax.Array:
+    """(D, n, npts) clipped gather/scatter indices into coarse sorted order.
+
+    Both transfer directions use the SAME clipped indices so the pair is an
+    exact adjoint even for windows clamped at the boundary.
+    """
+    idx = level.j0[:, :, None] + jnp.arange(level.npts)[None, None, :]
+    return jnp.clip(idx, 0, level.nc - 1)
+
+
+def prolong(level: CoarseLevel, fine_ops: DimOps, u: jax.Array) -> jax.Array:
+    """Interpolate coarse state (D, nc, B) to the fine grid (D, n, B)."""
+    us = level.ops.to_sorted(u)
+    D, nc, B = us.shape
+    idx = _window_idx(level)                                  # (D, n, npts)
+    g = jnp.take_along_axis(us, idx.reshape(D, -1)[:, :, None], axis=1)
+    g = g.reshape(D, idx.shape[1], level.npts, B)
+    vals = jnp.sum(level.W[..., None] * g, axis=2)            # (D, n, B)
+    return fine_ops.from_sorted(vals)
+
+
+def restrict(level: CoarseLevel, fine_ops: DimOps, r: jax.Array) -> jax.Array:
+    """Adjoint of :func:`prolong`: fine (D, n, B) -> coarse (D, nc, B).
+
+    The scatter-add runs as ``npts`` sequential full-array scatters — a
+    fixed update order independent of batch shape, and padded fine rows
+    contribute exact zeros (``a + 0.0 == a`` bitwise), so restriction is
+    batch- and capacity-invariant like every other reduction in the stack.
+    """
+    rs = fine_ops.to_sorted(r)
+    D, n, B = rs.shape
+    idx = _window_idx(level)
+    out = jnp.zeros((D, level.nc, B), rs.dtype)
+    d_i = jnp.arange(D)[:, None, None]
+    b_i = jnp.arange(B)[None, None, :]
+    for a in range(level.npts):
+        out = out.at[d_i, idx[:, :, a][:, :, None], b_i].add(
+            level.W[:, :, a][:, :, None] * rs)
+    return level.ops.from_sorted(out)
+
+
+def coarse_matvec(level: CoarseLevel, fine_ops: DimOps, u: jax.Array,
+                  pivot: bool = False, backend: str | None = None,
+                  alg: str | None = None) -> jax.Array:
+    """Mixed coarse operator: rediscretized prior + exact Galerkin data term.
+
+    ``M_c u = Khat_c^{-1} u + sigma^{-2} R broadcast(sum_d (P u)_d)``.
+    """
+    Pu = prolong(level, fine_ops, u)
+    s = jnp.broadcast_to(tree_sum(Pu, axis=0)[None], Pu.shape)
+    prior = level.ops.khat_inv_mv(u, pivot=pivot, backend=backend, alg=alg)
+    return prior + restrict(level, fine_ops, s) / fine_ops.sigma2
+
+
+def _deflate(level: CoarseLevel, fine_ops: DimOps, x: jax.Array,
+             b: jax.Array, pivot: bool = False, backend: str | None = None,
+             alg: str | None = None) -> jax.Array:
+    """Project the residual onto the per-dim-constant basis and correct.
+
+    x += E (E^T M_c E)^{-1} E^T (b - M_c x) with the precomputed SPD-safe
+    inverse Gram ``level.EG``.
+    """
+    r = b - coarse_matvec(level, fine_ops, x, pivot=pivot, backend=backend,
+                          alg=alg)
+    c = tree_sum(r, axis=1)                                   # (D, B)
+    y = level.EG @ c
+    corr = jnp.broadcast_to(y[:, None, :], x.shape)
+    return x + mask_rows(corr, level.ops.n_active, axis=1)
+
+
+def coarse_solve(level: CoarseLevel, fine_ops: DimOps, b: jax.Array, *,
+                 smooth: int = 1, pivot: bool = False,
+                 backend: str | None = None,
+                 alg: str | None = None) -> jax.Array:
+    """Approximate M_c^{-1} b: deflation around damped block-Jacobi sweeps.
+
+    Each sweep solves every per-dimension banded block *exactly* (block CR
+    on the pallas backend) and damps the cross-dimension coupling by 1/D;
+    deflation before and after removes the constant modes Jacobi cannot
+    move. ``smooth`` is static — the cycle stays a fixed linear operator.
+    """
+    D = level.ops.D
+    # entry deflation at x = 0: coarse_matvec(0) is exactly zero (banded
+    # solves and transfers of a zero state stay zero bitwise), so the first
+    # projection reads b directly — one fine-grid transfer pair saved per
+    # cycle with the identical result
+    c = tree_sum(b, axis=1)
+    x = mask_rows(jnp.broadcast_to((level.EG @ c)[:, None, :], b.shape),
+                  level.ops.n_active, axis=1)
+    for _ in range(smooth):
+        r = b - coarse_matvec(level, fine_ops, x, pivot=pivot,
+                              backend=backend, alg=alg)
+        x = x + level.ops.block_solve(r, pivot=pivot, backend=backend,
+                                      alg=alg) / D
+    return _deflate(level, fine_ops, x, b, pivot=pivot, backend=backend,
+                    alg=alg)
+
+
+def kmg_preconditioner(ops: DimOps, hier: tuple[CoarseLevel, ...], *,
+                       damping: float = 0.0, smooth: int = 1,
+                       pivot: bool = False, backend: str | None = None,
+                       alg: str | None = None):
+    """Build the symmetric V-cycle preconditioner ``pre(r) ~ Mhat^{-1} r``.
+
+    With one coarse level this is pre-smooth / coarse-correct / post-smooth;
+    with more, the coarse corrections sweep the levels forward then mirrored
+    back (each level transfers directly to/from the fine grid), preserving
+    symmetry. ``damping <= 0`` selects the stability default ``1/D``.
+
+    The returned closure is linear and self-adjoint by construction (adjoint
+    transfer pair, symmetric sweep order, fixed smoother counts), so
+    ``solve_mhat`` can use it as the PCG preconditioner without flexible
+    (FGMRES-style) machinery.
+    """
+    alpha = damping if damping > 0 else 1.0 / ops.D
+    levels = tuple(hier)
+    seq = levels + levels[-2::-1]
+
+    def amv(u):
+        return mhat_matvec(ops, u, pivot=pivot, backend=backend, alg=alg)
+
+    def bsolve(r):
+        return ops.block_solve(r, pivot=pivot, backend=backend, alg=alg)
+
+    def pre(r):
+        z = alpha * bsolve(r)
+        for lv in seq:
+            rc = restrict(lv, ops, r - amv(z))
+            zc = coarse_solve(lv, ops, rc, smooth=smooth, pivot=pivot,
+                              backend=backend, alg=alg)
+            z = z + prolong(lv, ops, zc)
+        return z + alpha * bsolve(r - amv(z))
+
+    return pre

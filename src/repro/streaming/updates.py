@@ -56,8 +56,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import matern as mk
-from ..core.additive_gp import (AdditiveGP, TIE_EPS, posterior_caches,
-                                with_capacity)
+from ..core.additive_gp import (AdditiveGP, TIE_EPS, build_gp_hier,
+                                posterior_caches, with_capacity)
 from ..core.backfitting import DimOps, solve_mhat
 from ..core.banded import Banded, add, scale, solve, transpose
 from ..core.bayesopt import LocalAcqCache
@@ -197,10 +197,13 @@ def _insert_core(gp: AdditiveGP, x_new: jax.Array, y_new: jax.Array,
     us = gp.ops.to_sorted(gp.u_sy)  # (D, C), canonical zero tail
     est = jnp.take_along_axis(us, jnp.clip(p - 1, 0, C - 1)[:, None], axis=1)
     x0 = mask_rows(gp.u_sy, k, axis=1).at[jnp.arange(gp.D), k].set(est[:, 0])
-    u_sy, bY, Gband = posterior_caches(config, ops, Y, x0=x0, iters=iters)
+    # coarse levels are O(q)-cheap strided re-assemblies; rebuilt per mutation
+    hier = build_gp_hier(config, gp.omega, gp.sigma, X, xs, ops)
+    u_sy, bY, Gband = posterior_caches(config, ops, Y, x0=x0, iters=iters,
+                                       hier=hier)
     return AdditiveGP(X=X, Y=Y, omega=gp.omega, sigma=gp.sigma, xs=xs,
                       ops=ops, B=B, Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband,
-                      config=config, n_active=k1)
+                      config=config, n_active=k1, hier=hier)
 
 
 def _lane1(core_call):
@@ -337,10 +340,12 @@ def _evict_core(gp: AdditiveGP, iters: int) -> AdditiveGP:
     Y = mask_rows(_delete_vec(gp.Y, 0), k1, axis=0)
     # warm start: the surviving entries of the pre-evict solution
     x0 = mask_rows(jax.vmap(lambda u: _delete_vec(u, 0))(gp.u_sy), k1, axis=1)
-    u_sy, bY, Gband = posterior_caches(config, ops, Y, x0=x0, iters=iters)
+    hier = build_gp_hier(config, gp.omega, gp.sigma, X, xs, ops)
+    u_sy, bY, Gband = posterior_caches(config, ops, Y, x0=x0, iters=iters,
+                                       hier=hier)
     return AdditiveGP(X=X, Y=Y, omega=gp.omega, sigma=gp.sigma, xs=xs,
                       ops=ops, B=B, Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband,
-                      config=config, n_active=k1)
+                      config=config, n_active=k1, hier=hier)
 
 
 @partial(jax.jit, static_argnums=(1,))
@@ -491,7 +496,7 @@ def refresh_local_cache(gp: AdditiveGP, cache: LocalAcqCache, *,
     pv, be, sa = gp.config.pivot, gp.config.backend, gp.config.solve_alg
     ws = solve(gp.ops.Phi, rhs, pivot=pv, backend=be, alg=sa)
     w = gp.ops.from_sorted(ws)
-    z = solve_mhat(gp.ops, w, gp.config.solve_cfg())
+    z = solve_mhat(gp.ops, w, gp.config.solve_cfg(), hier=gp.hier)
     y = solve(transpose(gp.ops.Phi), gp.ops.to_sorted(z), pivot=pv, backend=be,
               alg=sa)
     cols = y.reshape(D, n, D, W)  # cols[d, i, e, k] = M_new[d, i, e, c_idx[e, k]]

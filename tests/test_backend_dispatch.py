@@ -169,23 +169,6 @@ def test_three_way_parity(op):
     _assert_close(p, r, dtype, f"{op}: pallas!=ref")
 
 
-@pytest.mark.parametrize(
-    "dtype", [jnp.float64, pytest.param(jnp.float32, marks=pytest.mark.slow)])
-def test_tridiag_parity(dtype):
-    rng = np.random.default_rng(42)
-    n = 128
-    d = jnp.asarray(rng.standard_normal(n) + 4.0, dtype)
-    dl = jnp.asarray(rng.standard_normal(n), dtype).at[0].set(0.0)
-    du = jnp.asarray(rng.standard_normal(n), dtype).at[-1].set(0.0)
-    rhs = jnp.asarray(rng.standard_normal((n, 2)), dtype)
-    got_j = ops.tridiag_solve(dl, d, du, rhs, backend="jax")
-    got_p = ops.tridiag_solve(dl, d, du, rhs, backend="pallas")
-    tol = 1e-3 if dtype == jnp.float32 else 1e-8
-    np.testing.assert_allclose(np.asarray(got_p, np.float64),
-                               np.asarray(got_j, np.float64),
-                               rtol=tol, atol=tol)
-
-
 @pytest.mark.parametrize("q", [0, pytest.param(1, marks=pytest.mark.slow)])
 def test_kp_gram_parity(q):
     from repro.core.kernel_packets import kp_factors

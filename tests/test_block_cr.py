@@ -326,3 +326,22 @@ def test_gp_fit_through_cr_matches_jax_backend():
         gp = fit(cfg, X, Y, omega, 0.5)
         out[backend] = np.asarray(posterior_mean(gp, Xq))
     assert np.abs(out["jax"] - out["pallas"]).max() < 1e-7
+
+
+def test_w1_kp_system_solve():
+    """The Matérn-1/2 (sigma^2 A + Phi) tridiagonal solved by block CR at
+    w = 1 — the path that retired the dedicated PCR tridiagonal kernel."""
+    from repro.core.banded import add, scale
+
+    rng = np.random.default_rng(7)
+    n = 256
+    xs = jnp.asarray(np.sort(rng.random(n) * 10), jnp.float64)
+    A, Phi = kp_factors(0, 1.3, xs)
+    S = add(scale(A, 0.09), Phi)  # lo = hi = 1 tridiagonal
+    rhs = jnp.asarray(rng.standard_normal((n, 4)), jnp.float64)
+    want = np.linalg.solve(np.array(to_dense(S)), np.array(rhs))
+    for backend in ("jax", "pallas"):
+        got = ops.banded_solve(S.data, rhs, 1, 1, backend=backend, alg="cr"
+                               if backend == "pallas" else None)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-7,
+                                   atol=1e-7)

@@ -29,43 +29,6 @@ def test_banded_matvec_sweep(n, lo, hi, dtype):
                                rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("n", [pytest.param(16, marks=pytest.mark.slow), 128,
-                               pytest.param(1000, marks=pytest.mark.slow)])
-@pytest.mark.parametrize("dtype", [jnp.float32,
-                                   pytest.param(jnp.float64,
-                                                marks=pytest.mark.slow)])
-def test_tridiag_pcr_sweep(n, dtype):
-    rng = np.random.default_rng(n)
-    d = jnp.asarray(rng.standard_normal(n) + 4.0, dtype)
-    dl = jnp.asarray(rng.standard_normal(n), dtype).at[0].set(0.0)
-    du = jnp.asarray(rng.standard_normal(n), dtype).at[-1].set(0.0)
-    rhs = jnp.asarray(rng.standard_normal((n, 2)), dtype)
-    got = ops.tridiag_solve(dl, d, du, rhs, backend="pallas")
-    want = ref.tridiag_ref(dl, d, du, rhs)
-    tol = 1e-4 if dtype == jnp.float32 else 1e-9
-    np.testing.assert_allclose(np.asarray(got, np.float64),
-                               np.asarray(want, np.float64), rtol=tol, atol=tol)
-
-
-@pytest.mark.slow
-def test_tridiag_pcr_on_kp_system():
-    """Solve the actual (sigma^2 A + Phi) system of the Matérn-1/2 path."""
-    rng = np.random.default_rng(7)
-    n = 256
-    xs = jnp.asarray(np.sort(rng.random(n) * 10), jnp.float64)
-    A, Phi = kp_factors(0, 1.3, xs)
-    from repro.core.banded import add, scale, to_dense
-
-    S = add(scale(A, 0.09), Phi)  # lo=hi=1 tridiagonal
-    dl = S.data[:, 0]
-    d = S.data[:, 1]
-    du = S.data[:, 2]
-    rhs = jnp.asarray(rng.standard_normal((n, 4)), jnp.float64)
-    got = ops.tridiag_solve(dl, d, du, rhs, backend="pallas")
-    want = np.linalg.solve(np.array(to_dense(S)), np.array(rhs))
-    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-7, atol=1e-7)
-
-
 @pytest.mark.parametrize("q", [0, pytest.param(1, marks=pytest.mark.slow),
                                pytest.param(2, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("n", [100, pytest.param(700, marks=pytest.mark.slow)])

@@ -1,0 +1,254 @@
+"""Kernel-multigrid (KMG) preconditioning: parity, iteration wins, dispatch.
+
+Load-bearing properties:
+
+  * solution parity: ``precond="kmg"`` reaches the same solution as plain
+    block-preconditioned PCG to tol, on both backends;
+  * iteration wins: at large n the V-cycle cuts ``SolveInfo.iters``
+    strictly below plain PCG at the same tol;
+  * capacity parity: a capacity-padded kmg fit matches the unpadded fit on
+    the active prefix (the coarse hierarchy is mask-aware);
+  * fleet safety: a T >= 8 stacked fleet with kmg baked in is lane-invariant
+    (duplicated tenants stay bitwise equal) and matches single-GP fits;
+  * dispatch: ``resolve_precond`` gating (q == 0, n >= KMG_AUTO_MIN_N),
+    the ``REPRO_PRECOND`` process default, and the error cases (missing
+    hierarchy, fused="on", non-pcg methods).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.additive_gp import GPConfig, fit, posterior_mean
+from repro.core.backfitting import SolveConfig, mhat_matvec, solve_mhat
+from repro.core.fleet import fleet_fit, fleet_posterior_mean
+from repro.kernels import ops as kops
+from repro.precond import build_hierarchy, coarse_capacity
+
+
+def _problem(n, D, seed=0, sigma=0.1, omega=2.0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.random((n, D)))
+    Y = jnp.asarray(np.sum(np.sin(3 * np.asarray(X)), axis=1)
+                    + 0.1 * rng.standard_normal(n))
+    return X, Y, jnp.full((D,), omega), sigma
+
+
+def _rhs(gp, seed=1, B=None):
+    rng = np.random.default_rng(seed)
+    shape = (gp.D, gp.n) if B is None else (gp.D, gp.n, B)
+    return jnp.asarray(rng.standard_normal(shape))
+
+
+# ---------------------------------------------------------------------------
+# solution parity, both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,n,D", [
+    ("jax", 256, 3),
+    ("pallas", 96, 2),
+    pytest.param("pallas", 256, 3, marks=pytest.mark.slow),
+])
+def test_kmg_matches_plain_solution(backend, n, D):
+    X, Y, om, sigma = _problem(n, D)
+    cfg = GPConfig(q=0, precond="kmg", solver_iters=150, backend=backend)
+    gp = fit(cfg, X, Y, om, sigma)
+    assert gp.config.precond == "kmg" and gp.hier is not None
+    v = _rhs(gp)
+    kmg = SolveConfig(method="pcg", iters=150, tol=1e-9, precond="kmg",
+                      backend=backend)
+    plain = dataclasses.replace(kmg, precond="none")
+    x_k = solve_mhat(gp.ops, v, kmg, hier=gp.hier)
+    x_p = solve_mhat(gp.ops, v, plain)
+    np.testing.assert_allclose(np.asarray(x_k), np.asarray(x_p),
+                               rtol=1e-6, atol=1e-6)
+    # and the returned iterate really solves the system
+    r = v - mhat_matvec(gp.ops, x_k, backend=backend)
+    assert float(jnp.max(jnp.abs(r))) < 1e-6
+
+
+def test_kmg_posterior_matches_plain():
+    X, Y, om, sigma = _problem(300, 3, seed=3)
+    base = dict(q=0, solver_iters=200, backend="jax")
+    gp_p = fit(GPConfig(precond="none", **base), X, Y, om, sigma)
+    gp_k = fit(GPConfig(precond="kmg", **base), X, Y, om, sigma)
+    Xq = jnp.asarray(np.random.default_rng(4).random((7, 3)))
+    np.testing.assert_allclose(np.asarray(posterior_mean(gp_p, Xq)),
+                               np.asarray(posterior_mean(gp_k, Xq)),
+                               rtol=1e-9, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# iteration wins at the same tol
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,D", [
+    (512, 4),
+    pytest.param(4096, 4, marks=pytest.mark.slow),
+])
+def test_kmg_strictly_fewer_iters(n, D):
+    X, Y, om, sigma = _problem(n, D, seed=2)
+    cfg = GPConfig(q=0, precond="kmg", solver_iters=30, backend="jax")
+    gp = fit(cfg, X, Y, om, sigma)
+    v = _rhs(gp, seed=5)
+    kmg = SolveConfig(method="pcg", iters=400, tol=1e-8, precond="kmg",
+                      backend="jax")
+    plain = dataclasses.replace(kmg, precond="none")
+    _, info_k = solve_mhat(gp.ops, v, kmg, hier=gp.hier, return_info=True)
+    _, info_p = solve_mhat(gp.ops, v, plain, return_info=True)
+    assert int(info_k.iters) < int(info_p.iters), (
+        f"kmg {int(info_k.iters)} vs plain {int(info_p.iters)}")
+
+
+# ---------------------------------------------------------------------------
+# capacity padding
+# ---------------------------------------------------------------------------
+
+def test_kmg_padded_matches_unpadded():
+    n, D, cap = 200, 3, 256
+    X, Y, om, sigma = _problem(n, D, seed=6)
+    cfg = GPConfig(q=0, precond="kmg", solver_iters=120, backend="jax")
+    gp = fit(cfg, X, Y, om, sigma)
+    gpp = fit(cfg, X, Y, om, sigma, capacity=cap)
+    assert gpp.hier is not None
+    assert gpp.hier[0].nc == coarse_capacity(cap, cfg.precond_coarsen)
+    Xq = jnp.asarray(np.random.default_rng(7).random((5, D)))
+    np.testing.assert_allclose(np.asarray(posterior_mean(gp, Xq)),
+                               np.asarray(posterior_mean(gpp, Xq)),
+                               rtol=1e-11, atol=1e-11)
+    # padded kmg solve == padded plain solve on the active prefix
+    v = jnp.concatenate(
+        [_rhs(gp, seed=8), jnp.zeros((D, cap - n))], axis=1)
+    kmg = SolveConfig(method="pcg", iters=200, tol=1e-9, precond="kmg",
+                      backend="jax")
+    x_k = solve_mhat(gpp.ops, v, kmg, hier=gpp.hier)
+    x_p = solve_mhat(gpp.ops, v, dataclasses.replace(kmg, precond="none"))
+    np.testing.assert_allclose(np.asarray(x_k[:, :n]), np.asarray(x_p[:, :n]),
+                               rtol=1e-6, atol=1e-6)
+    # the padding tail stays canonical zero
+    assert float(jnp.max(jnp.abs(x_k[:, n:]))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fleet: T >= 8 lane invariance with kmg baked in
+# ---------------------------------------------------------------------------
+
+def test_kmg_fleet_lane_invariance():
+    T, n, D, cap = 8, 48, 2, 64
+    rng = np.random.default_rng(9)
+    Xs = rng.uniform(size=(T, n, D))
+    Ys = np.cos(2 * Xs).sum(axis=2) + 0.05 * rng.standard_normal((T, n))
+    Xs[5], Ys[5] = Xs[2], Ys[2]  # duplicated tenants must stay bitwise equal
+    cfg = GPConfig(q=0, precond="kmg", solver_iters=60, backend="jax")
+    fleet = fleet_fit(cfg, jnp.asarray(Xs), jnp.asarray(Ys),
+                      jnp.ones((T, D)) * 2.0, 0.1, capacity=cap)
+    assert fleet.gp.config.precond == "kmg" and fleet.gp.hier is not None
+    Xq = jnp.asarray(rng.uniform(size=(T, 6, D)))
+    Xq = Xq.at[5].set(Xq[2])
+    mu = np.asarray(fleet_posterior_mean(fleet, Xq))
+    assert np.array_equal(mu[5], mu[2])
+    # and each lane matches its standalone fit
+    for t in (0, 2, 7):
+        gp = fit(cfg, jnp.asarray(Xs[t]), jnp.asarray(Ys[t]),
+                 jnp.full((D,), 2.0), 0.1, capacity=cap)
+        np.testing.assert_allclose(mu[t],
+                                   np.asarray(posterior_mean(gp, Xq[t])),
+                                   rtol=1e-10, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# SolveInfo.resid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["pcg", "jacobi"])
+def test_solveinfo_resid(method):
+    X, Y, om, sigma = _problem(128, 2, seed=10)
+    gp = fit(GPConfig(q=0, backend="jax"), X, Y, om, sigma)
+    v = _rhs(gp, seed=11)
+    cfg = SolveConfig(method=method, iters=60, backend="jax",
+                      tol=1e-8 if method == "pcg" else 0.0)
+    x, info = solve_mhat(gp.ops, v, cfg, return_info=True)
+    assert info.resid is not None
+    want = float(jnp.linalg.norm(v - mhat_matvec(gp.ops, x, backend="jax")))
+    np.testing.assert_allclose(float(info.resid), want, rtol=1e-6, atol=1e-10)
+
+
+def test_solveinfo_resid_tracks_tol():
+    X, Y, om, sigma = _problem(256, 3, seed=12)
+    gp = fit(GPConfig(q=0, precond="kmg", backend="jax"), X, Y, om, sigma)
+    v = _rhs(gp, seed=13)
+    cfg = SolveConfig(method="pcg", iters=300, tol=1e-10, precond="kmg",
+                      backend="jax")
+    _, info = solve_mhat(gp.ops, v, cfg, hier=gp.hier, return_info=True)
+    # exit residual is small in absolute terms once tol fires
+    assert float(info.resid) < 1e-6 * float(jnp.linalg.norm(v))
+
+
+# ---------------------------------------------------------------------------
+# dispatch: resolve_precond, env default, baking, error cases
+# ---------------------------------------------------------------------------
+
+def test_resolve_precond_rules():
+    big = kops.KMG_AUTO_MIN_N
+    assert kops.resolve_precond("none", q=0, n=big) == "none"
+    assert kops.resolve_precond("kmg", q=2, n=8) == "kmg"  # explicit wins
+    assert kops.resolve_precond("auto", q=0, n=big) == "kmg"
+    assert kops.resolve_precond("auto", q=0, n=big - 1) == "none"
+    assert kops.resolve_precond("auto", q=1, n=4 * big) == "none"
+    assert kops.resolve_precond(None, q=0, n=big) == "kmg"
+    with pytest.raises(ValueError):
+        kops.resolve_precond("vcycle", q=0, n=big)
+
+
+def test_precond_env_default_and_baking():
+    X, Y, om, sigma = _problem(64, 2, seed=14)
+    with kops.use_precond("kmg"):
+        assert kops.get_precond() == "kmg"
+        assert kops.resolve_precond("auto", q=1, n=8) == "kmg"
+        gp = fit(GPConfig(q=0, backend="jax"), X, Y, om, sigma)
+        assert gp.config.precond == "kmg" and gp.hier is not None
+    with kops.use_precond("none"):
+        assert kops.resolve_precond("auto", q=0, n=10**6) == "none"
+        gp = fit(GPConfig(q=0, backend="jax"), X, Y, om, sigma)
+        assert gp.config.precond == "none" and gp.hier is None
+    with pytest.raises(ValueError):
+        kops.set_precond("bogus")
+
+
+def test_kmg_error_cases():
+    X, Y, om, sigma = _problem(64, 2, seed=15)
+    gp = fit(GPConfig(q=0, precond="kmg", backend="jax"), X, Y, om, sigma)
+    v = _rhs(gp)
+    kmg = SolveConfig(method="pcg", iters=10, precond="kmg", backend="jax")
+    with pytest.raises(ValueError, match="hierarchy"):
+        solve_mhat(gp.ops, v, kmg)  # hier not threaded
+    with pytest.raises(ValueError, match="fused"):
+        solve_mhat(gp.ops, v, dataclasses.replace(kmg, fused="on"),
+                   hier=gp.hier)
+    with pytest.raises(ValueError, match="pcg"):
+        solve_mhat(gp.ops, v, dataclasses.replace(kmg, method="jacobi"),
+                   hier=gp.hier)
+
+
+def test_auto_with_hierarchy_degrades_without_one():
+    # cfg "auto" + no hier at solve time must fall back to plain, not raise
+    X, Y, om, sigma = _problem(64, 2, seed=16)
+    gp = fit(GPConfig(q=0, precond="none", backend="jax"), X, Y, om, sigma)
+    v = _rhs(gp)
+    cfg = SolveConfig(method="pcg", iters=80, tol=1e-9, precond="auto",
+                      backend="jax")
+    x = solve_mhat(gp.ops, v, cfg)
+    want = solve_mhat(gp.ops, v, dataclasses.replace(cfg, precond="none"))
+    np.testing.assert_allclose(np.asarray(x), np.asarray(want))
+
+
+def test_hierarchy_depth_and_strides():
+    X, Y, om, sigma = _problem(4096 // 8, 2, seed=17)  # n=512, c=8 -> one level
+    cfg = GPConfig(q=0, precond="kmg", precond_levels=3, precond_coarsen=4,
+                   backend="jax")
+    gp = fit(cfg, X, Y, om, sigma)
+    strides = [lv.stride for lv in gp.hier]
+    assert strides == [4, 16]
+    assert [lv.nc for lv in gp.hier] == [128, 32]
