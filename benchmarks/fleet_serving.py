@@ -29,8 +29,71 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import GPConfig, fit
+from repro.core.additive_gp import _VAR_CHUNK, posterior_var
 from repro.streaming import GPFleetEngine
 import repro.streaming.updates as updates_mod
+
+
+def _max_interm_bytes(fn, *args) -> int:
+    """Largest single intermediate buffer in the traced program, bytes.
+
+    Recurses into subjaxprs (scan/while/cond bodies), which is where the
+    ``posterior_var`` chunk buffers live — XLA's ``memory_analysis`` only
+    reports the entry computation and misses them entirely.
+    """
+    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+
+    def walk(jx):
+        best = 0
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                aval = v.aval
+                if getattr(aval, "shape", None) is not None:
+                    nb = int(np.prod(aval.shape, dtype=np.int64)
+                             ) * aval.dtype.itemsize
+                    best = max(best, nb)
+            for p in eqn.params.values():
+                for sub in (p if isinstance(p, (list, tuple)) else (p,)):
+                    inner = getattr(sub, "jaxpr", sub)
+                    if hasattr(inner, "eqns"):
+                        best = max(best, walk(inner))
+        return best
+
+    return walk(jaxpr)
+
+
+def var_peak_bytes(n=512, m=256, D=3, out_rows=None):
+    """Peak-buffer regression for the chunked ``posterior_var`` RHS.
+
+    The serve path used to materialize a dense (D, n, m) right-hand side
+    before the Phi solve — O(n * m) peak bytes per query batch. The chunked
+    form keeps one (D, n, _VAR_CHUNK) column block alive at a time, so the
+    largest intermediate must stay well under the dense footprint (the CI
+    fleet artifact carries the measured ratio).
+    """
+    rows = out_rows if out_rows is not None else []
+    cfg = GPConfig(q=0, solver="pcg", solver_iters=30, backend="jax")
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.random((n, D)) * 10.0)
+    Y = jnp.asarray(np.sin(np.asarray(X)).sum(axis=1))
+    gp = fit(cfg, X, Y, jnp.ones(D), 0.5)
+    Xq = jnp.asarray(rng.random((m, D)) * 10.0)
+    peak = _max_interm_bytes(posterior_var, gp, Xq)
+    itemsize = jnp.zeros((), X.dtype).dtype.itemsize
+    dense = D * n * m * itemsize  # the old phi_dense RHS alone
+    row = {
+        "bench": "fleet_serving_var_mem",
+        "n": n, "m": m, "D": D, "chunk": _VAR_CHUNK,
+        "max_interm_bytes": int(peak),
+        "dense_rhs_bytes": int(dense),
+        "peak_over_dense": peak / dense,
+    }
+    rows.append(row)
+    print(f"fleet_serving,var_mem,n={n},m={m},"
+          f"max_interm_bytes={row['max_interm_bytes']},"
+          f"dense_rhs_bytes={dense},"
+          f"ratio={row['peak_over_dense']:.3f}", flush=True)
+    return rows
 
 
 def _build_engine(T, n0, D, cfg, bounds, rng, window):
@@ -118,6 +181,7 @@ def run(Ts=(1, 8, 64), n0=12, D=2, query_rounds=4, insert_rounds=2,
         ratio = per_query_ms_at[64] / per_query_ms_at[1]
         print(f"fleet_serving,per_tenant_cost_T64_over_T1={ratio:.3f}",
               flush=True)
+    var_peak_bytes(out_rows=rows)
     return rows
 
 

@@ -1,0 +1,105 @@
+"""Per-mutation variance-band maintenance: windowed Woodbury vs full RGF.
+
+``PYTHONPATH=src python -m benchmarks.gband_update [--full]``
+
+Times the ``Gband = (A Phi^T)^{-1}`` cache update that runs inside every
+streaming insert/evict, isolated from the (independently O(n)) mean solve:
+
+  * ``windowed`` — ``core.gband_update.gband_insert``: splice gathers, a
+    fixed-size patch solve (stacked block-CR, ``kernels.cr_jax``) and an
+    O(window^2) Schur system. The patch is capacity-independent, so the
+    solve/Schur work is flat in n; the remaining linear terms (the new-H
+    band matmul and the O(C) splice gathers) are single fully-parallel
+    memory-bound ops with a tiny constant.
+  * ``full`` — ``band_inverse.variance_band``: the sequential RGF
+    block-tridiagonal sweep, O(n) depth — per-mutation wall grows linearly.
+
+Data is sampled at *fixed density* (domain scale grows with n,
+``omega * gap ~ 0.3-0.7``) — the quasi-uniform streaming regime the
+truncated patch contract assumes (see ``gband_update.TRUNC_MARGIN``);
+densely oversampled data should run ``REPRO_GBAND=full`` instead.
+
+The CI gate (ci.yml, BENCH_gband.json) pins the asymmetry: across the n
+grid the full sweep's wall must grow at least ~2x while windowed grows
+well under that, and windowed must be the faster mode at the largest n.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GPConfig, fit
+from repro.core.band_inverse import variance_band
+from repro.core.gband_update import gband_insert
+from repro.streaming.updates import _insert_core
+
+
+def _setup(n, capacity, D, q, seed=0):
+    rng = np.random.default_rng(seed)
+    scale = 0.4 * n  # fixed sampling density (see module docstring)
+    X = jnp.asarray(rng.random((n, D)) * scale)
+    Y = jnp.asarray(np.sin(np.asarray(X)).sum(axis=1)
+                    + 0.1 * rng.standard_normal(n))
+    omega = jnp.asarray(0.8 + rng.random(D))
+    cfg = GPConfig(q=q, solver="pcg", solver_iters=40, backend="jax")
+    gp = fit(cfg, X, Y, omega, 0.5, capacity=capacity)
+    # one real insert supplies post-mutation factors + position for the
+    # cache-update-only timing below
+    x_new = jnp.asarray(rng.random(D) * scale)
+    gp2 = _insert_core(gp, x_new, jnp.asarray(0.1), 8)
+    p = jnp.asarray(
+        [int(np.sum(np.asarray(gp.xs[d])[:n] <= float(x_new[d])))
+         for d in range(D)])
+    return gp, gp2, p
+
+
+def run(ns=(256, 1024, 8192), D=3, q=0, reps=5, out_rows=None):
+    """Rows: per-mutation Gband maintenance seconds, windowed vs full."""
+    rows = out_rows if out_rows is not None else []
+    print("name,mode,n,D,q,per_mutation_s", flush=True)
+    for n in ns:
+        capacity = int(n) + 8
+        gp, gp2, p = _setup(n, capacity, D, q)
+        k_new = jnp.asarray(n + 1)
+
+        windowed = jax.jit(lambda Hb, A, Phi, Gb, pp, kk: gband_insert(
+            Hb, A, Phi, Gb, pp, kk, q, backend=gp.config.backend,
+            alg=gp.config.solve_alg))
+        full = jax.jit(lambda A, Phi: variance_band(
+            A, Phi, backend=gp.config.backend, return_h=True))
+
+        for mode, fn, args in [
+            ("windowed", windowed,
+             (gp.Hband, gp2.ops.A, gp2.ops.Phi, gp.Gband, p, k_new)),
+            ("full", full, (gp2.ops.A, gp2.ops.Phi)),
+        ]:
+            out = fn(*args)  # warm the compile
+            jax.block_until_ready(out)
+            t0 = time.time()
+            for _ in range(reps):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            dt = (time.time() - t0) / reps
+            rows.append({"bench": "gband_update", "name": "gband_update",
+                         "mode": mode, "n": int(n), "D": int(D), "q": int(q),
+                         "per_mutation_s": dt})
+            print(f"gband_update,{mode},{n},{D},{q},{dt:.5f}", flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger grid: n in {1024, 4096, 16384}")
+    args = ap.parse_args()
+    jax.config.update("jax_enable_x64", True)
+    run(ns=(1024, 4096, 16384) if args.full else (256, 1024, 8192),
+        reps=10 if args.full else 5)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import backend_ablation, capacity_streaming, fig5_prediction, \
-        fig6_bayesopt, fleet_serving, fused_sweep, multigrid, \
+        fig6_bayesopt, fleet_serving, fused_sweep, gband_update, multigrid, \
         streaming_updates, table1_complexity
 
     rows: list[dict] = []
@@ -92,6 +92,14 @@ def main() -> None:
                   reps=3 if args.full else 1, out_rows=mg_rows)
     rows += mg_rows
 
+    print("== Windowed Gband maintenance: per-mutation cost vs n ==",
+          flush=True)
+    gband_rows: list[dict] = []
+    gband_update.run(
+        ns=(1024, 4096, 16384) if args.full else (256, 1024, 8192),
+        reps=10 if args.full else 5, out_rows=gband_rows)
+    rows += gband_rows
+
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {len(rows)} rows to {args.out}", flush=True)
@@ -136,6 +144,71 @@ def main() -> None:
     with open(mg_out, "w") as f:
         json.dump(mg_rows, f, indent=1)
     print(f"wrote {len(mg_rows)} rows to {mg_out}", flush=True)
+
+    # windowed Gband maintenance artifact (PR 8 acceptance: per-mutation
+    # windowed cost flat in n while the full RGF sweep grows linearly, and
+    # windowed faster at the largest n)
+    gband_out = os.path.join(os.path.dirname(args.out), "BENCH_gband.json")
+    with open(gband_out, "w") as f:
+        json.dump(gband_rows, f, indent=1)
+    print(f"wrote {len(gband_rows)} rows to {gband_out}", flush=True)
+
+    _append_summary(os.path.join(os.path.dirname(args.out),
+                                 "BENCH_summary.json"), rows, args.full)
+
+
+def _digest(rows: list[dict]) -> dict:
+    """Per-bench median of every numeric field, plus the row count."""
+    import statistics
+
+    by: dict[str, list[dict]] = {}
+    for r in rows:
+        by.setdefault(str(r.get("bench", r.get("name", "?"))), []).append(r)
+    out = {}
+    for bench, rs in sorted(by.items()):
+        keys = sorted({k for r in rs for k in r})
+        med = {}
+        for k in keys:
+            vals = [r[k] for r in rs
+                    if isinstance(r.get(k), (int, float))
+                    and not isinstance(r.get(k), bool)]
+            if vals:
+                med[k] = statistics.median(vals)
+        med["rows"] = len(rs)
+        out[bench] = med
+    return out
+
+
+def _append_summary(path: str, rows: list[dict], full: bool) -> None:
+    """Append this run's digest to the cross-PR perf trajectory.
+
+    ``BENCH_summary.json`` is a list, one entry per benchmark run, keyed by
+    the git revision — committed alongside the code so the perf history
+    stays machine-readable across PRs. Re-runs at the same revision and
+    grid replace their previous entry instead of duplicating it.
+    """
+    import subprocess
+
+    try:
+        rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, check=True,
+                             cwd=os.path.dirname(os.path.abspath(__file__)),
+                             ).stdout.strip()
+    except (OSError, subprocess.CalledProcessError):
+        rev = "unknown"
+    try:
+        with open(path) as f:
+            history = json.load(f)
+        assert isinstance(history, list)
+    except (OSError, ValueError, AssertionError):
+        history = []
+    history = [e for e in history
+               if not (e.get("rev") == rev and e.get("full") == full)]
+    history.append({"rev": rev, "full": full, "benches": _digest(rows)})
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"appended summary for {rev} to {path} "
+          f"({len(history)} entries)", flush=True)
 
 
 if __name__ == "__main__":

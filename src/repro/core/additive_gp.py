@@ -30,7 +30,7 @@ from .banded import Banded, add, logdet, matvec, scale, solve, transpose
 from .kernel_packets import gkp_factors, kp_factors, phi_at, phi_grad_at
 from .stochastic import logdet_taylor, rademacher_rows
 
-__all__ = ["GPConfig", "AdditiveGP", "fit", "with_capacity",
+__all__ = ["GPConfig", "AdditiveGP", "fit", "with_capacity", "mean_caches",
            "posterior_caches", "posterior_mean", "posterior_var",
            "log_likelihood", "mll_gradients", "fit_hyperparams", "TIE_EPS"]
 
@@ -39,6 +39,12 @@ __all__ = ["GPConfig", "AdditiveGP", "fit", "with_capacity",
 # incrementally grown GP matches a from-scratch fit.
 TIE_EPS = 1e-9
 
+# posterior_var solves its per-query Mhat right-hand sides in static-size
+# column chunks so peak temp memory is O(D * n * _VAR_CHUNK) instead of
+# O(D * n * m) for a size-m query batch (benchmarks/fleet_serving.py pins
+# the regression). Chunking is static: the jit specializes per ceil(m/mc).
+_VAR_CHUNK = 32
+
 
 @partial(
     jax.tree_util.register_dataclass,
@@ -46,7 +52,7 @@ TIE_EPS = 1e-9
     meta_fields=("q", "solver", "solver_iters", "pivot", "logdet_order",
                  "logdet_probes", "trace_probes", "power_iters", "logdet_method",
                  "backend", "solve_alg", "fused", "precond", "precond_levels",
-                 "precond_coarsen", "precond_smooth"),
+                 "precond_coarsen", "precond_smooth", "gband"),
 )
 @dataclasses.dataclass(frozen=True)
 class GPConfig:
@@ -74,6 +80,13 @@ class GPConfig:
     precond_levels: int = 2  # hierarchy depth incl. the fine level
     precond_coarsen: int = 8  # subsampling stride per level
     precond_smooth: int = 1  # coarse deflated-Jacobi sweeps per V-cycle
+    # streaming Gband maintenance: "auto" (-> "windowed") | "windowed"
+    # (exact splice + window-Woodbury update of the cached variance band per
+    # insert/evict — O(window) + two narrow banded solves, no O(n) RGF
+    # sweep) | "full" (recompute the band with the RGF sweep per mutation);
+    # also settable process-wide via REPRO_GBAND. Resolved and baked at
+    # fit() like backend/solve_alg (see core/gband_update.py).
+    gband: str = "auto"
     logdet_order: int = 30
     logdet_probes: int = 16
     trace_probes: int = 16
@@ -97,7 +110,7 @@ class GPConfig:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=("X", "Y", "omega", "sigma", "xs", "ops", "B", "Psi", "bY",
-                 "u_sy", "Gband", "n_active", "hier"),
+                 "u_sy", "Gband", "n_active", "hier", "Hband"),
     meta_fields=("config",),
 )
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +141,12 @@ class AdditiveGP:
     # config.precond == "kmg"; None otherwise. Rebuilt (cheap, no solve)
     # whenever the point set changes: fit, insert, evict, with_capacity.
     hier: tuple | None = None
+    # (D, n, 4q+3) canonical band of H = A Phi^T — the carried cache that
+    # lets streaming insert/evict update Gband with the windowed Woodbury
+    # correction (core/gband_update.py) instead of the O(n) RGF sweep.
+    # None only on legacy pytrees (pre-windowed checkpoints); the mutation
+    # path then falls back to the full sweep.
+    Hband: Banded | None = None
 
     @property
     def n(self) -> int:
@@ -209,7 +228,8 @@ def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma,
         fused=(config.fused if config.fused != "auto"
                else _kops.get_fused()),
         precond=_kops.resolve_precond(config.precond, q=config.q,
-                                      n=X.shape[0]))
+                                      n=X.shape[0]),
+        gband=_kops.resolve_gband(config.gband))
     gp = _fit_impl(config, X, Y, omega, sigma)
     if capacity is not None:
         gp = with_capacity(gp, capacity)
@@ -271,6 +291,8 @@ def _with_capacity_impl(gp: AdditiveGP, capacity: int) -> AdditiveGP:
         bY=_pad_rows(gp.bY, capacity, axis=1),
         u_sy=_pad_rows(gp.u_sy, capacity, axis=1),
         Gband=_pad_band_rows(gp.Gband, capacity, na),
+        Hband=(None if gp.Hband is None
+               else _pad_band_rows(gp.Hband, capacity, na)),
         config=gp.config, n_active=na, hier=hier_p)
 
 
@@ -293,15 +315,18 @@ def with_capacity(gp: AdditiveGP, capacity: int) -> AdditiveGP:
     return _with_capacity_impl(gp, capacity)
 
 
-def posterior_caches(config: GPConfig, ops: DimOps, Y: jax.Array,
-                     x0: jax.Array | None = None, iters: int | None = None,
-                     hier=None):
-    """(u_sy, bY, Gband) posterior caches from assembled banded factors.
+def mean_caches(config: GPConfig, ops: DimOps, Y: jax.Array,
+                x0: jax.Array | None = None, iters: int | None = None,
+                hier=None):
+    """(u_sy, bY) solve-dependent posterior-mean caches.
 
-    Shared by ``fit`` (cold start) and ``repro.streaming`` inserts, which pass
-    ``x0`` — the pre-insert ``Mhat^{-1} S Y`` spliced at the new point — to
-    warm-start the backfitting solve and ``iters`` to cap it. ``hier`` is
-    the KMG coarse hierarchy (required when config.precond == "kmg").
+    Shared by ``fit`` (cold start) and ``repro.streaming`` mutations, which
+    pass ``x0`` — the pre-mutation ``Mhat^{-1} S Y`` spliced at the changed
+    point — to warm-start the backfitting solve and ``iters`` to cap it.
+    ``hier`` is the KMG coarse hierarchy (required when config.precond ==
+    "kmg"). The variance band is *not* recomputed here: the streaming path
+    maintains it with the windowed update (``core/gband_update.py``) and
+    only the cold-start ``posterior_caches`` runs the full RGF sweep.
     """
     cfg = config.solve_cfg()
     if iters is not None:
@@ -313,8 +338,22 @@ def posterior_caches(config: GPConfig, ops: DimOps, Y: jax.Array,
     bY = solve(transpose(ops.Phi), ops.to_sorted(u_sy) / ops.sigma2,
                pivot=config.pivot, backend=config.backend,
                alg=config.solve_alg)
-    Gband = variance_band(ops.A, ops.Phi, backend=config.backend)
-    return u_sy, bY, Gband
+    return u_sy, bY
+
+
+def posterior_caches(config: GPConfig, ops: DimOps, Y: jax.Array,
+                     x0: jax.Array | None = None, iters: int | None = None,
+                     hier=None):
+    """(u_sy, bY, Gband, Hband) posterior caches from assembled factors.
+
+    The cold-start path: :func:`mean_caches` plus the full RGF variance-band
+    sweep (which also yields the ``H = A Phi^T`` band carried on the GP for
+    the windowed streaming updates).
+    """
+    u_sy, bY = mean_caches(config, ops, Y, x0=x0, iters=iters, hier=hier)
+    Gband, Hband = variance_band(ops.A, ops.Phi, backend=config.backend,
+                                 return_h=True)
+    return u_sy, bY, Gband, Hband
 
 
 @partial(jax.jit, static_argnums=(0,))
@@ -338,10 +377,10 @@ def _fit_impl(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array,
     ops = DimOps(A=A, Phi=Phi, SAPhi=SAPhi, sort_idx=sort_idx, rank_idx=rank_idx,
                  sigma2=sigma**2)
     hier = build_gp_hier(config, omega, sigma, X, xs, ops)
-    u_sy, bY, Gband = posterior_caches(config, ops, Y, hier=hier)
+    u_sy, bY, Gband, Hband = posterior_caches(config, ops, Y, hier=hier)
     return AdditiveGP(X=X, Y=Y, omega=omega, sigma=sigma, xs=xs, ops=ops, B=B,
-                      Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband, config=config,
-                      hier=hier)
+                      Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband, Hband=Hband,
+                      config=config, hier=hier)
 
 
 # ---------------------------------------------------------------------------
@@ -389,24 +428,55 @@ def posterior_var(gp: AdditiveGP, Xq: jax.Array) -> jax.Array:
     ]  # (D, m, W, W)
     term2 = jnp.einsum("dma,dmab,dmb->m", vals, g_entries, vals)
 
-    # term 3: w^T Mhat^{-1} w with w_d = P^T Phi_d^{-1} phi_d
-    phi_dense = jnp.zeros((D, n, m), Xq.dtype)
-    d_idx = jnp.arange(D)[:, None, None]
-    m_idx = jnp.arange(m)[None, :, None]
-    phi_dense = phi_dense.at[
-        jnp.broadcast_to(d_idx, rows.shape),
-        rows,
-        jnp.broadcast_to(m_idx, rows.shape),
-    ].add(vals)
-    w_sorted = solve(gp.ops.Phi, phi_dense, pivot=gp.config.pivot,
-                     backend=gp.config.backend,
-                     alg=gp.config.solve_alg)  # (D, n, m)
-    w = gp.ops.from_sorted(w_sorted)
-    z = solve_mhat(gp.ops, w, gp.config.solve_cfg(), hier=gp.hier)
-    term3 = jnp.sum(w * z, axis=(0, 1))
+    # term 3: w^T Mhat^{-1} w with w_d = P^T Phi_d^{-1} phi_d. The RHS is
+    # window-sparse ((D, m, W) nonzeros), but the Phi / Mhat solves need a
+    # dense column per query — materializing all m at once costs O(D n m)
+    # peak bytes in the hot serve path. Batch the query axis into
+    # static-size column chunks instead (lax.map keeps ONE compiled chunk
+    # body alive at a time), so peak temp memory is O(D n mc) at identical
+    # per-column arithmetic (each column's solve is independent).
+    mc = min(m, _VAR_CHUNK)
+    nchunk = -(-m // mc)
+    pad = nchunk * mc - m
+    rows_c = jnp.pad(rows, ((0, 0), (0, pad), (0, 0))).transpose(1, 0, 2)
+    vals_c = jnp.pad(vals, ((0, 0), (0, pad), (0, 0))).transpose(1, 0, 2)
+    rows_c = rows_c.reshape(nchunk, mc, D, W)
+    vals_c = vals_c.reshape(nchunk, mc, D, W)
+    d_idx = jnp.arange(D)[None, :, None]
+    m_idx = jnp.arange(mc)[:, None, None]
 
-    prior = jnp.asarray(float(D), Xq.dtype)  # sum_d k_d(x*, x*) = D (unit scale)
-    return prior - term2 + term3
+    def _term3_chunk(args):
+        rc, vc = args  # (mc, D, W)
+        phi_cols = jnp.zeros((D, n, mc), Xq.dtype)
+        phi_cols = phi_cols.at[
+            jnp.broadcast_to(d_idx, rc.shape),
+            rc,
+            jnp.broadcast_to(m_idx, rc.shape),
+        ].add(vc)
+        w_sorted = solve(gp.ops.Phi, phi_cols, pivot=gp.config.pivot,
+                         backend=gp.config.backend,
+                         alg=gp.config.solve_alg)  # (D, n, mc)
+        w = gp.ops.from_sorted(w_sorted)
+        z = solve_mhat(gp.ops, w, gp.config.solve_cfg(), hier=gp.hier)
+        return jnp.sum(w * z, axis=(0, 1))
+
+    term3 = jax.lax.map(_term3_chunk, (rows_c, vals_c)).reshape(-1)[:m]
+
+    return prior_var(gp, Xq.dtype) - term2 + term3
+
+
+def prior_var(gp: AdditiveGP, dtype) -> jax.Array:
+    """Prior variance sum_d k_d(x*, x*), derived from the kernel itself
+    rather than hardcoding D. matern() is unit-amplitude by construction
+    (matern._poly_coeffs fixes the constant coefficient to 1), so each
+    term is exactly 1.0 and the sum folds to float(D) bit-for-bit today —
+    but if an amplitude hyperparameter is ever added, this stays correct
+    where a literal D would go silently wrong. Stationary, so independent
+    of the query point."""
+    zero = jnp.zeros((), dtype)
+    kdiag = jax.vmap(lambda om: mk.matern(gp.config.q, om, zero, zero))(
+        gp.omega)
+    return jnp.sum(kdiag).astype(dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -203,9 +203,19 @@ def inverse_band(H: Banded, hw: int) -> Banded:
                   n_active)
 
 
-def variance_band(A: Banded, Phi: Banded,
-                  backend: str | None = None) -> Banded:
-    """Algorithm 5 entry point: the 2q+1 band of (A Phi^T)^{-1} = Phi^{-T} A^{-1}."""
-    H = band_band_matmul(A, transpose(Phi), backend=backend)
+def variance_band(A: Banded, Phi: Banded, backend: str | None = None,
+                  *, return_h: bool = False):
+    """Algorithm 5 entry point: the 2q+1 band of (A Phi^T)^{-1} = Phi^{-T} A^{-1}.
+
+    ``return_h=True`` additionally returns the canonical band of
+    ``H = A Phi^T`` itself — the cache carried on ``AdditiveGP.Hband`` that
+    lets streaming mutations update the inverse band with the windowed
+    Woodbury correction (``core/gband_update.py``) instead of re-running
+    this sweep.
+    """
+    H = mask_band(band_band_matmul(A, transpose(Phi), backend=backend))
     hw = A.lo + Phi.lo  # 2q+1
-    return inverse_band(mask_band(H), hw)
+    G = inverse_band(H, hw)
+    if return_h:
+        return G, H.canonical()
+    return G

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..masking import mask_rows, tree_sum
-from .additive_gp import AdditiveGP, GPConfig, fit, fit_hyperparams, _phi_windows
+from .additive_gp import (AdditiveGP, GPConfig, fit, fit_hyperparams,
+                          _phi_windows, prior_var)
 from .backfitting import solve_mhat
 from .banded import Banded, solve, transpose
 from .kernel_packets import phi_grad_at
@@ -111,7 +112,7 @@ def _acq_core(gp: AdditiveGP, Xq: jax.Array, beta, best_y, kind: str):
     # collapses bitwise, so the padded acquisition variance equals the
     # unpadded one bit-for-bit at any capacity tier (and under any vmap)
     term3 = tree_sum(tree_sum(w * z, axis=1), axis=0)
-    var = jnp.maximum(jnp.asarray(float(D), Xq.dtype) - term2 + term3, 1e-12)
+    var = jnp.maximum(prior_var(gp, Xq.dtype) - term2 + term3, 1e-12)
 
     # variance gradient: dvar/dx_d = -2 dphi^T (G phi) + 2 dphi^T Phi^{-T} z
     y_s = solve(transpose(gp.ops.Phi), gp.ops.to_sorted(z),
@@ -344,7 +345,7 @@ def acq_local(gp: AdditiveGP, cache: LocalAcqCache, xq: jax.Array, beta, best_y,
         jnp.arange(D)[None, None, :, None], rows[None, None, :, :],
     ]
     term3 = jnp.einsum("da,daeb,eb->", vals, mwin, vals)
-    var = jnp.maximum(jnp.asarray(float(D), xq.dtype) - term2 + term3, 1e-12)
+    var = jnp.maximum(prior_var(gp, xq.dtype) - term2 + term3, 1e-12)
     dvar = -2.0 * jnp.einsum("da,da->d", dvals, g_phi) + 2.0 * jnp.einsum(
         "da,daeb,eb->d", dvals, mwin, vals
     )

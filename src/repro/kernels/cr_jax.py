@@ -1,0 +1,153 @@
+"""Pure-JAX compacted block cyclic-reduction banded solve.
+
+The pallas block-CR kernel (``block_cr.py``) needs a compiled pallas
+backend; on hosts where pallas runs in interpret mode (CPU), the "jax"
+backend's scan-LU is the only solve — O(n) *sequential* steps, which makes
+any narrow multi-RHS solve (the windowed Gband maintenance of
+``core/gband_update.py``) scale like the full RGF sweep it replaces.
+
+This module is the log-depth alternative for the ``lo == hi = w`` systems:
+the same even/odd block cyclic reduction as the pallas kernel, but
+
+  * **compacted** — each level keeps only the surviving even block rows,
+    so array extents halve per level and the total work is a geometric
+    series ~ 2x the first level (the uncompacted kernel re-masks full-size
+    arrays every level, which is the right shape for a VMEM-resident
+    pallas grid but wasteful as dispatched XLA ops);
+  * **batched** — arbitrary leading batch dims ride every operation, so the
+    (D,) factor batch and a vmapped (T,) fleet axis need no grid/loop;
+  * **batch-invariant** — block products use the unrolled
+    fixed-association loop (``_bmm``, the ``band_inverse._mm`` idiom) and
+    the w x w block solves reuse ``block_cr._small_solve`` (masked
+    elementwise Gaussian elimination), so results are bitwise identical at
+    every batch width — the fleet bit-identity contract of the mutation
+    path holds through these solves.
+
+Depth is ceil(log2(n/w)) vectorized levels each way (reduction + back
+substitution) instead of n scan steps; per-mutation wall at serving-size
+capacities is dispatch-bound and near-flat in n.
+
+Pivoting (``pivot=True``) is partial pivoting *inside* each w x w block —
+the same robustness class as the RGF block sweep and the pivoted pallas
+block-CR kernel; the block diagonal must stay nonsingular, which the
+capacity-padded canonical KP systems guarantee (identity pads, Gram-based
+active blocks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .block_cr import _small_solve
+
+__all__ = ["block_cr_solve_jax"]
+
+
+def _bmm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(..., m, k) @ (..., k, p) with a fixed-association unrolled k-loop."""
+    k = a.shape[-1]
+    out = a[..., :, 0:1] * b[..., 0:1, :]
+    for t in range(1, k):
+        out = out + a[..., :, t : t + 1] * b[..., t : t + 1, :]
+    return out
+
+
+def _band_to_blocks(data: jax.Array, w: int, nb: int):
+    """(..., nb*w, 2w+1) row-aligned band -> block-tridiag (A, B, C) triples.
+
+    Block row I, local row r is band row i = I*w + r; its column c of block
+    I+d sits at band offset d*w + c - r. Static gathers (w compile-time).
+    """
+    blk = data.reshape(data.shape[:-2] + (nb, w, 2 * w + 1))
+    zero = jnp.zeros(data.shape[:-2] + (nb,), data.dtype)
+
+    def tri(off):
+        rows = []
+        for r in range(w):
+            cols = []
+            for c in range(w):
+                j = off + c - r
+                cols.append(blk[..., :, r, j] if 0 <= j <= 2 * w else zero)
+            rows.append(jnp.stack(cols, axis=-1))
+        return jnp.stack(rows, axis=-2)  # (..., nb, w, w)
+
+    return tri(0), tri(w), tri(2 * w)
+
+
+def _inv(M: jax.Array, pivot: bool) -> jax.Array:
+    eye = jnp.broadcast_to(jnp.eye(M.shape[-1], dtype=M.dtype), M.shape)
+    X, _ = _small_solve(M, eye, pivot=pivot)
+    return X
+
+
+def _solve(M: jax.Array, R: jax.Array, pivot: bool) -> jax.Array:
+    X, _ = _small_solve(M, R, pivot=pivot)
+    return X
+
+
+def block_cr_solve_jax(band: jax.Array, rhs: jax.Array, w: int,
+                       pivot: bool = True) -> jax.Array:
+    """Solve M x = rhs for a row-aligned band with ``lo = hi = w``.
+
+    ``band``: (..., n, 2w+1); ``rhs``: (..., n, B). Returns (..., n, B).
+    Exact direct solve (no truncation); log2-depth vectorized levels.
+    """
+    n = band.shape[-2]
+    B = rhs.shape[-1]
+    nb = max(1, -(-n // w))
+    npad = nb * w
+    dtype = jnp.result_type(band, rhs)
+    batch = band.shape[:-2]
+    # decoupled identity pad rows; zero RHS tail
+    band_p = jnp.zeros(batch + (npad, 2 * w + 1), dtype)
+    band_p = band_p.at[..., :, w].set(1.0).at[..., :n, :].set(band)
+    rhs_p = jnp.zeros(batch + (npad, B), dtype).at[..., :n, :].set(rhs)
+
+    A, Bb, C = _band_to_blocks(band_p, w, nb)
+    R = rhs_p.reshape(batch + (nb, w, B))
+
+    ident1 = jnp.broadcast_to(jnp.eye(w, dtype=dtype), batch + (1, w, w))
+    zeroA = jnp.zeros(batch + (1, w, w), dtype)
+    zeroR = jnp.zeros(batch + (1, w, B), dtype)
+
+    # --- reduction: compact to the even block rows, level by level ---------
+    levels = []  # per-level frozen odd data for back substitution
+    while nb > 1:
+        Ae, Be, Ce, Re = (A[..., 0::2, :, :], Bb[..., 0::2, :, :],
+                          C[..., 0::2, :, :], R[..., 0::2, :, :])
+        Ao, Bo, Co, Ro = (A[..., 1::2, :, :], Bb[..., 1::2, :, :],
+                          C[..., 1::2, :, :], R[..., 1::2, :, :])
+        ne = Ae.shape[-3]
+        levels.append((Ao, Bo, Co, Ro, nb))
+        # odd neighbours of even row m: odd m-1 (below, padded index m) and
+        # odd m (above, padded index m+1); identity/zero pads make the
+        # missing boundary neighbours no-ops (the corresponding A_e[0] /
+        # C_e[ne-1] couplings are zero anyway)
+        Bi = jnp.concatenate([ident1, _inv(Bo, pivot), ident1], axis=-3)
+        Ap = jnp.concatenate([zeroA, Ao, zeroA], axis=-3)
+        Cp = jnp.concatenate([zeroA, Co, zeroA], axis=-3)
+        Rp = jnp.concatenate([zeroR, Ro, zeroR], axis=-3)
+        lo = slice(0, ne)
+        up = slice(1, ne + 1)
+        alpha = -_bmm(Ae, Bi[..., lo, :, :])
+        beta = -_bmm(Ce, Bi[..., up, :, :])
+        Bb = Be + _bmm(alpha, Cp[..., lo, :, :]) + _bmm(beta, Ap[..., up, :, :])
+        R = Re + _bmm(alpha, Rp[..., lo, :, :]) + _bmm(beta, Rp[..., up, :, :])
+        A = _bmm(alpha, Ap[..., lo, :, :])
+        C = _bmm(beta, Cp[..., up, :, :])
+        nb = ne
+
+    x = _solve(Bb, R, pivot)  # (..., 1, w, B)
+
+    # --- back substitution: replay the levels in reverse -------------------
+    for Ao, Bo, Co, Ro, nb in reversed(levels):
+        no = Ao.shape[-3]
+        ne = nb - no
+        # even neighbours of odd row m: even m (below) and even m+1 (above)
+        x_up = jnp.concatenate([x, zeroR], axis=-3)[..., 1 : no + 1, :, :]
+        x_lo = x[..., :no, :, :]
+        xo = _solve(Bo, Ro - _bmm(Ao, x_lo) - _bmm(Co, x_up), pivot)
+        full = jnp.zeros(x.shape[:-3] + (nb, w, B), dtype)
+        x = full.at[..., 0::2, :, :].set(x).at[..., 1::2, :, :].set(xo)
+
+    return x.reshape(batch + (npad, B))[..., :n, :]

@@ -86,8 +86,9 @@ __all__ = [
     "get_backend", "set_backend", "use_backend", "resolve_backend",
     "get_solve_alg", "set_solve_alg", "use_solve_alg", "resolve_solve_alg",
     "get_fused", "set_fused", "use_fused", "resolve_fused", "get_precond",
-    "set_precond", "use_precond", "resolve_precond", "banded_matvec",
-    "banded_solve", "banded_logdet", "band_band_matmul", "kp_gram",
+    "set_precond", "use_precond", "resolve_precond", "get_gband", "set_gband",
+    "use_gband", "resolve_gband", "banded_matvec", "banded_solve",
+    "banded_logdet", "band_band_matmul", "kp_gram", "GBAND_MODES",
 ]
 
 BACKENDS = ("auto", "jax", "pallas")
@@ -102,6 +103,9 @@ ENV_FUSED = "REPRO_FUSED"
 PRECOND_MODES = ("auto", "none", "kmg")
 ENV_PRECOND = "REPRO_PRECOND"
 
+GBAND_MODES = ("auto", "windowed", "full")
+ENV_GBAND = "REPRO_GBAND"
+
 # "auto" precond gate: enable the kernel-multigrid V-cycle at q == 0 once
 # the system is large enough that the coarse correction pays for its extra
 # matvecs (~2-3x per iteration vs a 2-4x iteration-count cut, so the
@@ -115,6 +119,7 @@ _backend = os.environ.get(ENV_VAR, "auto")
 _solve_alg = os.environ.get(ENV_SOLVE_ALG, "auto")
 _fused = os.environ.get(ENV_FUSED, "auto")
 _precond = os.environ.get(ENV_PRECOND, "auto")
+_gband = os.environ.get(ENV_GBAND, "auto")
 
 
 def on_tpu() -> bool:
@@ -357,6 +362,62 @@ def resolve_precond(precond: str | None, *, q: int, n: int) -> str:
     if p == "auto":
         return "kmg" if q == 0 and n >= KMG_AUTO_MIN_N else "none"
     return p
+
+
+def get_gband() -> str:
+    """Current process-wide Gband maintenance mode (may be "auto")."""
+    return _gband
+
+
+def set_gband(name: str) -> None:
+    """Set the process-wide Gband mode ("auto" | "windowed" | "full")."""
+    global _gband
+    if name not in GBAND_MODES:
+        raise ValueError(
+            f"unknown gband mode {name!r}; expected one of {GBAND_MODES}")
+    _gband = name
+
+
+@contextlib.contextmanager
+def use_gband(name: str):
+    """Temporarily override the Gband maintenance mode (trace-time scope)."""
+    prev = _gband
+    set_gband(name)
+    try:
+        yield
+    finally:
+        set_gband(prev)
+
+
+def resolve_gband(gband: str | None = None) -> str:
+    """Resolve the streaming Gband maintenance mode to "windowed" | "full".
+
+    "windowed" keeps the cached variance band ``Gband = (A Phi^T)^{-1}``
+    current across insert/evict with the exact splice + Woodbury window
+    correction in ``core/gband_update.py`` — O(window) work plus two
+    narrow banded solves per mutation instead of the O(n) RGF sweep.
+    "full" recomputes the band with the RGF sweep every mutation (the
+    pre-windowed behaviour; also the numerical escape hatch for extremely
+    long mutation streams, where windowed roundoff accumulates).
+
+    An explicit "windowed"/"full" wins; "auto" (the GPConfig default) and
+    None defer to the process default (``set_gband`` / ``REPRO_GBAND``); a
+    final "auto" means "windowed". ``fit()`` calls this once and bakes the
+    result into the GP config, so jit caches key on the resolved mode.
+    """
+    g = gband if gband is not None else _gband
+    if g not in GBAND_MODES:
+        raise ValueError(
+            f"unknown gband mode {g!r}; expected one of {GBAND_MODES}")
+    if g == "auto":
+        g = _gband
+        if g not in GBAND_MODES:
+            raise ValueError(
+                f"unknown gband mode {g!r} (from {ENV_GBAND} or set_gband); "
+                f"expected one of {GBAND_MODES}")
+    if g == "auto":
+        return "windowed"
+    return g
 
 
 def _interpret() -> bool:

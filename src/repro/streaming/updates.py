@@ -57,9 +57,11 @@ import numpy as np
 
 from ..core import matern as mk
 from ..core.additive_gp import (AdditiveGP, TIE_EPS, build_gp_hier,
-                                posterior_caches, with_capacity)
+                                mean_caches, with_capacity)
 from ..core.backfitting import DimOps, solve_mhat
+from ..core.band_inverse import variance_band
 from ..core.banded import Banded, add, scale, solve, transpose
+from ..core.gband_update import gband_evict, gband_insert
 from ..core.bayesopt import LocalAcqCache
 from ..core.fleet import GPFleet, select_tenants
 from ..core.kernel_packets import gram_band_rows, kp_coefficient_rows
@@ -167,6 +169,26 @@ def _insert_dim(q: int, k, omega_d, xs_d, sort_d, rank_d, a_d, phi_d, b_d,
     return xs_new, sort_new, rank_new, a_new, phi_new, b_new, psi_new, p
 
 
+def _mutated_gband(gp: AdditiveGP, ops: DimOps, p: jax.Array, k1: jax.Array,
+                   evicting: bool):
+    """Post-mutation (Gband, Hband) caches.
+
+    With a baked ``gband="windowed"`` config and a populated ``Hband`` cache
+    this runs the O(window) Woodbury correction of ``core/gband_update.py``;
+    otherwise (``gband="full"``, or a legacy checkpoint without the cache)
+    it falls back to the full O(capacity) RGF sweep. The branch is resolved
+    at trace time — both sides are the same pytree shape, so the compiled
+    program contains only the selected path.
+    """
+    config = gp.config
+    if config.gband != "full" and gp.Hband is not None:
+        fn = gband_evict if evicting else gband_insert
+        return fn(gp.Hband, ops.A, ops.Phi, gp.Gband, p, k1, config.q,
+                  backend=config.backend, alg=config.solve_alg)
+    return variance_band(ops.A, ops.Phi, backend=config.backend,
+                         return_h=True)
+
+
 def _insert_core(gp: AdditiveGP, x_new: jax.Array, y_new: jax.Array,
                  iters: int) -> AdditiveGP:
     """Traced in-place insert body — shared by the jitted single-GP step and
@@ -197,13 +219,17 @@ def _insert_core(gp: AdditiveGP, x_new: jax.Array, y_new: jax.Array,
     us = gp.ops.to_sorted(gp.u_sy)  # (D, C), canonical zero tail
     est = jnp.take_along_axis(us, jnp.clip(p - 1, 0, C - 1)[:, None], axis=1)
     x0 = mask_rows(gp.u_sy, k, axis=1).at[jnp.arange(gp.D), k].set(est[:, 0])
-    # coarse levels are O(q)-cheap strided re-assemblies; rebuilt per mutation
-    hier = build_gp_hier(config, gp.omega, gp.sigma, X, xs, ops)
-    u_sy, bY, Gband = posterior_caches(config, ops, Y, x0=x0, iters=iters,
-                                       hier=hier)
+    # coarse levels are O(q)-cheap strided re-assemblies; rebuilt per
+    # mutation — but only when the baked config can consume them (a
+    # non-"kmg" precond never reads the hierarchy, so rebuilding it per
+    # mutation would be pure wasted work)
+    hier = (build_gp_hier(config, gp.omega, gp.sigma, X, xs, ops)
+            if config.precond == "kmg" else None)
+    u_sy, bY = mean_caches(config, ops, Y, x0=x0, iters=iters, hier=hier)
+    Gband, Hband = _mutated_gband(gp, ops, p, k1, evicting=False)
     return AdditiveGP(X=X, Y=Y, omega=gp.omega, sigma=gp.sigma, xs=xs,
                       ops=ops, B=B, Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband,
-                      config=config, n_active=k1, hier=hier)
+                      Hband=Hband, config=config, n_active=k1, hier=hier)
 
 
 def _lane1(core_call):
@@ -340,12 +366,13 @@ def _evict_core(gp: AdditiveGP, iters: int) -> AdditiveGP:
     Y = mask_rows(_delete_vec(gp.Y, 0), k1, axis=0)
     # warm start: the surviving entries of the pre-evict solution
     x0 = mask_rows(jax.vmap(lambda u: _delete_vec(u, 0))(gp.u_sy), k1, axis=1)
-    hier = build_gp_hier(config, gp.omega, gp.sigma, X, xs, ops)
-    u_sy, bY, Gband = posterior_caches(config, ops, Y, x0=x0, iters=iters,
-                                       hier=hier)
+    hier = (build_gp_hier(config, gp.omega, gp.sigma, X, xs, ops)
+            if config.precond == "kmg" else None)
+    u_sy, bY = mean_caches(config, ops, Y, x0=x0, iters=iters, hier=hier)
+    Gband, Hband = _mutated_gband(gp, ops, p, k1, evicting=True)
     return AdditiveGP(X=X, Y=Y, omega=gp.omega, sigma=gp.sigma, xs=xs,
                       ops=ops, B=B, Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband,
-                      config=config, n_active=k1, hier=hier)
+                      Hband=Hband, config=config, n_active=k1, hier=hier)
 
 
 @partial(jax.jit, static_argnums=(1,))

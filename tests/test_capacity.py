@@ -65,7 +65,8 @@ def _poison_tails(gp):
     return dataclasses.replace(
         gp, X=prow(gp.X, 0), Y=prow(gp.Y, 0), xs=prow(gp.xs, 1), ops=ops_p,
         B=pband(gp.B), Psi=pband(gp.Psi), bY=prow(gp.bY, 1),
-        u_sy=prow(gp.u_sy, 1), Gband=pband(gp.Gband))
+        u_sy=prow(gp.u_sy, 1), Gband=pband(gp.Gband),
+        Hband=(None if gp.Hband is None else pband(gp.Hband)))
 
 
 # ---------------------------------------------------------------------------

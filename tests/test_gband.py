@@ -1,0 +1,264 @@
+"""Windowed Gband maintenance (``core/gband_update.py``).
+
+The cached variance band ``Gband = (A Phi^T)^{-1}`` is updated on
+insert/evict by a windowed Woodbury correction instead of the O(capacity)
+RGF sweep. These tests pin:
+
+  * exactness: windowed result vs. a full ``variance_band`` recompute on
+    the post-mutation factors, <= 1e-10 relative on both backends (the
+    test problems are deliberately well-conditioned — ``omega * spacing``
+    of order one — so the bound measures the algorithm, not ``cond(H)``
+    amplification);
+  * round-trips: insert -> evict -> insert into the freed slot tracks a
+    from-scratch fit through repeated windowed updates;
+  * the mutation path never calls the RGF sweep when windowed is active
+    (monkeypatched to explode), and ``gband="full"`` /
+    ``REPRO_GBAND=full`` restore it;
+  * fleet lanes stay bit-identical to the single-GP path (the update is
+    built from batch-invariant primitives);
+  * NaN-poisoned pad tails (including the new ``Hband`` cache) cannot
+    leak into active results;
+  * the hierarchy rebuild is skipped when the baked precond can never
+    consume it, without adding retraces (issue S2).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GPConfig, fit
+from repro.core.band_inverse import variance_band
+from repro.core.banded import Banded
+from repro.core.fleet import fleet_fit
+from repro.kernels import ops as kops
+from repro.streaming import insert
+from repro.streaming import updates as updates_mod
+from repro.streaming.updates import evict, fleet_evict, fleet_insert
+
+CFG = GPConfig(q=0, solver="pcg", solver_iters=60, backend="jax")
+
+
+def _data(n, D=2, seed=0, scale=5.0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.random((n, D)) * scale)
+    Y = jnp.asarray(np.sin(np.asarray(X)).sum(1) + 0.1 * rng.standard_normal(n))
+    omega = jnp.asarray(0.8 + rng.random(D))
+    return X, Y, omega
+
+
+def _rel_err(got: Banded, want: Banded, k: int) -> float:
+    a = got.canonical().data[..., :k, :]
+    b = want.canonical().data[..., :k, :]
+    return float(jnp.max(jnp.abs(a - b)) / jnp.max(jnp.abs(b)))
+
+
+def _assert_windowed_matches_rgf(gp, tol=1e-10, hband_exact=True):
+    assert gp.config.gband == "windowed"
+    assert gp.Hband is not None
+    k = gp.num_points()
+    Gref, Href = variance_band(gp.ops.A, gp.ops.Phi,
+                               backend=gp.config.backend, return_h=True)
+    assert _rel_err(gp.Gband, Gref, k) < tol
+    # Hband is recomputed from the factors each mutation. At q=0 the band
+    # matmul is FMA-free and bit-equal across program boundaries; the wider
+    # q>=1 matmul can fuse differently inside the mutation jit than in the
+    # eager recompute (XLA FMA formation), so only ~ulp agreement is
+    # guaranteed there — within-program determinism is pinned separately by
+    # the fleet bit-identity test.
+    if hband_exact:
+        np.testing.assert_array_equal(
+            np.asarray(gp.Hband.canonical().data[:, :k]),
+            np.asarray(Href.canonical().data[:, :k]))
+    else:
+        assert _rel_err(gp.Hband, Href, k) < 1e-13
+
+
+# ---------------------------------------------------------------------------
+# exactness vs. the full RGF recompute
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("q", [0, pytest.param(1, marks=pytest.mark.slow)])
+def test_windowed_matches_rgf_jax(q):
+    cfg = dataclasses.replace(CFG, q=q)
+    X, Y, omega = _data(24, seed=1)
+    gp = fit(cfg, X, Y, omega, 0.3, capacity=32)
+    assert gp.config.gband == "windowed"  # "auto" resolves to windowed
+    rng = np.random.default_rng(2)
+    for _ in range(3):
+        gp = insert(gp, jnp.asarray(rng.random(2) * 5),
+                    jnp.asarray(rng.standard_normal()))
+        _assert_windowed_matches_rgf(gp, hband_exact=(q == 0))
+    for _ in range(2):
+        gp = evict(gp)
+        _assert_windowed_matches_rgf(gp, hband_exact=(q == 0))
+
+
+def test_windowed_matches_rgf_pallas_interpret():
+    cfg = dataclasses.replace(CFG, backend="pallas", solver_iters=20)
+    X, Y, omega = _data(10, seed=2)
+    gp = fit(cfg, X, Y, omega, 1.0, capacity=14)
+    rng = np.random.default_rng(3)
+    gp = insert(gp, jnp.asarray(rng.random(2) * 5),
+                jnp.asarray(rng.standard_normal()), iters=20)
+    _assert_windowed_matches_rgf(gp)
+    gp = evict(gp, iters=20)
+    _assert_windowed_matches_rgf(gp)
+
+
+def test_insert_evict_insert_roundtrip_tracks_fresh_fit():
+    """Re-using the freed slot keeps the windowed band on the fresh-fit
+    trajectory: the factors are bitwise those of a from-scratch fit, so the
+    only divergence budget is the Woodbury roundoff per mutation."""
+    X, Y, omega = _data(21, seed=4)
+    gp = fit(CFG, X[:20], Y[:20], omega, 0.3, capacity=24)
+    gp = insert(gp, X[20], Y[20], iters=60)  # slot 20
+    gp = evict(gp)                           # frees original slot 0
+    rng = np.random.default_rng(5)
+    x_new = jnp.asarray(rng.random(2) * 5)
+    y_new = jnp.asarray(rng.standard_normal())
+    gp = insert(gp, x_new, y_new, iters=60)  # re-uses the freed slot
+    assert gp.num_points() == 21
+    ref = fit(CFG, jnp.concatenate([X[1:], x_new[None]]),
+              jnp.concatenate([Y[1:], y_new[None]]), omega, 0.3, capacity=24)
+    # same point set => same sorted factors; bands agree through 3 windowed
+    # updates to well below the acceptance bar
+    assert _rel_err(gp.Gband, ref.Gband, 21) < 1e-10
+    np.testing.assert_array_equal(
+        np.asarray(gp.Hband.canonical().data[:, :21]),
+        np.asarray(ref.Hband.canonical().data[:, :21]))
+
+
+def test_patch_truncation_matches_rgf_at_large_capacity():
+    """Capacity well beyond the solve patch, in the quasi-uniform regime
+    (``omega * gap >~ 0.3``): the dropped out-of-patch corrections sit at
+    the state-transition decay floor, so the truncated update still meets
+    the 1e-10 contract against the full recompute."""
+    from repro.core.gband_update import patch_size
+
+    n = 400
+    scale = 0.4 * n  # fixed sampling density, domain grows with n
+    X, Y, omega = _data(n, seed=12, scale=scale)
+    gp = fit(dataclasses.replace(CFG, solver_iters=40), X, Y, omega, 0.3,
+             capacity=n + 8)
+    assert patch_size(gp.config.q, n + 8) < n  # truncation is active
+    rng = np.random.default_rng(13)
+    gp = insert(gp, jnp.asarray(rng.random(2) * scale), jnp.asarray(0.5),
+                iters=40)
+    _assert_windowed_matches_rgf(gp)
+    gp = evict(gp, iters=40)
+    _assert_windowed_matches_rgf(gp)
+
+
+# ---------------------------------------------------------------------------
+# the full sweep never runs on the windowed mutation path
+# ---------------------------------------------------------------------------
+
+
+def test_windowed_mutations_skip_rgf_sweep(monkeypatch):
+    X, Y, omega = _data(13, seed=6)
+    gp = fit(CFG, X, Y, omega, 0.3, capacity=17)  # unique shape: fresh trace
+
+    def _boom(*a, **k):
+        raise AssertionError("full RGF sweep reached on windowed path")
+
+    monkeypatch.setattr(updates_mod, "variance_band", _boom)
+    gp = insert(gp, jnp.asarray([1.0, 2.0]), jnp.asarray(0.5))
+    gp = evict(gp)
+    assert gp.num_points() == 13
+
+
+def test_gband_full_config_restores_rgf_sweep():
+    cfg = dataclasses.replace(CFG, gband="full")
+    X, Y, omega = _data(12, seed=7)
+    gp = fit(cfg, X, Y, omega, 0.3, capacity=16)
+    assert gp.config.gband == "full"
+    gp = insert(gp, jnp.asarray([1.0, 2.0]), jnp.asarray(0.5))
+    # the full path IS the recompute: bitwise equal
+    Gref = variance_band(gp.ops.A, gp.ops.Phi, backend=gp.config.backend)
+    np.testing.assert_array_equal(np.asarray(gp.Gband.data),
+                                  np.asarray(Gref.data))
+
+
+def test_repro_gband_env_resolution():
+    assert kops.resolve_gband("windowed") == "windowed"
+    assert kops.resolve_gband("full") == "full"
+    X, Y, omega = _data(9, seed=8)
+    with kops.use_gband("full"):
+        assert kops.resolve_gband("auto") == "full"
+        assert fit(CFG, X, Y, omega, 0.3, capacity=12).config.gband == "full"
+    assert kops.resolve_gband("auto") == "windowed"
+    with pytest.raises(ValueError):
+        kops.resolve_gband("bogus")
+    with pytest.raises(ValueError):
+        kops.set_gband("bogus")
+
+
+# ---------------------------------------------------------------------------
+# fleet bit-identity + poisoned tails
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_lane_bit_identity_t8():
+    T, n, D, cap = 8, 12, 2, 16
+    rng = np.random.default_rng(9)
+    Xs = jnp.asarray(rng.random((T, n, D)) * 5)
+    Ys = jnp.asarray(rng.standard_normal((T, n)))
+    omega = jnp.asarray(0.8 + rng.random((T, D)))
+    sigma = jnp.full((T,), 0.3)
+    fl = fleet_fit(CFG, Xs, Ys, omega, sigma, capacity=cap)
+    assert fl.gp.config.gband == "windowed"
+    xn = jnp.asarray(rng.random((T, D)) * 5)
+    yn = jnp.asarray(rng.standard_normal(T))
+    fl = fleet_evict(fleet_insert(fl, xn, yn))
+    # lane 0 through the single-GP path (same one-lane vmapped program)
+    gp0 = fit(CFG, Xs[0], Ys[0], omega[0], 0.3, capacity=cap)
+    gp0 = evict(insert(gp0, xn[0], yn[0]))
+    np.testing.assert_array_equal(np.asarray(fl.gp.Gband.data[0]),
+                                  np.asarray(gp0.Gband.data))
+    np.testing.assert_array_equal(np.asarray(fl.gp.Hband.data[0]),
+                                  np.asarray(gp0.Hband.data))
+
+
+def test_poisoned_tails_do_not_leak_through_windowed_update():
+    from test_capacity import _poison_tails
+
+    X, Y, omega = _data(14, seed=10)
+    gp = fit(CFG, X, Y, omega, 0.3, capacity=20)
+    x_new = jnp.asarray([1.5, 2.5])
+    y_new = jnp.asarray(0.25)
+    clean = evict(insert(gp, x_new, y_new))
+    bad = evict(insert(_poison_tails(gp), x_new, y_new))
+    k = clean.num_points()
+    for got, want in [(bad.Gband.canonical().data[:, :k],
+                       clean.Gband.canonical().data[:, :k]),
+                      (bad.Hband.canonical().data[:, :k],
+                       clean.Hband.canonical().data[:, :k])]:
+        got = np.asarray(got)
+        assert np.isfinite(got).all()
+        np.testing.assert_array_equal(got, np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# S2: hierarchy rebuild gated on the baked precond, with no extra retraces
+# ---------------------------------------------------------------------------
+
+
+def test_hier_skipped_unless_kmg_and_no_retrace():
+    X, Y, omega = _data(11, seed=11)
+    gp = fit(CFG, X, Y, omega, 0.3, capacity=15)
+    assert gp.config.precond != "kmg"
+    assert gp.hier is None
+    gp1 = insert(gp, jnp.asarray([0.5, 1.0]), jnp.asarray(0.1))
+    assert gp1.hier is None
+    gp2 = evict(gp1)
+    assert gp2.hier is None
+    # steady-state mutations at fixed capacity: one compile each, reused
+    c_ins = updates_mod._insert_impl._cache_size()
+    c_evi = updates_mod._evict_impl._cache_size()
+    gp3 = evict(insert(gp2, jnp.asarray([2.0, 0.5]), jnp.asarray(-0.2)))
+    assert gp3.num_points() == 11
+    assert updates_mod._insert_impl._cache_size() == c_ins
+    assert updates_mod._evict_impl._cache_size() == c_evi
