@@ -1,0 +1,150 @@
+"""Serve-path health overhead: verdict + drift sentinel, on vs off.
+
+``PYTHONPATH=src python -m benchmarks.health [--full]``
+
+Two questions, answered as rows in ``BENCH_health.json``:
+
+  * what does ``health="on"`` cost on the healthy path? Per-insert wall
+    (the streaming convenience ``insert``, which for health-on GPs also
+    runs the host-side sentinel fetch) and per-query wall (``posterior_mean``
+    over a batch), each measured against an identically fitted
+    ``health="off"`` GP. The CI gate pins both overhead ratios under 5% —
+    the verdict is a handful of scalar reductions riding inside jits that
+    are already solve-bound, and the sentinel is one two-scalar
+    ``device_get`` per mutation. That fetch blocks on the *current*
+    insert (health-off only syncs on the previous one via the
+    ``num_points`` guard), so the convenience path pays one insert of
+    lost dispatch overlap — a fixed ~15us that is a few percent at toy
+    sizes (n=512: ~2-5%) and noise at serving sizes, which is why the
+    gated grid starts at n=2048; engines pass ``count=`` and run the
+    sentinel off fetches they make anyway, paying ~0.
+  * does the sentinel actually rescue the dense-oversampling stream PR-8
+    documented as silently wrong under ``gband="windowed"``? A clustered
+    insert stream past the static patch size, served with the default
+    config (no ``REPRO_GBAND=full``), reported as the max relative
+    posterior-variance error against a from-scratch refit.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GPConfig, fit, posterior_mean, posterior_var
+from repro.core.gband_update import patch_size
+from repro.health import dense_cluster_stream
+from repro.streaming import insert
+
+
+def _setup(health, n, D, seed=0):
+    rng = np.random.default_rng(seed)
+    scale = 0.4 * n
+    X = jnp.asarray(rng.random((n, D)) * scale)
+    Y = jnp.asarray(np.sin(np.asarray(X)).sum(axis=1)
+                    + 0.1 * rng.standard_normal(n))
+    omega = jnp.asarray(0.8 + rng.random(D))
+    cfg = GPConfig(q=0, solver="pcg", solver_iters=40, backend="jax",
+                   health=health)
+    gp = fit(cfg, X, Y, omega, 0.5, capacity=n + 64)
+    xs = jnp.asarray(rng.random((48, D)) * scale)
+    ys = jnp.asarray(np.sin(np.asarray(xs)).sum(axis=1))
+    return gp, xs, ys
+
+
+def _insert_wall(gp, xs, ys, inserts):
+    g = gp
+    t0 = time.time()
+    for k in range(inserts):
+        g = insert(g, xs[k], ys[k])
+    jax.block_until_ready(g.u_sy)
+    return (time.time() - t0) / inserts
+
+
+def _query_wall(gp, Xq, calls=32):
+    # sub-ms op: a wide inner loop averages out dispatch jitter (the query
+    # path is identical math under health on/off — the ratio pins that the
+    # extra HealthState leaves cost nothing, so noise IS the signal floor)
+    t0 = time.time()
+    for _ in range(calls):
+        out = posterior_mean(gp, Xq)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / calls
+
+
+def _sentinel_correctness(n0=245, m=252, cap=256):
+    """Max rel posterior-variance error of the dense-oversampled stream,
+    served with the stock windowed config — the sentinel must auto-resync
+    (PR 8 documented this regime as silently wrong without it)."""
+    cfg = GPConfig(q=0, solver="pcg", solver_iters=80, backend="jax")
+    assert n0 > patch_size(0, cap)
+    X, Y = dense_cluster_stream(m, 1)
+    omega = jnp.ones(1)
+    g = fit(cfg, X[:n0], Y[:n0], omega, 0.25, capacity=cap)
+    for i in range(n0, m):
+        g = insert(g, X[i], Y[i], iters=80)
+    ref = fit(cfg, X[:m], Y[:m], omega, 0.25, capacity=cap)
+    Xq = X[:16]
+    vg = np.asarray(posterior_var(g, Xq))
+    vr = np.asarray(posterior_var(ref, Xq))
+    err = float(np.max(np.abs(vg - vr) / (np.abs(vr) + 1e-30)))
+    resyncs = int(g.health.muts) < m - n0  # counter reset => sentinel fired
+    return err, resyncs
+
+
+def run(ns=(2048, 4096), D=3, inserts=24, reps=5, out_rows=None):
+    """Rows: healthy-path per-op seconds (health on vs off) + overhead
+    ratios, and the dense-stream sentinel correctness row."""
+    rows = out_rows if out_rows is not None else []
+    print("name,op,n,on_s,off_s,overhead", flush=True)
+    for n in ns:
+        rng = np.random.default_rng(1)
+        Xq = jnp.asarray(rng.random((64, D)) * 0.4 * n)
+        state, walls = {}, {}
+        for health in ("on", "off"):
+            gp, xs, ys = _setup(health, n, D)
+            g = insert(gp, xs[0], ys[0])  # warm the compiles
+            jax.block_until_ready(g.u_sy)
+            jax.block_until_ready(posterior_mean(gp, Xq))
+            state[health] = (gp, xs, ys)
+            walls[health] = [float("inf"), float("inf")]
+        # interleave the on/off reps so both modes see the same machine
+        # conditions — back-to-back mode blocks were separated by two full
+        # fits, and that drift dwarfed the few-us sentinel cost being gated
+        for _ in range(reps):
+            for health in ("on", "off"):
+                gp, xs, ys = state[health]
+                w = walls[health]
+                w[0] = min(w[0], _insert_wall(gp, xs, ys, inserts))
+                w[1] = min(w[1], _query_wall(gp, Xq))
+        for i, op in enumerate(("insert", "query")):
+            on, off = walls["on"][i], walls["off"][i]
+            ratio = on / off
+            rows.append({"bench": "health", "name": "health_overhead",
+                         "op": op, "n": int(n), "on_s": on, "off_s": off,
+                         "overhead": ratio})
+            print(f"health,{op},{n},{on:.6f},{off:.6f},{ratio:.4f}",
+                  flush=True)
+    err, fired = _sentinel_correctness()
+    rows.append({"bench": "health", "name": "sentinel_dense_stream",
+                 "op": "dense_stream_var_err", "max_rel_var_err": err,
+                 "sentinel_fired": bool(fired)})
+    print(f"health,dense_stream_var_err,-,{err:.3e},fired={fired}",
+          flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger grid: n in {2048, 8192}")
+    args = ap.parse_args()
+    jax.config.update("jax_enable_x64", True)
+    run(ns=(2048, 8192) if args.full else (2048, 4096),
+        reps=5)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,8 +25,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import backend_ablation, capacity_streaming, fig5_prediction, \
-        fig6_bayesopt, fleet_serving, fused_sweep, gband_update, multigrid, \
-        streaming_updates, table1_complexity
+        fig6_bayesopt, fleet_serving, fused_sweep, gband_update, health, \
+        multigrid, streaming_updates, table1_complexity
 
     rows: list[dict] = []
     print("== Fig 5: prediction RMSE/time vs n ==", flush=True)
@@ -100,6 +100,13 @@ def main() -> None:
         reps=10 if args.full else 5, out_rows=gband_rows)
     rows += gband_rows
 
+    print("== Serve-path health: verdict/sentinel overhead + dense-stream "
+          "rescue ==", flush=True)
+    health_rows: list[dict] = []
+    health.run(ns=(2048, 8192) if args.full else (2048, 4096),
+               reps=5, out_rows=health_rows)
+    rows += health_rows
+
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {len(rows)} rows to {args.out}", flush=True)
@@ -152,6 +159,14 @@ def main() -> None:
     with open(gband_out, "w") as f:
         json.dump(gband_rows, f, indent=1)
     print(f"wrote {len(gband_rows)} rows to {gband_out}", flush=True)
+
+    # serve-path health artifact (PR 9 acceptance: verdict + sentinel
+    # overhead < 5% on the healthy path; the dense-oversampled stream serves
+    # correct variances under the stock windowed config)
+    health_out = os.path.join(os.path.dirname(args.out), "BENCH_health.json")
+    with open(health_out, "w") as f:
+        json.dump(health_rows, f, indent=1)
+    print(f"wrote {len(health_rows)} rows to {health_out}", flush=True)
 
     _append_summary(os.path.join(os.path.dirname(args.out),
                                  "BENCH_summary.json"), rows, args.full)

@@ -93,7 +93,17 @@ class Checkpointer:
             return int(f.read().strip())
 
     def restore(self, template):
-        """Returns (tree_like_template, step) or (None, 0) if no checkpoint."""
+        """Returns (tree_like_template, step) or (None, 0) if no checkpoint.
+
+        The manifest's recorded tree structure must match ``template``'s —
+        leaf count alone cannot distinguish two pytrees with the same number
+        of arrays but different static metadata (e.g. an ``AdditiveGP``
+        saved under a different baked config), and a silent unflatten into
+        the wrong structure is exactly the corrupt-restore failure the
+        serve-path health layer exists to catch. A mismatch raises
+        ``ValueError`` (so engine quarantine/repair sees a classifiable
+        failure, not garbage state).
+        """
         step = self.latest_step()
         if step is None:
             return None, 0
@@ -102,7 +112,15 @@ class Checkpointer:
             manifest = json.load(f)
         data = np.load(os.path.join(d, f"host_{jax.process_index()}.npz"))
         leaves_t, treedef = jax.tree_util.tree_flatten(template)
-        assert manifest["n_leaves"] == len(leaves_t), "checkpoint/model mismatch"
+        if manifest["n_leaves"] != len(leaves_t):
+            raise ValueError(
+                f"checkpoint {d}: {manifest['n_leaves']} leaves on disk, "
+                f"template has {len(leaves_t)}")
+        if manifest["treedef"] != str(treedef):
+            raise ValueError(
+                f"checkpoint {d}: tree structure mismatch\n"
+                f"  on disk:  {manifest['treedef']}\n"
+                f"  template: {treedef}")
         leaves = [data[f"leaf_{i}"] for i in range(len(leaves_t))]
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         return tree, step

@@ -22,6 +22,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..health import verdict as hv
 from ..masking import mask_rows
 from . import matern as mk
 from .backfitting import DimOps, SolveConfig, solve_mhat, mhat_matvec
@@ -52,7 +53,7 @@ _VAR_CHUNK = 32
     meta_fields=("q", "solver", "solver_iters", "pivot", "logdet_order",
                  "logdet_probes", "trace_probes", "power_iters", "logdet_method",
                  "backend", "solve_alg", "fused", "precond", "precond_levels",
-                 "precond_coarsen", "precond_smooth", "gband"),
+                 "precond_coarsen", "precond_smooth", "gband", "health"),
 )
 @dataclasses.dataclass(frozen=True)
 class GPConfig:
@@ -87,6 +88,12 @@ class GPConfig:
     # also settable process-wide via REPRO_GBAND. Resolved and baked at
     # fit() like backend/solve_alg (see core/gband_update.py).
     gband: str = "auto"
+    # serve-path health tracking: "auto" (-> "on") | "on" (the fitted GP
+    # carries a repro.health.HealthState — latest solve verdict + the Gband
+    # drift sentinel accumulators — and the engines act on bad verdicts) |
+    # "off" (no state, bit-identical to the pre-health serve path); also
+    # settable process-wide via REPRO_HEALTH. Resolved and baked at fit().
+    health: str = "auto"
     logdet_order: int = 30
     logdet_probes: int = 16
     trace_probes: int = 16
@@ -110,7 +117,7 @@ class GPConfig:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=("X", "Y", "omega", "sigma", "xs", "ops", "B", "Psi", "bY",
-                 "u_sy", "Gband", "n_active", "hier", "Hband"),
+                 "u_sy", "Gband", "n_active", "hier", "Hband", "health"),
     meta_fields=("config",),
 )
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +154,10 @@ class AdditiveGP:
     # None only on legacy pytrees (pre-windowed checkpoints); the mutation
     # path then falls back to the full sweep.
     Hband: Banded | None = None
+    # per-GP health scalars (latest solve verdict, Gband drift sentinel
+    # accumulators) when config.health == "on"; None when "off". All-scalar
+    # leaves, so the fleet's vmapped tenant axis carries them for free.
+    health: hv.HealthState | None = None
 
     @property
     def n(self) -> int:
@@ -229,7 +240,8 @@ def fit(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array, sigma,
                else _kops.get_fused()),
         precond=_kops.resolve_precond(config.precond, q=config.q,
                                       n=X.shape[0]),
-        gband=_kops.resolve_gband(config.gband))
+        gband=_kops.resolve_gband(config.gband),
+        health=_kops.resolve_health(config.health))
     gp = _fit_impl(config, X, Y, omega, sigma)
     if capacity is not None:
         gp = with_capacity(gp, capacity)
@@ -293,7 +305,7 @@ def _with_capacity_impl(gp: AdditiveGP, capacity: int) -> AdditiveGP:
         Gband=_pad_band_rows(gp.Gband, capacity, na),
         Hband=(None if gp.Hband is None
                else _pad_band_rows(gp.Hband, capacity, na)),
-        config=gp.config, n_active=na, hier=hier_p)
+        config=gp.config, n_active=na, hier=hier_p, health=gp.health)
 
 
 def with_capacity(gp: AdditiveGP, capacity: int) -> AdditiveGP:
@@ -317,7 +329,7 @@ def with_capacity(gp: AdditiveGP, capacity: int) -> AdditiveGP:
 
 def mean_caches(config: GPConfig, ops: DimOps, Y: jax.Array,
                 x0: jax.Array | None = None, iters: int | None = None,
-                hier=None):
+                hier=None, return_info: bool = False):
     """(u_sy, bY) solve-dependent posterior-mean caches.
 
     Shared by ``fit`` (cold start) and ``repro.streaming`` mutations, which
@@ -327,32 +339,49 @@ def mean_caches(config: GPConfig, ops: DimOps, Y: jax.Array,
     "kmg"). The variance band is *not* recomputed here: the streaming path
     maintains it with the windowed update (``core/gband_update.py``) and
     only the cold-start ``posterior_caches`` runs the full RGF sweep.
+
+    ``return_info=True`` (trace-time static) additionally returns the
+    solve's classified :class:`~repro.core.backfitting.SolveInfo`; its
+    verdict also absorbs a nonfinite probe of ``bY`` (the triangular
+    follow-up solve), so a NaN that first appears there is still caught.
     """
     cfg = config.solve_cfg()
     if iters is not None:
         cfg = dataclasses.replace(cfg, iters=iters)
     D, n = ops.D, ops.n
     SY = jnp.broadcast_to(Y[None, :], (D, n))
-    u_sy = solve_mhat(ops, SY, cfg, x0=x0,
-                      hier=hier)  # Mhat^{-1} S Y, original order
+    res = solve_mhat(ops, SY, cfg, x0=x0, hier=hier,
+                     return_info=return_info)  # Mhat^{-1} S Y, original order
+    u_sy, info = res if return_info else (res, None)
     bY = solve(transpose(ops.Phi), ops.to_sorted(u_sy) / ops.sigma2,
                pivot=config.pivot, backend=config.backend,
                alg=config.solve_alg)
-    return u_sy, bY
+    if not return_info:
+        return u_sy, bY
+    bad_by = jnp.where(jnp.all(jnp.isfinite(bY)), hv.OK, hv.NONFINITE)
+    info = info._replace(
+        verdict=jnp.maximum(info.verdict, bad_by).astype(jnp.int32))
+    return u_sy, bY, info
 
 
 def posterior_caches(config: GPConfig, ops: DimOps, Y: jax.Array,
                      x0: jax.Array | None = None, iters: int | None = None,
-                     hier=None):
+                     hier=None, return_info: bool = False):
     """(u_sy, bY, Gband, Hband) posterior caches from assembled factors.
 
     The cold-start path: :func:`mean_caches` plus the full RGF variance-band
     sweep (which also yields the ``H = A Phi^T`` band carried on the GP for
-    the windowed streaming updates).
+    the windowed streaming updates). ``return_info=True`` appends the
+    classified solve info (see :func:`mean_caches`).
     """
-    u_sy, bY = mean_caches(config, ops, Y, x0=x0, iters=iters, hier=hier)
+    res = mean_caches(config, ops, Y, x0=x0, iters=iters, hier=hier,
+                      return_info=return_info)
     Gband, Hband = variance_band(ops.A, ops.Phi, backend=config.backend,
                                  return_h=True)
+    if return_info:
+        u_sy, bY, info = res
+        return u_sy, bY, Gband, Hband, info
+    u_sy, bY = res
     return u_sy, bY, Gband, Hband
 
 
@@ -377,10 +406,18 @@ def _fit_impl(config: GPConfig, X: jax.Array, Y: jax.Array, omega: jax.Array,
     ops = DimOps(A=A, Phi=Phi, SAPhi=SAPhi, sort_idx=sort_idx, rank_idx=rank_idx,
                  sigma2=sigma**2)
     hier = build_gp_hier(config, omega, sigma, X, xs, ops)
-    u_sy, bY, Gband, Hband = posterior_caches(config, ops, Y, hier=hier)
+    # a config that never went through fit() (health still "auto") carries
+    # no state — only a resolved "on" pays for the verdict reductions
+    if config.health == "on":
+        u_sy, bY, Gband, Hband, info = posterior_caches(
+            config, ops, Y, hier=hier, return_info=True)
+        health = hv.HealthState.fresh(Y.dtype).with_solve(info)
+    else:
+        u_sy, bY, Gband, Hband = posterior_caches(config, ops, Y, hier=hier)
+        health = None
     return AdditiveGP(X=X, Y=Y, omega=omega, sigma=sigma, xs=xs, ops=ops, B=B,
                       Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband, Hband=Hband,
-                      config=config, hier=hier)
+                      config=config, hier=hier, health=health)
 
 
 # ---------------------------------------------------------------------------
@@ -543,13 +580,18 @@ def _logdet_mhat(gp: AdditiveGP, key: jax.Array) -> jax.Array:
     return ld_c + ld_n
 
 
-@jax.jit
-def log_likelihood(gp: AdditiveGP, key: jax.Array) -> jax.Array:
+@partial(jax.jit, static_argnames=("return_verdict",))
+def log_likelihood(gp: AdditiveGP, key: jax.Array,
+                   return_verdict: bool = False):
     """Eq. (14): exact quadratic term + stochastic log-det (Algs 6-8).
 
     Capacity padding: the quadratic term masks the (potentially arbitrary)
     padded tails, the banded log-dets pick up exactly 0 from the identity
     tails, and the size-dependent constants use the active count.
+
+    ``return_verdict=True`` additionally returns an int32 health code: the
+    MLL reuses the fitted ``u_sy`` cache (no fresh Mhat solve), so the
+    verdict is a nonfinite probe of the value — NONFINITE or OK.
     """
     na = gp.active()
     Ym = mask_rows(gp.Y, gp.n_active, axis=0)
@@ -559,10 +601,15 @@ def log_likelihood(gp: AdditiveGP, key: jax.Array) -> jax.Array:
     be, pv, sa = gp.config.backend, gp.config.pivot, gp.config.solve_alg
     ld_k = jnp.sum(logdet(gp.ops.Phi, pivot=pv, backend=be, alg=sa)) - jnp.sum(
         logdet(gp.ops.A, pivot=pv, backend=be, alg=sa))
-    return -0.5 * (
+    ll = -0.5 * (
         quad + ld_mhat + ld_k + 2.0 * na * jnp.log(gp.sigma)
         + na * jnp.log(2.0 * jnp.pi)
     )
+    if not return_verdict:
+        return ll
+    verdict = jnp.where(jnp.isfinite(ll), hv.OK, hv.NONFINITE).astype(
+        jnp.int32)
+    return ll, verdict
 
 
 def _dk_apply(gp: AdditiveGP, v: jax.Array) -> jax.Array:
@@ -576,13 +623,18 @@ def _dk_apply(gp: AdditiveGP, v: jax.Array) -> jax.Array:
     return gp.ops.from_sorted(w)
 
 
-@jax.jit
-def mll_gradients(gp: AdditiveGP, key: jax.Array):
+@partial(jax.jit, static_argnames=("return_info",))
+def mll_gradients(gp: AdditiveGP, key: jax.Array, return_info: bool = False):
     """(d MLL / d omega (D,), d MLL / d sigma) — Eq. (15) + Hutchinson traces.
 
     Capacity padding: masked row-keyed probes and a masked ``u = R Y`` keep
     every trace/quadratic estimate on the active block; ``tr R``'s exact
     ``n / sigma^2`` part uses the active count.
+
+    ``return_info=True`` additionally returns a classified
+    :class:`~repro.core.backfitting.SolveInfo` whose verdict is the worst
+    over the two trace-probe Mhat solves plus a nonfinite probe of the
+    gradients themselves.
     """
     c = gp.config
     cfg = c.solve_cfg()
@@ -604,19 +656,29 @@ def mll_gradients(gp: AdditiveGP, key: jax.Array):
     rhs = jnp.broadcast_to(
         Wd.transpose(1, 0, 2).reshape(1, n, D * Q), (D, n, D * Q)
     )
-    z = solve_mhat(gp.ops, rhs, cfg, hier=gp.hier)  # (D, n, D*Q)
+    rz = solve_mhat(gp.ops, rhs, cfg, hier=gp.hier,
+                    return_info=return_info)  # (D, n, D*Q)
+    z, info_z = rz if return_info else (rz, None)
     stz = jnp.sum(z, axis=0).reshape(n, D, Q)
     second = jnp.einsum("nq,ndq->dq", V, stz) / gp.sigma**4
     trace = jnp.mean(first - second, axis=1)  # (D,)
     grad_omega = 0.5 * (term1 - trace)
 
     # sigma gradient: dMLL/dsigma^2 = 0.5 (||u||^2 - tr R), tr R via same probes
-    zs = solve_mhat(gp.ops, jnp.broadcast_to(V[None], (D, n, Q)), cfg,
-                    hier=gp.hier)
+    rzs = solve_mhat(gp.ops, jnp.broadcast_to(V[None], (D, n, Q)), cfg,
+                     hier=gp.hier, return_info=return_info)
+    zs, info_s = rzs if return_info else (rzs, None)
     quadS = jnp.einsum("nq,nq->q", V, jnp.sum(zs, axis=0))
     tr_r = na / gp.sigma**2 - jnp.mean(quadS) / gp.sigma**4
     grad_sigma2 = 0.5 * (u @ u - tr_r)
-    return grad_omega, grad_sigma2 * 2.0 * gp.sigma
+    grad_sigma = grad_sigma2 * 2.0 * gp.sigma
+    if not return_info:
+        return grad_omega, grad_sigma
+    fin = jnp.all(jnp.isfinite(grad_omega)) & jnp.isfinite(grad_sigma)
+    verdict = jnp.maximum(
+        jnp.maximum(info_z.verdict, info_s.verdict),
+        jnp.where(fin, hv.OK, hv.NONFINITE)).astype(jnp.int32)
+    return grad_omega, grad_sigma, info_z._replace(verdict=verdict)
 
 
 def fit_hyperparams(

@@ -30,6 +30,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..health.verdict import classify_solve
 from ..masking import canonical_perm, mask_rows, tree_sum
 from .banded import Banded, matvec, solve
 
@@ -79,6 +80,12 @@ class SolveInfo(NamedTuple):
     # carries; jacobi/gauss_seidel: one extra matvec, only materialized
     # when return_info=True)
     resid: jax.Array = None
+    # L2 norm of the (masked) RHS v — the scale resid is judged against
+    rhs: jax.Array = None
+    # int32 health code from repro.health.verdict (OK | STALLED | DIVERGED
+    # | NONFINITE), classified in-graph from resid/rhs/the state itself —
+    # a few scalar reductions, free to materialize at the host boundary
+    verdict: jax.Array = None
 
 
 @partial(
@@ -448,4 +455,8 @@ def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig(),
     out = out[..., 0] if vec_in else out
     n_active = jnp.asarray(
         ops.n if ops.n_active is None else ops.n_active, jnp.int32)
-    return out, SolveInfo(iters=iters_used, n_active=n_active, resid=resid)
+    rhs_norm = jnp.sqrt(tree_sum(_det_dot(v, v), axis=0))
+    verdict = classify_solve(out, resid, rhs_norm,
+                             at_cap=iters_used >= cfg.iters)
+    return out, SolveInfo(iters=iters_used, n_active=n_active, resid=resid,
+                          rhs=rhs_norm, verdict=verdict)

@@ -184,7 +184,8 @@ def fleet_fit(config: GPConfig, X, Y, omega, sigma,
         fused=(config.fused if config.fused != "auto"
                else _kops.get_fused()),
         precond=_kops.resolve_precond(config.precond, q=config.q, n=n),
-        gband=_kops.resolve_gband(config.gband))
+        gband=_kops.resolve_gband(config.gband),
+        health=_kops.resolve_health(config.health))
     sigma = jnp.broadcast_to(jnp.asarray(sigma, X.dtype), (T,))
     omega = jnp.broadcast_to(jnp.asarray(omega, X.dtype), (T, D))
     return GPFleet(gp=_fleet_fit_impl(config, X, jnp.asarray(Y), omega, sigma,

@@ -230,7 +230,11 @@ boundary terms that decay like the state-transition factor
 ``exp(-sum of omega * gap)`` — ~1e-16 relative at ``omega * gap >= 0.32``
 (the quasi-uniform streaming regime), comfortably inside the 1e-10
 contract for ``omega * gap >= 0.21``. Densely oversampled data (tiny
-``omega * gap``) has no index-space decay; use ``REPRO_GBAND=full`` there.
+``omega * gap``) has no index-space decay and breaks the contract; under
+``config.health == "on"`` the per-mutation :func:`_drift_estimate` detects
+the non-decay and the streaming sentinel (``updates.maybe_resync``)
+replaces the bad band with an exact full-RGF recompute automatically —
+``REPRO_GBAND=full`` remains the manual escape hatch for health-off runs.
 """
 
 
@@ -265,29 +269,34 @@ def _solve_windows(Hdata: jax.Array, hs: int, E: jax.Array, F: jax.Array,
     pivoted block solves) over the fixed-size patch. ``hs`` is the
     half-bandwidth of ``Hdata`` (``h + 1`` for the spliced insert system).
 
-    On the "jax" backend both systems run as ONE pure-JAX compacted
-    block-CR call (``kernels.cr_jax``) with the transposed system stacked
-    on a leading batch axis — log-depth vectorized levels instead of the
-    scan-LU's P *sequential* steps, and one dispatch stream instead of
-    two. This opt-in is local to the Gband window solves — the global
-    ``banded_solve`` dispatch is untouched, so no other jax-backend call
-    site changes numerics (cr_jax is built from batch-invariant
-    primitives, so stacking does not perturb bits either). The pallas
-    backend keeps the dispatched solve (its block-CR kernel is already
-    log-depth).
+    Both backends run the H and H^T systems as ONE stacked call with the
+    transposed system on a leading batch axis — the RHS are zero-padded to
+    a common column count and the outputs sliced back. On "jax" that is
+    the pure-JAX compacted block-CR (``kernels.cr_jax``): log-depth
+    vectorized levels instead of the scan-LU's P *sequential* steps. On
+    "pallas" the stacked batch folds into the kernel grid
+    (``kernels.ops._flatten_batch``), so the pair costs one ``pallas_call``
+    instead of two dispatches. Stacking is bit-neutral on both paths: each
+    grid entry / batch lane solves its system independently and the
+    column-wise small-solves never mix RHS columns, so the stacked results
+    are bitwise equal to two separate calls (pinned in
+    ``tests/test_health.py``). This opt-in is local to the Gband window
+    solves — the global ``banded_solve`` dispatch is untouched, so no
+    other call site changes numerics.
     """
     Hb = Banded(Hdata, hs, hs)
+    r, c = E.shape[-1], F.shape[-1]
+    w = max(r, c)
+    Ep = jnp.pad(E, ((0, 0), (0, 0), (0, w - r)))
+    Fp = jnp.pad(F, ((0, 0), (0, 0), (0, w - c)))
+    Hpair = jnp.stack([Hdata, transpose(Hb).data])
+    rhs = jnp.stack([Ep, Fp])
     if _kops.resolve_backend(backend) == "jax":
-        r, c = E.shape[-1], F.shape[-1]
-        w = max(r, c)
-        Ep = jnp.pad(E, ((0, 0), (0, 0), (0, w - r)))
-        Fp = jnp.pad(F, ((0, 0), (0, 0), (0, w - c)))
-        out = block_cr_solve_jax(jnp.stack([Hdata, transpose(Hb).data]),
-                                 jnp.stack([Ep, Fp]), hs)
-        X, Y = out[0][..., :r], out[1][..., :c]
+        out = block_cr_solve_jax(Hpair, rhs, hs)
     else:
-        X = solve(Hb, E, pivot=True, backend=backend, alg=alg)
-        Y = solve(transpose(Hb), F, pivot=True, backend=backend, alg=alg)
+        out = solve(Banded(Hpair, hs, hs), rhs, pivot=True, backend=backend,
+                    alg=alg)
+    X, Y = out[0][..., :r], out[1][..., :c]
     return X, jnp.swapaxes(Y, 1, 2)
 
 
@@ -328,6 +337,47 @@ def _woodbury(Hsolve: jax.Array, hs: int, delta: jax.Array, hd: int,
     return X, V, Yt, wr, wc, ps
 
 
+DRIFT_EDGE = 8
+"""Patch-edge rows sampled by the truncation-drift estimator."""
+
+
+def _drift_estimate(corr: jax.Array, ps: jax.Array, k_new,
+                    gscale: jax.Array) -> jax.Array:
+    """Per-mutation check of the truncation's decay contract.
+
+    The patch truncation is valid exactly when the Woodbury correction has
+    decayed (at its ``exp(-omega * gap)`` rate) to roundoff by the patch
+    boundary: that same decay bounds both the dropped tail *and* the
+    boundary terms that make the truncated patch solve agree with the
+    global one. So the signal is the correction magnitude on the
+    outermost ``DRIFT_EDGE`` patch rows **relative to the correction's own
+    peak**: a correction that has not died off by the boundary means the
+    no-decay regime, where the patch solve itself is untrustworthy (the
+    interior error can exceed the edge magnitude by orders — dense
+    oversampling produces exactly this). The normalizer is
+    ``min(peak, gscale)`` per dimension: when the correction is larger
+    than the band itself, ``edge / gscale`` is the band-relative error and
+    is the bigger (still conservative) ratio. Each side counts only when
+    truncation is actually active there (left: ``ps > 0``; right: the
+    patch ends before the active prefix does), so the estimate is
+    *exactly zero* whenever the patch covers the active system and the
+    update is exact. The sentinel accumulates it across mutations
+    (``HealthState.drift``) and triggers an exact full-RGF resync past
+    ``health.verdict.DRIFT_TOL``.
+    """
+    P = corr.shape[1]
+    e = min(DRIFT_EDGE, P)
+    absc = jnp.abs(corr)
+    left = jnp.max(absc[:, :e], axis=(1, 2))  # (D,)
+    right = jnp.max(absc[:, P - e:], axis=(1, 2))
+    edge = jnp.maximum(jnp.where(ps > 0, left, 0.0),
+                       jnp.where(ps + P < k_new, right, 0.0))
+    peak = jnp.max(absc, axis=(1, 2))  # (D,)
+    tiny = jnp.asarray(jnp.finfo(corr.dtype).tiny, corr.dtype)
+    scale = jnp.maximum(jnp.minimum(peak, gscale), tiny)
+    return jnp.max(edge / scale)
+
+
 def _add_patch_band(Gdata: jax.Array, corr: jax.Array,
                     ps: jax.Array) -> jax.Array:
     """Scatter-add the patch-local band correction into the full band."""
@@ -346,9 +396,11 @@ def gband_insert(Hband_old: Banded, A: Banded, Phi: Banded,
     ``Hband_old``/``Gband_old``: the pre-insert cached bands (canonical,
     (D, C, 2h+1)); ``A``/``Phi``: the post-insert spliced factors;
     ``p``: (D,) per-dimension sorted insert position; ``k_new``: traced new
-    active count. Returns the post-insert bands, active-prefix equal to the
-    full RGF recompute up to roundoff plus the exponentially small patch
-    truncation (exact whenever the patch covers the capacity).
+    active count. Returns ``(Gband, Hband, drift)``: the post-insert bands
+    — active-prefix equal to the full RGF recompute up to roundoff plus
+    the exponentially small patch truncation (exact whenever the patch
+    covers the capacity) — and the scalar :func:`_drift_estimate` of this
+    mutation's truncated tail for the health sentinel.
     """
     h = A.lo + Phi.lo  # 2q + 1
     # the spliced system has half-bandwidth h + 1 (outward straddles)
@@ -358,9 +410,11 @@ def gband_insert(Hband_old: Banded, A: Banded, Phi: Banded,
     X, V, _, _, _, ps = _woodbury(Hs, h + 1, delta, h + 1, p, q, -1.0,
                                   backend, alg)
     Gs = _splice_band(Gband_old.canonical().data, h, p)
-    Gnew = _add_patch_band(Gs, -_low_rank_band(X, V, h), ps)
+    corr = _low_rank_band(X, V, h)
+    drift = _drift_estimate(corr, ps, k_new, jnp.max(jnp.abs(Gs)))
+    Gnew = _add_patch_band(Gs, -corr, ps)
     Gnew = canonical_band(Gnew, h, h, k_new)
-    return (Banded(Gnew, h, h, k_new), Banded(Hnew, h, h, k_new))
+    return (Banded(Gnew, h, h, k_new), Banded(Hnew, h, h, k_new), drift)
 
 
 def gband_evict(Hband_old: Banded, A: Banded, Phi: Banded,
@@ -371,7 +425,8 @@ def gband_evict(Hband_old: Banded, A: Banded, Phi: Banded,
 
     Arguments mirror :func:`gband_insert` (``A``/``Phi`` are the
     post-evict factors, ``k_new`` the decremented active count); the solves
-    run against the *cached* pre-evict ``Hband_old``.
+    run against the *cached* pre-evict ``Hband_old``. Returns
+    ``(Gband, Hband, drift)`` like :func:`gband_insert`.
     """
     h = A.lo + Phi.lo
     C = Hband_old.data.shape[1]
@@ -385,8 +440,10 @@ def gband_evict(Hband_old: Banded, A: Banded, Phi: Banded,
     X, V, Yt, wr, wc, pstart = _woodbury(Hold, h, delta, h + 1, p, q, 1.0,
                                          backend, alg)
     # G_s' = G_old + X V on the stored band ...
-    Gs = _add_patch_band(Gband_old.canonical().data,
-                         _low_rank_band(X, V, h), pstart)
+    Gold = Gband_old.canonical().data
+    corr = _low_rank_band(X, V, h)
+    drift = _drift_estimate(corr, pstart, k_new, jnp.max(jnp.abs(Gold)))
+    Gs = _add_patch_band(Gold, corr, pstart)
 
     # ... plus the 2h entries at offsets +-(h+1) that deleting row/column p
     # shifts into the band. Both sit inside the solve windows: rows
@@ -444,4 +501,4 @@ def gband_evict(Hband_old: Banded, A: Banded, Phi: Banded,
     val = jnp.where(lo_case, lo_vals, val)
     val = jnp.where((j >= 0) & (j < C), val, 0.0)
     Gnew = canonical_band(val, h, h, k_new)
-    return (Banded(Gnew, h, h, k_new), Banded(Hnew, h, h, k_new))
+    return (Banded(Gnew, h, h, k_new), Banded(Hnew, h, h, k_new), drift)

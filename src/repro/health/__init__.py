@@ -1,0 +1,48 @@
+"""Serve-path numerical fault tolerance.
+
+Three layers, cheapest first:
+
+* :mod:`repro.health.verdict` — in-graph classification of every solve
+  (``OK | STALLED | DIVERGED | NONFINITE``) from the diagnostics the
+  solvers already carry, plus the ``HealthState`` pytree fitted GPs carry
+  when ``GPConfig.health == "on"``. Pure jax; costs a few scalar
+  reductions per solve and materializes for free at the host boundary.
+* :mod:`repro.health.ladder` — the host-level degradation ladder: retry a
+  failed operation through progressively safer configurations
+  (warm→cold, kmg→none, fused→unfused, windowed→full-RGF resync,
+  pallas→jax, finally a clean refit with poisoned rows dropped), emitting
+  a structured :class:`HealthEvent` per escalation.
+* :mod:`repro.health.inject` — the deterministic fault-injection harness
+  the tests use to exercise every rung.
+
+``verdict`` is imported eagerly (the solver core depends on it); the
+ladder and injector import the GP core, so they load lazily to keep this
+package import-cycle-free.
+"""
+from .verdict import (DIVERGED, NONFINITE, OK, STALLED, VERDICT_NAMES,
+                      HealthState, classify_solve, verdict_name)
+
+__all__ = [
+    "OK", "STALLED", "DIVERGED", "NONFINITE", "VERDICT_NAMES",
+    "HealthState", "classify_solve", "verdict_name",
+    "HealthEvent", "RUNGS", "repair", "probe_gp",
+    "nan_active_row", "near_singular_band", "corrupt_hierarchy",
+    "iteration_cap", "dense_cluster_stream",
+]
+
+_LAZY = {
+    "HealthEvent": "ladder", "RUNGS": "ladder", "repair": "ladder",
+    "probe_gp": "ladder",
+    "nan_active_row": "inject", "near_singular_band": "inject",
+    "corrupt_hierarchy": "inject", "iteration_cap": "inject",
+    "dense_cluster_stream": "inject",
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

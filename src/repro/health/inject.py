@@ -1,0 +1,140 @@
+"""Deterministic fault injection — the harness behind the health tests.
+
+Each injector takes a *fitted* :class:`~repro.core.additive_gp.AdditiveGP`
+(or, for :func:`dense_cluster_stream`, nothing but sizes) and returns a
+deterministically broken variant of one specific serve-path fault class:
+
+* :func:`nan_active_row` — a NaN observation with (optionally) its
+  propagated corruption in the posterior caches: the "bad data reached the
+  artifact" state the quarantine path must contain.
+* :func:`near_singular_band` — one smoother-system row driven (almost) to
+  singularity: solves through it explode, and because the corruption lives
+  in the assembled factors only the ladder's ``refit_clean`` rung (a full
+  factor rebuild) recovers.
+* :func:`corrupt_hierarchy` — a poisoned KMG prolongation level: the
+  preconditioned solve stalls hard (PCG is invariant to preconditioner
+  scaling, so from a cold start the broken V-cycle pins the relative
+  residual just under 1 rather than past it) while the unpreconditioned
+  system is perfectly solvable — the ``precond_off`` rung's fault class.
+* :func:`iteration_cap` — re-solves the posterior caches cold under a
+  forced tiny iteration budget, leaving a genuinely stalled (classified)
+  solve on the GP — the ``warm_to_cold`` rung's fault class.
+* :func:`dense_cluster_stream` — a densely oversampled insert stream (tiny
+  ``omega * gap``) that breaches the windowed-Gband truncation contract
+  (``core/gband_update.TRUNC_MARGIN``): the drift sentinel's fault class.
+
+Everything is pure and seeded — no global RNG, no wall clock — so every
+injection is bit-reproducible, which the tests rely on (they pin both the
+*detection* verdict and the *repair* outcome).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import verdict as hv
+
+__all__ = ["nan_active_row", "near_singular_band", "corrupt_hierarchy",
+           "iteration_cap", "dense_cluster_stream"]
+
+
+def nan_active_row(gp, row: int = 0, *, poison_caches: bool = True):
+    """Poison one *active* observation with NaN.
+
+    ``Y[row]`` is always set to NaN. With ``poison_caches`` (default) the
+    propagated state a real corrupt solve would leave behind is injected
+    too: the row's column of ``u_sy`` and its per-dimension sorted slots in
+    ``bY`` — so posterior means over windows touching the row go NaN
+    immediately, which is exactly the corrupt-artifact behavior the
+    containment tests pin. With ``poison_caches=False`` only the raw
+    observation is bad; the *next* classified solve is what detects it.
+    """
+    nan = jnp.asarray(jnp.nan, gp.Y.dtype)
+    out = dataclasses.replace(gp, Y=gp.Y.at[row].set(nan))
+    if not poison_caches:
+        return out
+    srow = gp.ops.rank_idx[:, row]  # (D,) sorted position per dimension
+    return dataclasses.replace(
+        out,
+        u_sy=out.u_sy.at[:, row].set(nan),
+        bY=out.bY.at[jnp.arange(gp.D), srow].set(nan))
+
+
+def near_singular_band(gp, *, row: int = 0, dim: int = 0, eps: float = 1e-13):
+    """Drive one active row of the smoother band ``SAPhi`` near-singular.
+
+    The row is zeroed except for a diagonal of ``eps * max|row|`` — the
+    block solves through it amplify by ~1/eps, so the next backfitting
+    solve lands DIVERGED or NONFINITE. The corruption is in the assembled
+    ``ops`` (not the data), which every re-solve rung reuses; only
+    ``refit_clean`` rebuilds the factors and recovers.
+    """
+    sa = gp.ops.SAPhi
+    scale = jnp.max(jnp.abs(sa.data[dim, row]))
+    bad = jnp.zeros((sa.width,), sa.data.dtype).at[sa.lo].set(
+        eps * jnp.maximum(scale, 1.0))
+    data = sa.data.at[dim, row].set(bad)
+    ops = dataclasses.replace(
+        gp.ops, SAPhi=dataclasses.replace(sa, data=data))
+    return dataclasses.replace(gp, ops=ops)
+
+
+def corrupt_hierarchy(gp, *, scale: float = 1e6):
+    """Poison the KMG coarse hierarchy's finest prolongation weights.
+
+    The coarse correction comes back amplified by ``scale``, so the
+    preconditioned backfitting solve stalls at an O(1) relative residual
+    (STALLED at the full iteration budget) while the underlying system
+    stays perfectly solvable with ``precond="none"`` — the ladder's
+    ``precond_off`` rung both bypasses the corruption and rebuilds the
+    stored hierarchy fresh.
+    """
+    if gp.hier is None:
+        raise ValueError("corrupt_hierarchy needs a KMG fit (gp.hier set); "
+                         f"got precond={gp.config.precond!r}")
+    lvl = gp.hier[0]
+    hier = (dataclasses.replace(lvl, W=lvl.W * scale),) + tuple(gp.hier[1:])
+    return dataclasses.replace(gp, hier=hier)
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def _iteration_cap_impl(gp, iters: int):
+    from ..core.additive_gp import mean_caches
+
+    u_sy, bY, info = mean_caches(gp.config, gp.ops, gp.Y, iters=iters,
+                                 hier=gp.hier, return_info=True)
+    health = (gp.health if gp.health is not None
+              else hv.HealthState.fresh(gp.Y.dtype)).with_solve(info)
+    return dataclasses.replace(gp, u_sy=u_sy, bY=bY, health=health)
+
+
+def iteration_cap(gp, *, iters: int = 1):
+    """Re-solve the posterior-mean caches *cold* under a forced iteration
+    cap — a deterministic stand-in for an under-budgeted production solve.
+    The solve is classified in-graph like any other, so the returned GP
+    carries a genuinely-earned STALLED verdict (the relative residual of a
+    one-iteration cold solve sits far above ``verdict.STALL_RTOL``)."""
+    return _iteration_cap_impl(gp, int(iters))
+
+
+def dense_cluster_stream(m: int, D: int, *, center: float = 0.5,
+                         width: float = 1e-7, seed: int = 0):
+    """A densely oversampled insert stream: ``(X, Y)`` with ``m`` points
+    packed into an interval of ``width`` per coordinate.
+
+    ``omega * gap`` is ~``width / m`` — far below the index-space decay the
+    windowed Gband patch truncation relies on (``core/gband_update``
+    documents the >= 0.21 contract), so once the active count exceeds the
+    static patch size these inserts accumulate real variance-band error.
+    PR-8 documented this stream as silently wrong under
+    ``gband="windowed"``; the drift sentinel now detects it per mutation
+    and auto-resyncs. Deterministic in ``seed``.
+    """
+    rng = np.random.default_rng(seed)
+    X = center + width * rng.random((m, D))
+    Y = np.sin(2.0 * np.pi * (X - center).sum(axis=1) / max(width, 1e-300))
+    return jnp.asarray(X), jnp.asarray(Y)

@@ -1,0 +1,230 @@
+"""Host-level degradation ladder — deterministic repair of a failed solve.
+
+The in-graph layer (:mod:`repro.health.verdict`) only *classifies*; this
+module *acts*. When a fitted :class:`~repro.core.additive_gp.AdditiveGP`
+surfaces a bad verdict (its carried ``HealthState`` after a fit / streaming
+mutation / probe), :func:`repair` retries the posterior-cache computation
+through a fixed sequence of progressively safer — and progressively more
+expensive — configurations, stopping at the first rung whose result probes
+healthy:
+
+=================  ========================================================
+rung               what it changes
+=================  ========================================================
+``warm_to_cold``   re-solve the posterior caches cold (no warm start) at
+                   the full ``solver_iters`` budget — clears stalls caused
+                   by a poisoned or truncated warm iterate.
+``precond_off``    same cold solve with ``precond="none"`` — bypasses a
+                   diverging KMG hierarchy; the stored hierarchy is then
+                   rebuilt fresh from the factors so the corruption cannot
+                   outlive the repair.
+``unfused``        cold solve with ``fused="off"`` — falls back from the
+                   fused pallas sweep kernel to the composed banded ops.
+``gband_resync``   exact full-RGF recompute of the variance band — clears
+                   windowed-maintenance drift (the sentinel's escape
+                   hatch, reused here for verdicts).
+``backend_jax``    cold solve through the pure-jax banded kernels —
+                   sidesteps a misbehaving pallas lowering.
+``refit_clean``    full refit from ``(X, Y)`` at the same capacity with
+                   nonfinite rows *dropped* — the last resort that also
+                   rebuilds every banded factor (recovers corrupted
+                   ``ops`` state and poisoned observations).
+=================  ========================================================
+
+Rungs that cannot apply to the GP's baked config (``precond_off`` on a
+non-KMG fit, ``backend_jax`` on a jax fit, ...) are skipped, so the walk is
+deterministic given (config, verdict history). Crucially the *stored*
+``GPConfig`` is never changed by a repair — a rung solves *with* a safer
+configuration but the returned GP keeps its original baked config, so the
+fleet's config-grouping (one compiled step per config+capacity tier) and
+the zero-recompilation guarantee of the healthy path survive every repair.
+Each escalation emits a :class:`HealthEvent`; the serving engines collect
+them (``engine.health_stats()``).
+
+Everything here is host-level control flow: one device fetch per probe,
+jitted rung bodies compiled only when a repair actually runs. The healthy
+path never enters this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import verdict as hv
+
+__all__ = ["HealthEvent", "RUNGS", "probe_gp", "repair"]
+
+# Deterministic escalation order — cheapest first, strongest last.
+RUNGS = ("warm_to_cold", "precond_off", "unfused", "gband_resync",
+         "backend_jax", "refit_clean")
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthEvent:
+    """One ladder escalation: which rung ran against which verdict.
+
+    ``op`` names the operation being repaired (engine-assigned: "insert",
+    "evict", "step", "repair", ...); ``before``/``after`` are verdict codes
+    (:mod:`repro.health.verdict`) observed entering and leaving the rung.
+    """
+
+    op: str
+    rung: str
+    before: int
+    after: int
+    detail: str = ""
+
+    @property
+    def fixed(self) -> bool:
+        return self.after == int(hv.OK)
+
+    def __str__(self) -> str:
+        tail = f" ({self.detail})" if self.detail else ""
+        return (f"[{self.op}] {hv.verdict_name(self.before)} -> "
+                f"{self.rung} -> {hv.verdict_name(self.after)}{tail}")
+
+
+@jax.jit
+def _probe_impl(gp):
+    """Worst verdict over the carried health state and a nonfinite scan of
+    the serve-path artifacts (active rows only — padding is allowed to hold
+    anything)."""
+    from ..masking import mask_rows
+
+    na = gp.n_active
+    fin = (jnp.all(jnp.isfinite(mask_rows(gp.Y, na, axis=0)))
+           & jnp.all(jnp.isfinite(mask_rows(gp.u_sy, na, axis=1)))
+           & jnp.all(jnp.isfinite(mask_rows(gp.bY, na, axis=1)))
+           & jnp.all(jnp.isfinite(mask_rows(gp.Gband.data, na, axis=1))))
+    v = (gp.health.verdict if gp.health is not None
+         else jnp.zeros((), jnp.int32))
+    return jnp.maximum(v, jnp.where(fin, hv.OK, hv.NONFINITE)).astype(
+        jnp.int32)
+
+
+def probe_gp(gp) -> int:
+    """Host-side health probe of a fitted GP — a python verdict code.
+
+    The worst of (a) the verdict the GP's last classified solve left on its
+    ``HealthState`` and (b) a nonfinite scan of the active rows of the
+    serve-path artifacts (``Y``, ``u_sy``, ``bY``, ``Gband``) — so data
+    poisoning is caught even before any solve has run over it. One jitted
+    reduction + one scalar fetch.
+    """
+    return int(jax.device_get(_probe_impl(gp)))
+
+
+@partial(jax.jit, static_argnames=("precond_off", "unfused", "backend_jax"))
+def _recache_impl(gp, precond_off=False, unfused=False, backend_jax=False):
+    """Cold full-budget re-solve of the posterior-mean caches under an
+    optionally safened configuration; the stored config is untouched."""
+    from ..core.additive_gp import build_gp_hier, mean_caches
+
+    cfg = gp.config
+    if precond_off:
+        cfg = dataclasses.replace(cfg, precond="none")
+    if unfused:
+        cfg = dataclasses.replace(cfg, fused="off")
+    if backend_jax:
+        cfg = dataclasses.replace(cfg, backend="jax", solve_alg="auto")
+    # the solve's hierarchy: carried state, EXCEPT on the precond_off rung,
+    # which bypasses it entirely and replaces the stored one with a fresh
+    # O(n) rebuild from the factors — a corrupted carried hierarchy (the
+    # "diverged KMG" fault class) must not outlive the repair
+    hier = None if cfg.precond != "kmg" else gp.hier
+    store_hier = gp.hier
+    if precond_off and gp.config.precond == "kmg":
+        store_hier = build_gp_hier(gp.config, gp.omega, gp.sigma, gp.X,
+                                   gp.xs, gp.ops)
+    u_sy, bY, info = mean_caches(cfg, gp.ops, gp.Y, hier=hier,
+                                 return_info=True)
+    health = (gp.health if gp.health is not None
+              else hv.HealthState.fresh(gp.Y.dtype)).with_solve(info)
+    return dataclasses.replace(gp, u_sy=u_sy, bY=bY, hier=store_hier,
+                               health=health)
+
+
+def _refit_clean(gp):
+    """Last-resort rung: refit from the raw data at the same capacity with
+    nonfinite observations dropped. Returns ``(gp, n_dropped)``."""
+    from ..core.additive_gp import fit
+
+    n_act = gp.num_points()
+    X, Y = jax.device_get((gp.X[:n_act], gp.Y[:n_act]))
+    X, Y = np.asarray(X), np.asarray(Y)
+    good = np.isfinite(Y) & np.all(np.isfinite(X), axis=1)
+    if not good.any():
+        raise RuntimeError(
+            "refit_clean: no finite observations survive — nothing to refit")
+    # the baked config re-resolves idempotently (every mode is already
+    # concrete), so the refit shares the clean fit's compiled programs
+    out = fit(gp.config, jnp.asarray(X[good]), jnp.asarray(Y[good]),
+              gp.omega, gp.sigma, capacity=gp.n)
+    return out, int(n_act - int(good.sum()))
+
+
+def _applies(rung: str, gp) -> bool:
+    cfg = gp.config
+    if rung == "precond_off":
+        return cfg.precond == "kmg"
+    if rung == "unfused":
+        return cfg.backend == "pallas" and cfg.fused != "off"
+    if rung == "gband_resync":
+        return cfg.gband != "full" and gp.Hband is not None
+    if rung == "backend_jax":
+        return cfg.backend == "pallas"
+    return True  # warm_to_cold, refit_clean
+
+
+def _apply(rung: str, gp):
+    """Run one rung; returns ``(gp, detail)``."""
+    from ..streaming.updates import resync_gband
+
+    if rung == "warm_to_cold":
+        return _recache_impl(gp), "cold full-iteration re-solve"
+    if rung == "precond_off":
+        return (_recache_impl(gp, precond_off=True),
+                "precond=none; hierarchy rebuilt")
+    if rung == "unfused":
+        return _recache_impl(gp, unfused=True), "fused=off re-solve"
+    if rung == "gband_resync":
+        return resync_gband(gp), "full-RGF variance-band resync"
+    if rung == "backend_jax":
+        return _recache_impl(gp, backend_jax=True), "jax-backend re-solve"
+    if rung == "refit_clean":
+        gp, dropped = _refit_clean(gp)
+        return gp, f"clean refit, {dropped} nonfinite row(s) dropped"
+    raise ValueError(f"unknown ladder rung {rung!r}")
+
+
+def repair(gp, *, op: str = "repair"):
+    """Walk the degradation ladder until the GP probes healthy.
+
+    Returns ``(gp, events)`` — the (possibly) repaired GP and one
+    :class:`HealthEvent` per rung that actually ran. A GP that already
+    probes ``OK`` returns unchanged with no events; a GP still unhealthy
+    after the final rung is returned as-is with its event trail (the caller
+    decides whether that is fatal). The returned GP always keeps the
+    original baked :class:`~repro.core.additive_gp.GPConfig`; after
+    ``refit_clean`` its active count may have shrunk (poisoned rows are
+    dropped) — engines re-read ``gp.num_points()``.
+    """
+    events: list[HealthEvent] = []
+    before = probe_gp(gp)
+    if before == int(hv.OK):
+        return gp, events
+    for rung in RUNGS:
+        if not _applies(rung, gp):
+            continue
+        gp, detail = _apply(rung, gp)
+        after = probe_gp(gp)
+        events.append(HealthEvent(op=op, rung=rung, before=before,
+                                  after=after, detail=detail))
+        if after == int(hv.OK):
+            break
+        before = after
+    return gp, events

@@ -1,0 +1,126 @@
+"""In-graph solve-health classification and the per-GP ``HealthState``.
+
+Everything here is pure jax (no imports from the GP core), so the solver
+layer can thread verdicts through jitted entry points without import
+cycles. A verdict is an int32 code computed from diagnostics the solvers
+already carry — the preconditioned-CG residual, the RHS norm, whether the
+iteration cap was hit — plus one nonfinite probe of the state. The whole
+classification is a handful of scalar reductions per solve: it rides along
+inside the jit and costs nothing extra to materialize at the host boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "OK", "STALLED", "DIVERGED", "NONFINITE", "VERDICT_NAMES",
+    "STALL_RTOL", "DRIFT_TOL", "RESYNC_EVERY", "HealthState",
+    "classify_solve", "verdict_name",
+]
+
+# verdict codes, ordered by severity (quarantine/ladder logic takes max)
+OK = 0  # converged (or tol-exited) with a finite, small residual
+STALLED = 1  # exited at the iteration cap with the residual still large
+DIVERGED = 2  # residual larger than the RHS itself: worse than x = 0
+NONFINITE = 3  # NaN/Inf in the state or residual
+
+VERDICT_NAMES = ("OK", "STALLED", "DIVERGED", "NONFINITE")
+
+# relative-residual threshold separating "converged enough" from STALLED
+# when a solve exits at its iteration cap. Healthy cold fits reach
+# ~1e-10 rel at the default iteration budget and healthy warm-started
+# streaming solves sit well under 1e-5, so 1e-3 keeps the entire healthy
+# serve path verdict-clean while a genuinely stalled solve (forced cap,
+# broken preconditioner) lands at O(1e-1..1).
+STALL_RTOL = 1e-3
+
+# Gband drift sentinel policy: trigger an exact full-RGF resync of the
+# variance band once the accumulated truncation-contract estimate
+# (``gband_update._drift_estimate``: the Woodbury correction's patch-edge
+# magnitude relative to its own peak — an O(1)-ish ratio means the decay
+# the truncation relies on is absent) crosses DRIFT_TOL, or
+# unconditionally every RESYNC_EVERY mutations (belt-and-braces roundoff
+# bound for very long streams). The per-mutation estimate is exactly zero
+# whenever the patch window covers the active system (the usual
+# quasi-uniform-stream case), so the sentinel is free until the
+# truncation contract is actually at risk.
+DRIFT_TOL = 1e-10
+RESYNC_EVERY = 4096
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("verdict", "resid", "rhs", "drift", "muts"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class HealthState:
+    """Per-GP health scalars, carried as pytree data on ``AdditiveGP``.
+
+    All leaves are scalars, so the fleet's vmapped tenant axis turns this
+    into (T,) arrays for free and one ``device_get`` fetches the whole
+    fleet's health. ``verdict``/``resid``/``rhs`` reflect the most recent
+    classified solve; ``drift``/``muts`` accumulate the Gband sentinel's
+    truncation-contract estimate and the mutation count since the last
+    exact resync.
+    """
+
+    verdict: jax.Array  # int32, latest solve verdict (codes above)
+    resid: jax.Array  # latest solve residual L2 norm
+    rhs: jax.Array  # latest solve RHS L2 norm
+    drift: jax.Array  # accumulated relative Gband truncation estimate
+    muts: jax.Array  # int32, mutations since the last exact resync
+
+    @staticmethod
+    def fresh(dtype=float) -> "HealthState":
+        z = jnp.zeros((), dtype)
+        return HealthState(verdict=jnp.zeros((), jnp.int32), resid=z, rhs=z,
+                           drift=z, muts=jnp.zeros((), jnp.int32))
+
+    def with_solve(self, info) -> "HealthState":
+        """Fold a classified :class:`SolveInfo` into the state."""
+        return dataclasses.replace(
+            self, verdict=jnp.asarray(info.verdict, jnp.int32),
+            resid=jnp.asarray(info.resid, self.resid.dtype),
+            rhs=jnp.asarray(info.rhs, self.rhs.dtype))
+
+    def with_drift(self, drift_est) -> "HealthState":
+        """Accumulate one mutation's truncation estimate (sentinel input)."""
+        return dataclasses.replace(
+            self, drift=self.drift + jnp.asarray(drift_est, self.drift.dtype),
+            muts=self.muts + jnp.ones((), jnp.int32))
+
+    def after_resync(self) -> "HealthState":
+        """Zero the sentinel accumulators after an exact full-RGF resync."""
+        return dataclasses.replace(self, drift=jnp.zeros_like(self.drift),
+                                   muts=jnp.zeros_like(self.muts))
+
+
+def classify_solve(x, resid, rhs, at_cap, stall_rtol: float = STALL_RTOL):
+    """Classify one solve into an int32 verdict code, in-graph.
+
+    ``x`` is the solution state (any shape; probed for nonfinites),
+    ``resid``/``rhs`` are the residual/RHS L2 norms over the active prefix,
+    ``at_cap`` is a traced bool: did the solve exhaust its iteration
+    budget (a tol-triggered early exit passes ``False`` semantics via
+    ``iters_used >= cfg.iters``). Severity order NONFINITE > DIVERGED >
+    STALLED > OK; a zero RHS (rel == 0) is OK by construction.
+    """
+    resid = jnp.asarray(resid)
+    finite = jnp.isfinite(resid) & jnp.all(jnp.isfinite(x))
+    tiny = jnp.asarray(jnp.finfo(resid.dtype).tiny, resid.dtype)
+    rel = resid / jnp.maximum(jnp.asarray(rhs), tiny)
+    code = jnp.where(
+        rel > 1.0, DIVERGED,
+        jnp.where(jnp.asarray(at_cap) & (rel > stall_rtol), STALLED, OK))
+    return jnp.where(finite, code, NONFINITE).astype(jnp.int32)
+
+
+def verdict_name(code) -> str:
+    """Host-side pretty name for a verdict code (device or python int)."""
+    i = int(code)
+    return VERDICT_NAMES[i] if 0 <= i < len(VERDICT_NAMES) else f"?{i}"

@@ -89,6 +89,8 @@ __all__ = [
     "set_precond", "use_precond", "resolve_precond", "get_gband", "set_gband",
     "use_gband", "resolve_gband", "banded_matvec", "banded_solve",
     "banded_logdet", "band_band_matmul", "kp_gram", "GBAND_MODES",
+    "HEALTH_MODES", "get_health", "set_health", "use_health",
+    "resolve_health",
 ]
 
 BACKENDS = ("auto", "jax", "pallas")
@@ -106,6 +108,9 @@ ENV_PRECOND = "REPRO_PRECOND"
 GBAND_MODES = ("auto", "windowed", "full")
 ENV_GBAND = "REPRO_GBAND"
 
+HEALTH_MODES = ("auto", "on", "off")
+ENV_HEALTH = "REPRO_HEALTH"
+
 # "auto" precond gate: enable the kernel-multigrid V-cycle at q == 0 once
 # the system is large enough that the coarse correction pays for its extra
 # matvecs (~2-3x per iteration vs a 2-4x iteration-count cut, so the
@@ -115,11 +120,26 @@ ENV_GBAND = "REPRO_GBAND"
 # operator (see kernels/README.md)
 KMG_AUTO_MIN_N = 4096
 
-_backend = os.environ.get(ENV_VAR, "auto")
-_solve_alg = os.environ.get(ENV_SOLVE_ALG, "auto")
-_fused = os.environ.get(ENV_FUSED, "auto")
-_precond = os.environ.get(ENV_PRECOND, "auto")
-_gband = os.environ.get(ENV_GBAND, "auto")
+def _env_mode(var: str, valid: tuple[str, ...]) -> str:
+    """Read a mode env var, failing *at import* on an invalid value.
+
+    A typo'd ``REPRO_*`` setting used to survive module load and only blow
+    up deep inside a trace (or worse, silently select a fallback); raising
+    here surfaces the mistake immediately, with the valid options listed.
+    """
+    val = os.environ.get(var, "auto")
+    if val not in valid:
+        raise ValueError(
+            f"invalid {var}={val!r}; expected one of {valid}")
+    return val
+
+
+_backend = _env_mode(ENV_VAR, BACKENDS)
+_solve_alg = _env_mode(ENV_SOLVE_ALG, SOLVE_ALGS)
+_fused = _env_mode(ENV_FUSED, FUSED_MODES)
+_precond = _env_mode(ENV_PRECOND, PRECOND_MODES)
+_gband = _env_mode(ENV_GBAND, GBAND_MODES)
+_health = _env_mode(ENV_HEALTH, HEALTH_MODES)
 
 
 def on_tpu() -> bool:
@@ -418,6 +438,60 @@ def resolve_gband(gband: str | None = None) -> str:
     if g == "auto":
         return "windowed"
     return g
+
+
+def get_health() -> str:
+    """Current process-wide serve-path health mode (may be "auto")."""
+    return _health
+
+
+def set_health(name: str) -> None:
+    """Set the process-wide health mode ("auto" | "on" | "off")."""
+    global _health
+    if name not in HEALTH_MODES:
+        raise ValueError(
+            f"unknown health mode {name!r}; expected one of {HEALTH_MODES}")
+    _health = name
+
+
+@contextlib.contextmanager
+def use_health(name: str):
+    """Temporarily override the health mode (trace-time scope)."""
+    prev = _health
+    set_health(name)
+    try:
+        yield
+    finally:
+        set_health(prev)
+
+
+def resolve_health(health: str | None = None) -> str:
+    """Resolve the serve-path health mode to "on" | "off".
+
+    "on" carries a ``HealthState`` on every fitted GP (solve verdicts, the
+    Gband drift sentinel's accumulated truncation estimate) and lets the
+    engines run the degradation ladder / quarantine path on bad verdicts.
+    "off" drops the state entirely — the GP pytree has one fewer leaf and
+    the serve path is bit-identical to the pre-health code.
+
+    An explicit "on"/"off" wins; "auto" (the GPConfig default) and None
+    defer to the process default (``set_health`` / ``REPRO_HEALTH``); a
+    final "auto" means "on". ``fit()`` calls this once and bakes the result
+    into the GP config, so jit caches key on the resolved mode.
+    """
+    h = health if health is not None else _health
+    if h not in HEALTH_MODES:
+        raise ValueError(
+            f"unknown health mode {h!r}; expected one of {HEALTH_MODES}")
+    if h == "auto":
+        h = _health
+        if h not in HEALTH_MODES:
+            raise ValueError(
+                f"unknown health mode {h!r} (from {ENV_HEALTH} or "
+                f"set_health); expected one of {HEALTH_MODES}")
+    if h == "auto":
+        return "on"
+    return h
 
 
 def _interpret() -> bool:

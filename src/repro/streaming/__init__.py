@@ -19,7 +19,10 @@ from .updates import (  # noqa: F401
     evict,
     fleet_evict,
     fleet_insert,
+    fleet_resync,
     insert,
+    maybe_resync,
     refresh_local_cache,
+    resync_gband,
     with_capacity,
 )

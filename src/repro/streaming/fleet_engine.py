@@ -43,8 +43,9 @@ import numpy as np
 from ..core.additive_gp import AdditiveGP, with_capacity
 from ..core.bayesopt import acquisition_stats, ascent_step
 from ..core.fleet import GPFleet, set_tenant_gp, tenant_gp
+from ..health import verdict as hv
 from .gp_engine import Query, _next_tier
-from .updates import fleet_evict, fleet_insert
+from .updates import fleet_evict, fleet_insert, fleet_resync
 
 __all__ = ["GPFleetEngine"]
 
@@ -119,7 +120,8 @@ class GPFleetEngine:
     def __init__(self, gps, bounds, batch_slots: int = 8, kind: str = "ucb",
                  beta: float = 2.0, lr: float = 0.05,
                  insert_iters: int | None = None,
-                 capacity=None, window=None):
+                 capacity=None, window=None,
+                 checkpointer=None, checkpoint_every: int = 64):
         gps = list(gps)
         if not gps:
             raise ValueError("GPFleetEngine needs at least one tenant GP")
@@ -140,6 +142,16 @@ class GPFleetEngine:
         self._next_rid = 0
         self._xdt = np.asarray(gps[0].X).dtype
         self._ydt = np.asarray(gps[0].Y).dtype
+        # health plumbing (active only when the tenants were fitted
+        # health="on"): post-round quarantine + ladder repair, per-lane
+        # drift sentinel, optional durable last-good checkpoints
+        self._ckpt = checkpointer
+        self._ckpt_every = max(1, int(checkpoint_every))
+        self._ckpt_step = 0
+        self._repairs = 0
+        self._resyncs = 0
+        self._quarantines = 0
+        self._health_events: list = []
 
         # resolve per-tenant tiers with the single-engine rule, then build
         # one stacked group per distinct tier
@@ -205,6 +217,91 @@ class GPFleetEngine:
         """Number of compiled fleet-step variants (for retrace assertions)."""
         return _fleet_engine_step._cache_size()
 
+    # -- health --------------------------------------------------------------
+
+    def health_stats(self) -> dict:
+        """Counters + the structured :class:`~repro.health.HealthEvent`
+        trail of every quarantine repair / sentinel resync so far."""
+        return {"repairs": self._repairs, "resyncs": self._resyncs,
+                "quarantines": self._quarantines,
+                "events": list(self._health_events)}
+
+    def _group_health(self, grp: _TierGroup, prev: AdditiveGP,
+                      lanes: list) -> None:
+        """Post-mutation-round health pass for one tier group: ONE fetch of
+        the stacked per-lane health scalars, then host-dispatched masked
+        sentinel resyncs and per-lane quarantine repairs. All-healthy
+        rounds cost the fetch only — no new compiled programs."""
+        h = grp.stack.health
+        if h is None:
+            return
+        verdicts, drifts, muts = jax.device_get((h.verdict, h.drift, h.muts))
+        resync = [l for l in lanes if float(drifts[l]) > hv.DRIFT_TOL
+                  or int(muts[l]) >= hv.RESYNC_EVERY]
+        if resync:
+            from ..health.ladder import HealthEvent
+
+            do = np.zeros(grp.lanes, bool)
+            do[resync] = True
+            grp.stack = fleet_resync(GPFleet(gp=grp.stack), do).gp
+            self._resyncs += len(resync)
+            for l in resync:
+                self._health_events.append(HealthEvent(
+                    op=f"tenant{grp.tenants[l]}:sentinel",
+                    rung="gband_resync", before=int(verdicts[l]),
+                    after=int(verdicts[l]),
+                    detail=f"drift={float(drifts[l]):.3e} after "
+                           f"{int(muts[l])} windowed mutation(s)"))
+        bad = [l for l in lanes if int(verdicts[l]) != int(hv.OK)]
+        for l in bad:
+            self._quarantine_repair(grp, l, prev)
+        if not bad and self._ckpt is not None:
+            self._ckpt_step += 1
+            if self._ckpt_step % self._ckpt_every == 0:
+                self._ckpt.save(self._ckpt_step, grp.stack)
+
+    def _quarantine_repair(self, grp: _TierGroup, lane: int,
+                           prev: AdditiveGP | None = None) -> bool:
+        """Quarantine one bad lane: mask it out, ladder-repair its extracted
+        GP, reseat. Fallbacks when the ladder is exhausted: the pre-round
+        lane snapshot (``prev``), then the durable checkpoint. Returns
+        whether the lane's posterior changed (False = the fault was not in
+        the posterior — e.g. a NaN query input)."""
+        from ..health.ladder import HealthEvent, probe_gp, repair
+
+        tid = grp.tenants[lane]
+        t = self.tenants[tid]
+        gp_bad = tenant_gp(grp.stack, jnp.asarray(lane, jnp.int32))
+        gp_fix, events = repair(gp_bad, op=f"tenant{tid}")
+        if not events:
+            return False
+        self._quarantines += 1
+        if probe_gp(gp_fix) != int(hv.OK):
+            if prev is not None:
+                gp_fix = tenant_gp(prev, jnp.asarray(lane, jnp.int32))
+                events.append(HealthEvent(
+                    op=f"tenant{tid}", rung="snapshot_restore",
+                    before=events[-1].after, after=probe_gp(gp_fix),
+                    detail="pre-round lane snapshot"))
+            if (probe_gp(gp_fix) != int(hv.OK) and self._ckpt is not None
+                    and self._ckpt.latest_step() is not None):
+                restored, step = self._ckpt.restore(grp.stack)
+                if restored is not None:
+                    stack = jax.tree_util.tree_map(jnp.asarray, restored)
+                    gp_fix = tenant_gp(stack, jnp.asarray(lane, jnp.int32))
+                    events.append(HealthEvent(
+                        op=f"tenant{tid}", rung="checkpoint_restore",
+                        before=events[-1].after, after=probe_gp(gp_fix),
+                        detail=f"last-good checkpoint step {step}"))
+        grp.stack = set_tenant_gp(grp.stack, gp_fix,
+                                  jnp.asarray(lane, jnp.int32))
+        self._health_events += events
+        self._repairs += 1
+        t.count = gp_fix.num_points()
+        t.version += 1
+        t.best_y = self._fresh_best_y(t)
+        return True
+
     def _fresh_best_y(self, t: _Tenant) -> float:
         return float(jnp.max(t.group.stack.Y[t.lane, : t.count]))
 
@@ -259,7 +356,25 @@ class GPFleetEngine:
                                      jnp.asarray(BY), lo, hi, step_len,
                                      self.kind)
             val, grad, mu, var, Xn = map(np.asarray, out)
+            # query-path detection (health-on fleets only): a lane with a
+            # nonfinite result is quarantined — its slots held, its GP
+            # ladder-repaired and reseated, its queries re-served next tick
+            # — while every other tenant retires normally this tick. With
+            # health off, NaNs retire as-is (the pre-health behavior).
+            held: set[int] = set()
+            if grp.stack.health is not None:
+                for l in serving:
+                    t = self.tenants[grp.tenants[l]]
+                    occ = [i for i, s in enumerate(t.slots) if s is not None]
+                    ok = all(np.isfinite(val[l, i]) and np.isfinite(mu[l, i])
+                             and np.isfinite(var[l, i])
+                             and np.all(np.isfinite(grad[l, i]))
+                             for i in occ)
+                    if not ok and self._quarantine_repair(grp, l):
+                        held.add(l)
             for l in serving:
+                if l in held:
+                    continue
                 t = self.tenants[grp.tenants[l]]
                 for i, q in enumerate(t.slots):
                     if q is None:
@@ -367,6 +482,12 @@ class GPFleetEngine:
             if not ready_here:
                 continue
             fleet = GPFleet(gp=grp.stack)
+            # pre-round state doubles as the in-memory last-good snapshot
+            # the quarantine path restores from (JAX immutability makes the
+            # reference free); `mutated` collects the lanes whose verdicts
+            # the post-round health pass must inspect
+            prev = grp.stack
+            mutated: set[int] = set()
             counts = np.zeros(grp.lanes, int)
             for t in members:
                 counts[t.lane] = t.count
@@ -383,11 +504,13 @@ class GPFleetEngine:
                     t.count -= 1
                     t.version += 1
                     counts[t.lane] -= 1
+                    mutated.add(t.lane)
                 for t in evicts:
                     t.count -= 1
                     t.version += 1
                     counts[t.lane] -= 1
                     t.staged.pop(0)
+                    mutated.add(t.lane)
             inserts = [t for t in ready_here if t.staged
                        and t.staged[0][0] == "insert"
                        and (t.window is None or t.count < t.window)
@@ -407,7 +530,10 @@ class GPFleetEngine:
                     t.count += 1
                     t.version += 1
                     t.staged.pop(0)
+                    mutated.add(t.lane)
             grp.stack = fleet.gp
+            if mutated:
+                self._group_health(grp, prev, sorted(mutated))
         for t in ready:
             if not t.staged:  # fence lifts: refresh the incumbent
                 t.best_y = self._fresh_best_y(t)

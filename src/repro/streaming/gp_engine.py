@@ -38,7 +38,9 @@ import numpy as np
 
 from ..core.additive_gp import AdditiveGP, with_capacity
 from ..core.bayesopt import BOConfig, acquisition_stats, ascent_step
-from .updates import evict as stream_evict, insert as stream_insert
+from ..health import verdict as hv
+from .updates import (evict as stream_evict, insert as stream_insert,
+                      resync_gband)
 
 __all__ = ["GPServeEngine", "Query", "propose_via_engine"]
 
@@ -91,7 +93,8 @@ class GPServeEngine:
     def __init__(self, gp: AdditiveGP, bounds, batch_slots: int = 8,
                  kind: str = "ucb", beta: float = 2.0, lr: float = 0.05,
                  insert_iters: int | None = None,
-                 capacity: int | None = None, window: int | None = None):
+                 capacity: int | None = None, window: int | None = None,
+                 checkpointer=None, checkpoint_every: int = 64):
         n_points = gp.num_points()
         if window is not None and window < 2:
             raise ValueError(f"window must be >= 2; got {window}")
@@ -118,6 +121,15 @@ class GPServeEngine:
         self._besty = np.zeros(batch_slots, np.asarray(gp.Y).dtype)
         self._next_rid = 0
         self._count = n_points
+        # health plumbing (active only when the GP was fitted health="on"):
+        # the fence runs the drift sentinel + verdict-driven ladder repairs,
+        # the query tick holds-and-repairs on nonfinite results, and an
+        # optional Checkpointer keeps a durable last-good snapshot
+        self._ckpt = checkpointer
+        self._ckpt_every = max(1, int(checkpoint_every))
+        self._repairs = 0
+        self._resyncs = 0
+        self._health_events: list = []
         self.best_y = float(jnp.max(self._active_y()))
 
     def _active_y(self) -> jax.Array:
@@ -131,6 +143,63 @@ class GPServeEngine:
     @property
     def capacity(self) -> int:
         return self.gp.n
+
+    # -- health --------------------------------------------------------------
+
+    def health_stats(self) -> dict:
+        """Counters + the structured :class:`~repro.health.HealthEvent`
+        trail of every ladder escalation / sentinel resync so far."""
+        return {"repairs": self._repairs, "resyncs": self._resyncs,
+                "events": list(self._health_events)}
+
+    def _post_mutation_health(self) -> None:
+        """Fence-time health pass: one fetch of the carried scalars, then
+        host-dispatched sentinel resync and/or ladder repair. The healthy
+        path costs the fetch only — no new compiled programs."""
+        h = self.gp.health
+        if h is None:
+            return
+        verdict, drift, muts = jax.device_get((h.verdict, h.drift, h.muts))
+        if float(drift) > hv.DRIFT_TOL or int(muts) >= hv.RESYNC_EVERY:
+            from ..health.ladder import HealthEvent
+
+            self.gp = resync_gband(self.gp)
+            self._resyncs += 1
+            self._health_events.append(HealthEvent(
+                op="sentinel", rung="gband_resync", before=int(verdict),
+                after=int(verdict),
+                detail=f"drift={float(drift):.3e} after {int(muts)} "
+                       "windowed mutation(s)"))
+        if int(verdict) != int(hv.OK):
+            self._repair("mutation")
+        elif (self._ckpt is not None
+              and self.version % self._ckpt_every == 0):
+            self._ckpt.save(self.version, self.gp)
+
+    def _repair(self, op: str) -> bool:
+        """Ladder-repair the posterior; last-good checkpoint as backstop.
+        Returns whether the posterior changed."""
+        from ..health.ladder import HealthEvent, probe_gp, repair
+
+        gp, events = repair(self.gp, op=op)
+        if not events:
+            return False
+        if (probe_gp(gp) != int(hv.OK) and self._ckpt is not None
+                and self._ckpt.latest_step() is not None):
+            restored, step = self._ckpt.restore(self.gp)
+            if restored is not None:
+                gp = jax.tree_util.tree_map(jnp.asarray, restored)
+                events.append(HealthEvent(
+                    op=op, rung="checkpoint_restore", before=events[-1].after,
+                    after=probe_gp(gp),
+                    detail=f"last-good checkpoint step {step}"))
+        self._health_events += events
+        self._repairs += 1
+        self.gp = gp
+        self._count = gp.num_points()
+        self.version += 1
+        self.best_y = float(jnp.max(self._active_y()))
+        return True
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -164,8 +233,24 @@ class GPServeEngine:
                            jnp.asarray(self._besty), lo, hi,
                            self.lr * (hi - lo), self.kind)
         val, grad, mu, var, Xn = map(np.asarray, out)
+        # query-path detection (health-on posteriors only): a nonfinite
+        # result means a corrupt artifact reached serving. Hold the affected
+        # slots (no retire, no ascend advance), ladder-repair the posterior,
+        # and re-serve them next tick. If the repair finds nothing wrong the
+        # NaN belongs to the query itself and it retires as-is — health-off
+        # engines always retire as-is (the pre-health corrupt behavior).
+        held: set[int] = set()
+        if self.gp.health is not None:
+            bad = [i for i in active
+                   if not (np.isfinite(val[i]) and np.isfinite(mu[i])
+                           and np.isfinite(var[i])
+                           and np.all(np.isfinite(grad[i])))]
+            if bad and self._repair("query"):
+                held = set(bad)
         finished = []
         for i in active:
+            if i in held:
+                continue
             q = self.slots[i]
             if q.kind == "ascend" and q.steps > 0:
                 self._xs[i] = Xn[i]
@@ -258,6 +343,7 @@ class GPServeEngine:
                 self._count = gp.num_points()
                 self.version += 1
         self._staged.clear()
+        self._post_mutation_health()
         self.best_y = float(jnp.max(self._active_y()))
 
 

@@ -48,6 +48,7 @@ one narrow solve batch (``mode="window"``).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -58,6 +59,7 @@ import numpy as np
 from ..core import matern as mk
 from ..core.additive_gp import (AdditiveGP, TIE_EPS, build_gp_hier,
                                 mean_caches, with_capacity)
+from ..health import verdict as hv
 from ..core.backfitting import DimOps, solve_mhat
 from ..core.band_inverse import variance_band
 from ..core.banded import Banded, add, scale, solve, transpose
@@ -68,7 +70,8 @@ from ..core.kernel_packets import gram_band_rows, kp_coefficient_rows
 from ..masking import canonical_band, mask_rows
 
 __all__ = ["insert", "evict", "with_capacity", "refresh_local_cache",
-           "fleet_insert", "fleet_evict"]
+           "fleet_insert", "fleet_evict", "fleet_resync", "maybe_resync",
+           "resync_gband"]
 
 
 def _splice_vec(v: jax.Array, p, val) -> jax.Array:
@@ -171,22 +174,37 @@ def _insert_dim(q: int, k, omega_d, xs_d, sort_d, rank_d, a_d, phi_d, b_d,
 
 def _mutated_gband(gp: AdditiveGP, ops: DimOps, p: jax.Array, k1: jax.Array,
                    evicting: bool):
-    """Post-mutation (Gband, Hband) caches.
+    """Post-mutation ``(Gband, Hband, drift)`` caches.
 
     With a baked ``gband="windowed"`` config and a populated ``Hband`` cache
     this runs the O(window) Woodbury correction of ``core/gband_update.py``;
     otherwise (``gband="full"``, or a legacy checkpoint without the cache)
     it falls back to the full O(capacity) RGF sweep. The branch is resolved
     at trace time — both sides are the same pytree shape, so the compiled
-    program contains only the selected path.
+    program contains only the selected path. ``drift`` is the windowed
+    update's per-mutation truncation estimate for the health sentinel
+    (exactly zero on the full-sweep path, which is exact by construction).
     """
     config = gp.config
     if config.gband != "full" and gp.Hband is not None:
         fn = gband_evict if evicting else gband_insert
         return fn(gp.Hband, ops.A, ops.Phi, gp.Gband, p, k1, config.q,
                   backend=config.backend, alg=config.solve_alg)
-    return variance_band(ops.A, ops.Phi, backend=config.backend,
-                         return_h=True)
+    Gband, Hband = variance_band(ops.A, ops.Phi, backend=config.backend,
+                                 return_h=True)
+    return Gband, Hband, jnp.zeros((), Gband.data.dtype)
+
+
+def _mutated_health(gp: AdditiveGP, info, drift):
+    """Post-mutation ``HealthState``: fold this mutation's classified warm
+    solve and its Gband truncation estimate into the carried scalars. The
+    branch is static (config.health is baked meta): a health-off GP carries
+    (and pays for) nothing."""
+    if gp.config.health != "on":
+        return None
+    base = (gp.health if gp.health is not None
+            else hv.HealthState.fresh(gp.Y.dtype))
+    return base.with_solve(info).with_drift(drift)
 
 
 def _insert_core(gp: AdditiveGP, x_new: jax.Array, y_new: jax.Array,
@@ -225,11 +243,18 @@ def _insert_core(gp: AdditiveGP, x_new: jax.Array, y_new: jax.Array,
     # mutation would be pure wasted work)
     hier = (build_gp_hier(config, gp.omega, gp.sigma, X, xs, ops)
             if config.precond == "kmg" else None)
-    u_sy, bY = mean_caches(config, ops, Y, x0=x0, iters=iters, hier=hier)
-    Gband, Hband = _mutated_gband(gp, ops, p, k1, evicting=False)
+    if config.health == "on":
+        u_sy, bY, info = mean_caches(config, ops, Y, x0=x0, iters=iters,
+                                     hier=hier, return_info=True)
+    else:
+        u_sy, bY = mean_caches(config, ops, Y, x0=x0, iters=iters, hier=hier)
+    Gband, Hband, drift = _mutated_gband(gp, ops, p, k1, evicting=False)
+    health = _mutated_health(gp, info if config.health == "on" else None,
+                             drift)
     return AdditiveGP(X=X, Y=Y, omega=gp.omega, sigma=gp.sigma, xs=xs,
                       ops=ops, B=B, Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband,
-                      Hband=Hband, config=config, n_active=k1, hier=hier)
+                      Hband=Hband, config=config, n_active=k1, hier=hier,
+                      health=health)
 
 
 def _lane1(core_call):
@@ -294,7 +319,13 @@ def insert(gp: AdditiveGP, x_new, y_new, *, iters: int | None = None,
         gp = with_capacity(gp, gp.n + 1)
     x_new = jnp.asarray(x_new, gp.X.dtype)
     y_new = jnp.asarray(y_new, gp.Y.dtype)
-    return _insert_impl(gp, x_new, y_new, int(iters))
+    out = _insert_impl(gp, x_new, y_new, int(iters))
+    if count is None:
+        # the convenience path already device-syncs (num_points above), so
+        # the drift sentinel rides the same round trip; engines pass
+        # ``count=`` and run their own sentinel to keep dispatch async
+        out, _ = maybe_resync(out)
+    return out
 
 
 def _evict_dim(q: int, k, omega_d, xs_d, sort_d, rank_d, a_d, phi_d, b_d,
@@ -368,11 +399,18 @@ def _evict_core(gp: AdditiveGP, iters: int) -> AdditiveGP:
     x0 = mask_rows(jax.vmap(lambda u: _delete_vec(u, 0))(gp.u_sy), k1, axis=1)
     hier = (build_gp_hier(config, gp.omega, gp.sigma, X, xs, ops)
             if config.precond == "kmg" else None)
-    u_sy, bY = mean_caches(config, ops, Y, x0=x0, iters=iters, hier=hier)
-    Gband, Hband = _mutated_gband(gp, ops, p, k1, evicting=True)
+    if config.health == "on":
+        u_sy, bY, info = mean_caches(config, ops, Y, x0=x0, iters=iters,
+                                     hier=hier, return_info=True)
+    else:
+        u_sy, bY = mean_caches(config, ops, Y, x0=x0, iters=iters, hier=hier)
+    Gband, Hband, drift = _mutated_gband(gp, ops, p, k1, evicting=True)
+    health = _mutated_health(gp, info if config.health == "on" else None,
+                             drift)
     return AdditiveGP(X=X, Y=Y, omega=gp.omega, sigma=gp.sigma, xs=xs,
                       ops=ops, B=B, Psi=Psi, bY=bY, u_sy=u_sy, Gband=Gband,
-                      Hband=Hband, config=config, n_active=k1, hier=hier)
+                      Hband=Hband, config=config, n_active=k1, hier=hier,
+                      health=health)
 
 
 @partial(jax.jit, static_argnums=(1,))
@@ -399,7 +437,69 @@ def evict(gp: AdditiveGP, *, iters: int | None = None,
         gp = with_capacity(gp, gp.n)  # mark active count; capacity unchanged
     if (gp.num_points() if count is None else int(count)) <= 1:
         raise ValueError("cannot evict from a GP with a single observation")
-    return _evict_impl(gp, int(iters))
+    out = _evict_impl(gp, int(iters))
+    if count is None:
+        out, _ = maybe_resync(out)
+    return out
+
+
+def _resync_core(gp: AdditiveGP) -> AdditiveGP:
+    """Traced exact-resync body — shared by the single-GP and fleet steps."""
+    Gband, Hband = variance_band(gp.ops.A, gp.ops.Phi,
+                                 backend=gp.config.backend, return_h=True)
+    health = None if gp.health is None else gp.health.after_resync()
+    return dataclasses.replace(gp, Gband=Gband, Hband=Hband, health=health)
+
+
+@jax.jit
+def _resync_impl(gp: AdditiveGP) -> AdditiveGP:
+    """Exact full-RGF recompute of the variance caches + sentinel reset."""
+    return _resync_core(gp)
+
+
+@jax.jit
+def _fleet_resync_impl(stack: AdditiveGP, do: jax.Array) -> AdditiveGP:
+    new = jax.vmap(_resync_core)(stack)
+    return select_tenants(do, new, stack)
+
+
+def fleet_resync(fleet: GPFleet, do=None) -> GPFleet:
+    """Masked exact Gband resync over selected tenant lanes — ONE compiled
+    step. The fleet engine's sentinel dispatches this when a lane's
+    accumulated windowed-Gband drift crosses the threshold; unselected
+    lanes are returned bit-identical to their inputs."""
+    do_h = (np.ones(fleet.T, bool) if do is None else np.asarray(do, bool))
+    return GPFleet(gp=_fleet_resync_impl(fleet.gp, jnp.asarray(do_h)))
+
+
+def resync_gband(gp: AdditiveGP) -> AdditiveGP:
+    """Recompute ``Gband``/``Hband`` exactly with the O(n) RGF sweep.
+
+    The escape hatch the drift sentinel dispatches: discards whatever the
+    windowed maintenance accumulated (truncation on densely oversampled
+    streams, long-stream roundoff) and zeroes the sentinel counters. One
+    jitted program per capacity; the healthy mutation path never calls it.
+    """
+    return _resync_impl(gp)
+
+
+def maybe_resync(gp: AdditiveGP, *, drift_tol: float = hv.DRIFT_TOL,
+                 every: int = hv.RESYNC_EVERY):
+    """Host-side Gband drift sentinel. Returns ``(gp, resynced)``.
+
+    Reads the accumulated truncation estimate off ``gp.health`` (one device
+    fetch of two scalars) and dispatches :func:`resync_gband` when it
+    crosses ``drift_tol`` or after ``every`` windowed mutations — turning
+    the windowed-Gband truncation contract (see ``core/gband_update.py``)
+    into an automatic guarantee instead of a manual ``REPRO_GBAND=full``.
+    No-op (never syncs) for health-off GPs and ``gband="full"`` configs.
+    """
+    if gp.health is None or gp.config.gband == "full":
+        return gp, False
+    drift, muts = jax.device_get((gp.health.drift, gp.health.muts))
+    if float(drift) > drift_tol or int(muts) >= every:
+        return _resync_impl(gp), True
+    return gp, False
 
 
 @partial(jax.jit, static_argnums=(4,))
