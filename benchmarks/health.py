@@ -11,13 +11,14 @@ Two questions, answered as rows in ``BENCH_health.json``:
     ``health="off"`` GP. The CI gate pins both overhead ratios under 5% —
     the verdict is a handful of scalar reductions riding inside jits that
     are already solve-bound, and the sentinel is one two-scalar
-    ``device_get`` per mutation. That fetch blocks on the *current*
-    insert (health-off only syncs on the previous one via the
-    ``num_points`` guard), so the convenience path pays one insert of
-    lost dispatch overlap — a fixed ~15us that is a few percent at toy
-    sizes (n=512: ~2-5%) and noise at serving sizes, which is why the
-    gated grid starts at n=2048; engines pass ``count=`` and run the
-    sentinel off fetches they make anyway, paying ~0.
+    ``device_get`` per mutation. The sentinel runs *pre-mutation* on the
+    incoming GP, whose health scalars the previous step already
+    materialized — the fetch rides the same round trip as the
+    ``num_points`` capacity guard instead of blocking on the insert just
+    dispatched (the post-mutation fetch it replaces cost a fixed ~15us of
+    lost dispatch overlap per insert), at the price of a one-mutation lag
+    closed by a trailing ``maybe_resync``; engines pass ``count=`` and run
+    the sentinel off fetches they make anyway, paying ~0.
   * does the sentinel actually rescue the dense-oversampling stream PR-8
     documented as silently wrong under ``gband="windowed"``? A clustered
     insert stream past the static patch size, served with the default
@@ -36,7 +37,7 @@ import numpy as np
 from repro.core import GPConfig, fit, posterior_mean, posterior_var
 from repro.core.gband_update import patch_size
 from repro.health import dense_cluster_stream
-from repro.streaming import insert
+from repro.streaming import insert, maybe_resync
 
 
 def _setup(health, n, D, seed=0):
@@ -85,6 +86,9 @@ def _sentinel_correctness(n0=245, m=252, cap=256):
     g = fit(cfg, X[:n0], Y[:n0], omega, 0.25, capacity=cap)
     for i in range(n0, m):
         g = insert(g, X[i], Y[i], iters=80)
+    # the pre-mutation sentinel leaves the last insert's drift unchecked —
+    # close the stream with the explicit check the insert docstring asks for
+    g, _ = maybe_resync(g)
     ref = fit(cfg, X[:m], Y[:m], omega, 0.25, capacity=cap)
     Xq = X[:16]
     vg = np.asarray(posterior_var(g, Xq))

@@ -26,7 +26,7 @@ def main() -> None:
 
     from . import backend_ablation, capacity_streaming, fig5_prediction, \
         fig6_bayesopt, fleet_serving, fused_sweep, gband_update, health, \
-        multigrid, streaming_updates, table1_complexity
+        megasolve, multigrid, streaming_updates, table1_complexity
 
     rows: list[dict] = []
     print("== Fig 5: prediction RMSE/time vs n ==", flush=True)
@@ -58,6 +58,13 @@ def main() -> None:
     fused_sweep.run(ns=(1000, 4096, 16_384) if args.full else (1000, 4096),
                     out_rows=fused_rows)
     rows += fused_rows
+
+    print("== Whole-solve mega-kernel: 1 dispatch per solve vs per "
+          "iteration ==", flush=True)
+    mega_rows: list[dict] = []
+    megasolve.run(ns=(1000, 4096, 16_384) if args.full else (1000, 4096),
+                  out_rows=mega_rows)
+    rows += mega_rows
 
     print("== Streaming: incremental insert vs refit ==", flush=True)
     streaming_rows: list[dict] = []
@@ -167,6 +174,14 @@ def main() -> None:
     with open(health_out, "w") as f:
         json.dump(health_rows, f, indent=1)
     print(f"wrote {len(health_rows)} rows to {health_out}", flush=True)
+
+    # whole-solve mega-kernel artifact (PR 10 acceptance: one pallas_call
+    # per complete solve, zero in host-level loops, same realized iteration
+    # count as the per-iteration host loop)
+    mega_out = os.path.join(os.path.dirname(args.out), "BENCH_megasolve.json")
+    with open(mega_out, "w") as f:
+        json.dump(mega_rows, f, indent=1)
+    print(f"wrote {len(mega_rows)} rows to {mega_out}", flush=True)
 
     _append_summary(os.path.join(os.path.dirname(args.out),
                                  "BENCH_summary.json"), rows, args.full)

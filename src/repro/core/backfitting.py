@@ -17,9 +17,21 @@ On the pallas backend each iteration can run as ONE fused ``pallas_call``
 (``kernels/fused_sweep.py``): the permutation gathers, banded matvecs, the
 block-CR solve and the sum-over-D coupling all stay in VMEM instead of
 round-tripping the (D, n, B) state through HBM between 4+ dispatched ops.
-``SolveConfig.fused`` ("auto" | "on" | "off", default auto: fuse on pallas
-when every bandwidth is symmetric and the state fits VMEM) selects it; the
-fused and unfused paths are numerically interchangeable (bit-level at f64).
+One step further, the *whole solve* — warm-start residual, the convergence
+loop with its on-chip tol check, and the exit diagnostics — can run as one
+``pallas_call`` (``kernels/mega_solve.py``), collapsing O(iters) dispatches
+per solve to exactly 1. ``SolveConfig.fused`` ("auto" | "on" | "whole" |
+"off"; default auto prefers the whole-solve kernel on pallas when the VMEM
+budget fits and the preconditioner is not kmg, then the per-iteration
+kernel) selects among them; all paths are numerically interchangeable
+(jacobi/gauss_seidel bit-level at f64 across the pallas variants, pcg to
+convergence level).
+
+``return_info=True`` residuals cost no extra matvec on any path: pcg
+returns the recursively-updated ``r`` it already carries, and the
+jacobi/gauss_seidel sweeps carry the per-dim block quantity
+``k_d = Khat_d^{-1} x_d`` (exact by each block solve), from which
+``v - k - (sum_d x_d)/sigma^2`` is the exit residual elementwise.
 """
 from __future__ import annotations
 
@@ -51,12 +63,13 @@ class SolveConfig:
     damping: float = 0.0  # jacobi under-relaxation; 0 -> auto (1/D, provably safe)
     pivot: bool = False  # banded LU pivoting
     # pcg-only early exit: stop once sqrt(|rz_k| / |rz_0|) <= tol in the
-    # preconditioned residual norm (jit-friendly bounded lax.while_loop);
-    # 0 -> fixed iteration count. gauss_seidel/jacobi always run `iters`.
+    # preconditioned residual norm (jit-friendly bounded lax.while_loop,
+    # evaluated on-chip under fused="whole"); 0 -> fixed iteration count.
+    # gauss_seidel/jacobi always run `iters`.
     tol: float = 0.0
     backend: str = "auto"  # banded-algebra backend ("auto" | "jax" | "pallas")
     alg: str = "auto"  # pallas solve kernel ("auto" | "lu" | "cr")
-    fused: str = "auto"  # fused-sweep kernel ("auto" | "on" | "off")
+    fused: str = "auto"  # fused kernels ("auto" | "on" | "whole" | "off")
     # pcg preconditioner: "none" (per-dim block solve) | "kmg" (kernel
     # multigrid V-cycle over a coarse hierarchy — requires the caller to
     # thread ``hier`` into solve_mhat) | "auto" (resolved at GP fit time
@@ -77,8 +90,9 @@ class SolveInfo(NamedTuple):
     n_active: jax.Array = None
     # L2 norm of the residual v - Mhat x at exit, over the active prefix
     # and all RHS columns (pcg: the recursively-updated r it already
-    # carries; jacobi/gauss_seidel: one extra matvec, only materialized
-    # when return_info=True)
+    # carries; jacobi/gauss_seidel: composed elementwise from the final
+    # sweep's carried Khat_d^{-1} x_d stack — no extra matvec; the explicit
+    # matvec survives only for the degenerate iters == 0 solve)
     resid: jax.Array = None
     # L2 norm of the (masked) RHS v — the scale resid is judged against
     rhs: jax.Array = None
@@ -183,12 +197,15 @@ def mhat_matvec(ops: DimOps, u: jax.Array, pivot: bool = False,
 
 
 def _maybe_fused(ops: DimOps, v: jax.Array, cfg: SolveConfig):
-    """Resolve ``cfg.fused`` against this solve; FusedSweep or None.
+    """Resolve ``cfg.fused`` against this solve; ``(mode, FusedSweep|None)``.
 
     Trace-time decision (shapes, backend and bandwidths are all static): the
-    fused path needs the pallas backend and symmetric bandwidths on every
+    fused paths need the pallas backend and symmetric bandwidths on every
     factor, and "auto" additionally requires the state + factor stack to fit
-    the fused kernel's VMEM residency model (see ``fused_sweep``).
+    the chosen kernel's VMEM residency model — preferring the whole-solve
+    mega-kernel, then the per-iteration sweep (see ``fused_sweep`` /
+    ``mega_solve``). ``mode`` is "whole" | "iter" | "off"; the FusedSweep
+    (the padded operand stack both kernel families run on) is None when off.
     """
     from ..kernels import ops as _kops
     from ..kernels.fused_sweep import FusedSweep
@@ -205,31 +222,77 @@ def _maybe_fused(ops: DimOps, v: jax.Array, cfg: SolveConfig):
         for b in (ops.Phi, ops.SAPhi))
     # v is already promoted to the compute dtype (solve_mhat entry), which
     # is what the fused kernel runs in — size the VMEM estimate by it
-    if not _kops.resolve_fused(cfg.fused, cfg.backend, widths=widths,
+    mode = _kops.resolve_fused(cfg.fused, cfg.backend, widths=widths,
                                n=ops.n, D=ops.D, B=v.shape[-1],
                                itemsize=v.dtype.itemsize,
-                               method=cfg.method, cr_ok=cr_ok):
-        return None
-    return FusedSweep(
+                               method=cfg.method, cr_ok=cr_ok,
+                               precond=cfg.precond)
+    if mode == "off":
+        return "off", None
+    return mode, FusedSweep(
         ops.Phi.data, ops.SAPhi.data, ops.sort_idx, ops.rank_idx, ops.sigma2,
         w_p=ops.Phi.lo, w_s=ops.SAPhi.lo,
         a=ops.A.data if need_a else None, w_a=ops.A.lo, pivot=cfg.pivot,
         interpret=not _kops.on_tpu(), dtype=v.dtype, n_active=ops.n_active)
 
 
+def _kinv0(ops: DimOps, x0: jax.Array, cfg: SolveConfig) -> jax.Array:
+    """Khat^{-1} x0 from the factors in hand (warm-started jacobi carry).
+
+    SAPhi = sigma^2 A + Phi, so P^T Phi^{-1} SAPhi P x0 =
+    sigma^2 Khat^{-1} x0 + x0 — one banded matvec + solve, paid only on a
+    warm-started jacobi solve that asks for diagnostics.
+    """
+    x0s = ops.to_sorted(x0)
+    w = solve(ops.Phi, matvec(ops.SAPhi, x0s, backend=cfg.backend),
+              pivot=cfg.pivot, backend=cfg.backend, alg=cfg.alg)
+    return (ops.from_sorted(w) - x0) / ops.sigma2
+
+
+def _resid_from_k(ops: DimOps, v: jax.Array, out: jax.Array,
+                  k: jax.Array) -> jax.Array:
+    """Exit-residual norm from the sweep's carried Khat_d^{-1} x_d stack.
+
+    r = v - Mhat x = v - k - (sum_d x_d)/sigma^2 — elementwise only, no
+    banded matvec (the PR-7 return_info extra-matvec note, resolved).
+    """
+    r = v - k - tree_sum(out, axis=0)[None] / ops.sigma2
+    return jnp.sqrt(tree_sum(_det_dot(r, r), axis=0))
+
+
 def _gauss_seidel(ops: DimOps, v: jax.Array, cfg: SolveConfig,
-                  x0: jax.Array | None = None) -> jax.Array:
-    """Algorithm 4: block Gauss-Seidel sweeps, sequential over dimensions."""
+                  x0: jax.Array | None = None, want_resid: bool = False):
+    """Algorithm 4: block Gauss-Seidel sweeps, sequential over dimensions.
+
+    Returns ``(out, resid|None)``. A GS exit residual depends only on the
+    final sweep's per-dim block solves, so ``want_resid`` instruments just
+    that sweep (identical x ops) and composes the norm elementwise; resid is
+    None when ``cfg.iters == 0`` (nothing swept — caller falls back to the
+    explicit matvec).
+    """
     D = ops.D
     vt = jnp.zeros_like(v) if x0 is None else x0
+    want_resid = want_resid and cfg.iters > 0
 
-    fs = _maybe_fused(ops, v, cfg)
+    mode, fs = _maybe_fused(ops, v, cfg)
+    if mode == "whole":
+        from ..kernels.mega_solve import MegaSolve
+
+        out, k = MegaSolve(fs).gauss_seidel(v, x0, iters=cfg.iters)
+        if want_resid:
+            return out, _resid_from_k(ops, v, out, k)
+        return out, None
     if fs is not None:
         v_p = fs.pad_state(v)
-        out = jax.lax.fori_loop(0, cfg.iters,
-                                lambda _, u: fs.gauss_seidel_iter(v_p, u),
-                                fs.pad_state(vt))
-        return fs.unpad(out)
+        u = fs.pad_state(vt)
+        sweeps = cfg.iters - 1 if want_resid else cfg.iters
+        u = jax.lax.fori_loop(0, sweeps,
+                              lambda _, u: fs.gauss_seidel_iter(v_p, u), u)
+        if want_resid:
+            u, k = fs.gauss_seidel_iter(v_p, u, want_resid=True)
+            out = fs.unpad(u)
+            return out, _resid_from_k(ops, v, out, fs.unpad(k))
+        return fs.unpad(u), None
 
     def solve_one_dim(d, r_d):
         # single-dim block solve (r_d: (n, B))
@@ -245,44 +308,86 @@ def _gauss_seidel(ops: DimOps, v: jax.Array, cfg: SolveConfig,
         out = jnp.take_along_axis(w, jnp.broadcast_to(ridx, w.shape), axis=0)
         return mask_rows(out, na, axis=0)
 
-    def sweep(_, vt):
+    def sweep(vt, instrument=False):
         total = tree_sum(vt, axis=0)
+        ks = []
         for d in range(D):
             r_d = v[d] - (total - vt[d]) / ops.sigma2
             new_d = solve_one_dim(d, r_d)
             total = total - vt[d] + new_d
             vt = vt.at[d].set(new_d)
-        return vt
+            if instrument:
+                # exact by the block solve: Khat_d^{-1} new_d = r_d - new_d/s^2
+                ks.append(r_d - new_d / ops.sigma2)
+        return (vt, jnp.stack(ks)) if instrument else vt
 
-    return jax.lax.fori_loop(0, cfg.iters, sweep, vt)
+    sweeps = cfg.iters - 1 if want_resid else cfg.iters
+    vt = jax.lax.fori_loop(0, sweeps, lambda _, u: sweep(u), vt)
+    if want_resid:
+        vt, k = sweep(vt, instrument=True)
+        return vt, _resid_from_k(ops, v, vt, k)
+    return vt, None
 
 
 def _jacobi(ops: DimOps, v: jax.Array, cfg: SolveConfig,
-            x0: jax.Array | None = None) -> jax.Array:
+            x0: jax.Array | None = None, want_resid: bool = False):
     """Damped block Jacobi: all D dims in parallel (one batched banded solve).
 
     The block-Jacobi iteration matrix for Mhat has eigenvalues in
     (-(D-1), 1]; damping alpha <= 2/D guarantees convergence — auto uses 1/D.
+
+    Returns ``(out, resid|None)``. Unlike GS, the damped iterate mixes every
+    sweep into the exit state, so ``want_resid`` carries the matching damped
+    ``k ~ Khat^{-1} x`` stack through the whole loop (x ops unchanged);
+    a warm start seeds it with ``_kinv0``.
     """
     vt = jnp.zeros_like(v) if x0 is None else x0
     alpha = cfg.damping if cfg.damping > 0 else 1.0 / ops.D
+    want_resid = want_resid and cfg.iters > 0
 
-    fs = _maybe_fused(ops, v, cfg)
+    mode, fs = _maybe_fused(ops, v, cfg)
+    if mode == "whole":
+        from ..kernels.mega_solve import MegaSolve
+
+        out, k = MegaSolve(fs).jacobi(v, x0, alpha=alpha, iters=cfg.iters)
+        if want_resid:
+            return out, _resid_from_k(ops, v, out, k)
+        return out, None
     if fs is not None:
         v_p = fs.pad_state(v)
+        if want_resid:
+            k0 = jnp.zeros_like(v) if x0 is None else _kinv0(ops, x0, cfg)
+            u, k = jax.lax.fori_loop(
+                0, cfg.iters,
+                lambda _, c: fs.jacobi_iter(v_p, c[0], alpha, c[1]),
+                (fs.pad_state(vt), fs.pad_state(k0)))
+            out = fs.unpad(u)
+            return out, _resid_from_k(ops, v, out, fs.unpad(k))
         out = jax.lax.fori_loop(
             0, cfg.iters, lambda _, u: fs.jacobi_iter(v_p, u, alpha),
             fs.pad_state(vt))
-        return fs.unpad(out)
+        return fs.unpad(out), None
 
-    def sweep(_, vt):
+    def sweep(vt):
         total = tree_sum(vt, axis=0)[None]
         r = v - (total - vt) / ops.sigma2
         new = ops.block_solve(r, pivot=cfg.pivot, backend=cfg.backend,
                               alg=cfg.alg)
-        return (1.0 - alpha) * vt + alpha * new
+        return (1.0 - alpha) * vt + alpha * new, r, new
 
-    return jax.lax.fori_loop(0, cfg.iters, sweep, vt)
+    if want_resid:
+        k0 = jnp.zeros_like(v) if x0 is None else _kinv0(ops, x0, cfg)
+
+        def sweep_k(_, carry):
+            vt, k = carry
+            vt, r, new = sweep(vt)
+            return vt, (1.0 - alpha) * k + alpha * (r - new / ops.sigma2)
+
+        vt, k = jax.lax.fori_loop(0, cfg.iters, sweep_k, (vt, k0))
+        return vt, _resid_from_k(ops, v, vt, k)
+
+    return jax.lax.fori_loop(0, cfg.iters, lambda _, u: sweep(u)[0],
+                             vt), None
 
 
 def _det_dot(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -317,10 +422,10 @@ def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
             raise ValueError(
                 "precond='kmg' needs the coarse hierarchy: pass hier= to "
                 "solve_mhat (fitted GPs carry it as gp.hier)")
-        if cfg.fused == "on":
+        if cfg.fused in ("on", "whole"):
             raise ValueError(
-                "fused='on' is incompatible with precond='kmg': the fused "
-                "pcg kernel hard-codes the block preconditioner")
+                f"fused={cfg.fused!r} is incompatible with precond='kmg': "
+                "the fused pcg kernels hard-code the block preconditioner")
         # the V-cycle spans the full (D, n, B) state through transfer
         # operators the fused kernel knows nothing about — host-level loop
         fs = None
@@ -330,7 +435,17 @@ def _pcg(ops: DimOps, v: jax.Array, cfg: SolveConfig,
                                  smooth=cfg.precond_smooth, pivot=cfg.pivot,
                                  backend=cfg.backend, alg=cfg.alg)
     else:
-        fs = _maybe_fused(ops, v, cfg)
+        mode, fs = _maybe_fused(ops, v, cfg)
+        if mode == "whole":
+            from ..kernels.mega_solve import MegaSolve
+
+            # the whole solve — warm residual, preconditioned loop, on-chip
+            # tol check — in ONE pallas_call; the kernel hands back the
+            # recursively-updated r and the realized iteration count
+            x, r_fin, iters_used = MegaSolve(fs).pcg(
+                v, x0, iters=cfg.iters, tol=cfg.tol)
+            resid = jnp.sqrt(tree_sum(_det_dot(r_fin, r_fin), axis=0))
+            return x, iters_used, resid
 
         def pre(u):
             return ops.block_solve(u, pivot=cfg.pivot, backend=cfg.backend,
@@ -437,9 +552,9 @@ def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig(),
     iters_used = jnp.asarray(cfg.iters, jnp.int32)
     resid = None
     if cfg.method == "gauss_seidel":
-        out = _gauss_seidel(ops, v, cfg, x0)
+        out, resid = _gauss_seidel(ops, v, cfg, x0, want_resid=return_info)
     elif cfg.method == "jacobi":
-        out = _jacobi(ops, v, cfg, x0)
+        out, resid = _jacobi(ops, v, cfg, x0, want_resid=return_info)
     elif cfg.method == "pcg":
         out, iters_used, resid = _pcg(ops, v, cfg, x0, hier)
     else:
@@ -447,8 +562,8 @@ def solve_mhat(ops: DimOps, v: jax.Array, cfg: SolveConfig = SolveConfig(),
     if not return_info:
         return out[..., 0] if vec_in else out
     if resid is None:
-        # relaxation sweeps don't carry a residual — one extra matvec,
-        # only paid when diagnostics were asked for
+        # only the degenerate iters == 0 relaxation solve reaches here (the
+        # sweeps otherwise carry their own residual) — one explicit matvec
         r = v - mhat_matvec(ops, out, pivot=cfg.pivot, backend=cfg.backend,
                             alg=cfg.alg)
         resid = jnp.sqrt(tree_sum(_det_dot(r, r), axis=0))

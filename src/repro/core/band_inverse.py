@@ -54,7 +54,10 @@ def _block_solve(M: jax.Array, B: jax.Array) -> jax.Array:
     """
     w = M.shape[-1]
     i = jnp.arange(w)[:, None]
-    j = i + jnp.arange(-(w - 1), w)[None, :]
+    # zero-based arange + shift: lowers to a traced iota, so this helper can
+    # run inside a pallas kernel body (nonzero-start jnp.arange materializes
+    # a concrete array that pallas would reject as a captured constant).
+    j = i + (jnp.arange(2 * w - 1) - (w - 1))[None, :]
     valid = (j >= 0) & (j < w)
     jc = jnp.clip(j, 0, w - 1)
     band = jnp.where(valid, jnp.take_along_axis(
@@ -183,17 +186,30 @@ def inverse_band_single(H: Banded, hw: int) -> Banded:
     return _blocks_to_band(Gd, Gu, Gl, H.n, hw)
 
 
-def inverse_band(H: Banded, hw: int) -> Banded:
+def inverse_band(H: Banded, hw: int, backend: str | None = None) -> Banded:
     """Band of H^{-1}; batched over leading dims of H.data.
 
     Capacity padding: when ``H.n_active`` is set the data is canonicalized
     to ``blockdiag(H_active, I)`` first, so the RGF sweep — a direct method —
     returns ``blockdiag(G_active, I)`` exactly: active band rows match the
     unpadded inverse and tail rows are identity rows.
+
+    On the pallas backend the recurrences run on-chip
+    (``kernels/rgf.py`` — one ``pallas_call`` for the whole batch, bit-
+    identical to the scans here); ``backend`` resolves like every dispatched
+    op (``kernels.ops.resolve_backend``).
     """
     n_active = H.n_active
     if n_active is not None:
         H = H.canonical()
+    from ..kernels import ops as _kops
+
+    if _kops.resolve_backend(backend) == "pallas":
+        from ..kernels.rgf import rgf_inverse_band
+
+        out = rgf_inverse_band(H.data, H.lo, H.hi, hw,
+                               interpret=not _kops.on_tpu())
+        return Banded(out, hw, hw, n_active)
     if H.data.ndim == 2:
         out_b = inverse_band_single(Banded(H.data, H.lo, H.hi), hw)
         return Banded(out_b.data, hw, hw, n_active)
@@ -215,7 +231,7 @@ def variance_band(A: Banded, Phi: Banded, backend: str | None = None,
     """
     H = mask_band(band_band_matmul(A, transpose(Phi), backend=backend))
     hw = A.lo + Phi.lo  # 2q+1
-    G = inverse_band(H, hw)
+    G = inverse_band(H, hw, backend=backend)
     if return_h:
         return G, H.canonical()
     return G

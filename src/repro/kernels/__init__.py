@@ -10,6 +10,13 @@ fused_sweep   — ONE pallas_call per backfitting iteration: permutation
                 gathers, A/Phi matvecs, the SAPhi block-CR solve and the
                 sum-over-D coupling fused in VMEM for all three solvers
                 (pcg / jacobi / gauss_seidel)
+mega_solve    — ONE pallas_call per complete solve_mhat: the bounded
+                convergence loop, on-chip PCG tol check, warm-start seeding
+                and exit diagnostics run inside the kernel
+                (``SolveConfig.fused="whole"``)
+rgf           — on-chip blocked RGF band inverse: both block-tridiagonal
+                recurrences of Algorithm 5's posterior-variance band run in
+                VMEM, bit-identical to the jax scans on the active prefix
 kp_gram       — fused Phi = A·K band assembly (Algorithm 2) without forming K
 
 ``ops`` is the backend dispatch layer: every banded op in ``repro.core``
@@ -42,3 +49,11 @@ from .fused_sweep import (  # noqa: F401
     fused_vmem_bytes,
 )
 from .kp_gram import kp_gram_pallas  # noqa: F401
+from .mega_solve import (  # noqa: F401
+    MegaSolve,
+    mega_gauss_seidel_solve_pallas,
+    mega_jacobi_solve_pallas,
+    mega_pcg_solve_pallas,
+    mega_vmem_bytes,
+)
+from .rgf import rgf_blocks_pallas, rgf_inverse_band  # noqa: F401

@@ -156,7 +156,12 @@ def _dim(x, d):
 
 
 def _jacobi_kernel(sig_ref, v_ref, vt_ref, phi_ref, saphi_ref, sort_ref,
-                   rank_ref, out_ref, total_scr, *, w_p, w_s, alpha, pivot):
+                   rank_ref, *refs, w_p, w_s, alpha, pivot,
+                   want_resid=False):
+    if want_resid:
+        k_ref, out_ref, ko_ref, total_scr = refs
+    else:
+        out_ref, total_scr = refs
     d = pl.program_id(0)
 
     @pl.when(d == 0)
@@ -170,34 +175,54 @@ def _jacobi_kernel(sig_ref, v_ref, vt_ref, phi_ref, saphi_ref, sort_ref,
     new = _block_solve_dim(saphi_ref[...], phi_ref[...], sort_ref[0],
                            rank_ref[0], s2, r, w_p=w_p, w_s=w_s, pivot=pivot)
     out_ref[...] = (1.0 - alpha) * vt_d + alpha * new
+    if want_resid:
+        # carry k_d ~ Khat_d^{-1} x_d under the same damping: the block
+        # solve guarantees Khat_d^{-1} new = r - new/s^2 exactly, so the
+        # exit residual costs no extra matvec (see core/backfitting.py)
+        ko_ref[...] = (1.0 - alpha) * k_ref[...] + alpha * (r - new / s2)
 
 
 @functools.partial(jax.jit, static_argnames=("w_p", "w_s", "alpha", "pivot",
-                                             "interpret"))
+                                             "interpret", "want_resid"))
 def fused_jacobi_iter_pallas(phi, saphi, sort_idx, rank_idx, sigma2, v, vt,
-                             *, w_p: int, w_s: int, alpha: float,
-                             pivot: bool = False, interpret: bool = True):
-    """One damped block-Jacobi sweep; all operands pre-padded (D, npad, ...)."""
+                             k=None, *, w_p: int, w_s: int, alpha: float,
+                             pivot: bool = False, interpret: bool = True,
+                             want_resid: bool = False):
+    """One damped block-Jacobi sweep; all operands pre-padded (D, npad, ...).
+
+    With ``want_resid`` the sweep also carries ``k`` (the damped running
+    ``Khat_d^{-1} x_d`` stack) and returns ``(out, k_out)``; the x update is
+    op-identical to the plain sweep.
+    """
     D, npad, B = vt.shape
     dtype = vt.dtype
+    per_d = pl.BlockSpec((None, npad, B), lambda d: (d, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda d: (0, 0)),
+        per_d,
+        pl.BlockSpec((D, npad, B), lambda d: (0, 0, 0)),
+        pl.BlockSpec((None, npad, 2 * w_p + 1), lambda d: (d, 0, 0)),
+        pl.BlockSpec((None, npad, 2 * w_s + 1), lambda d: (d, 0, 0)),
+        pl.BlockSpec((1, npad), lambda d: (d, 0)),
+        pl.BlockSpec((1, npad), lambda d: (d, 0)),
+    ]
+    operands = (sigma2, v, vt, phi, saphi, sort_idx, rank_idx)
+    out_specs, out_shape = per_d, jax.ShapeDtypeStruct((D, npad, B), dtype)
+    if want_resid:
+        in_specs = in_specs + [per_d]
+        operands = operands + (k,)
+        out_specs = [per_d, per_d]
+        out_shape = [out_shape, jax.ShapeDtypeStruct((D, npad, B), dtype)]
     return pl.pallas_call(
         functools.partial(_jacobi_kernel, w_p=w_p, w_s=w_s, alpha=alpha,
-                          pivot=pivot),
+                          pivot=pivot, want_resid=want_resid),
         grid=(D,),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda d: (0, 0)),
-            pl.BlockSpec((None, npad, B), lambda d: (d, 0, 0)),
-            pl.BlockSpec((D, npad, B), lambda d: (0, 0, 0)),
-            pl.BlockSpec((None, npad, 2 * w_p + 1), lambda d: (d, 0, 0)),
-            pl.BlockSpec((None, npad, 2 * w_s + 1), lambda d: (d, 0, 0)),
-            pl.BlockSpec((1, npad), lambda d: (d, 0)),
-            pl.BlockSpec((1, npad), lambda d: (d, 0)),
-        ],
-        out_specs=pl.BlockSpec((None, npad, B), lambda d: (d, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((D, npad, B), dtype),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((npad, B), dtype)],
         interpret=interpret,
-    )(sigma2, v, vt, phi, saphi, sort_idx, rank_idx)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -206,7 +231,11 @@ def fused_jacobi_iter_pallas(phi, saphi, sort_idx, rank_idx, sigma2, v, vt,
 
 
 def _gs_kernel(sig_ref, v_ref, vt_ref, phi_ref, saphi_ref, sort_ref, rank_ref,
-               out_ref, total_scr, *, w_p, w_s, pivot):
+               out_ref, *refs, w_p, w_s, pivot, want_resid=False):
+    if want_resid:
+        ko_ref, total_scr = refs
+    else:
+        (total_scr,) = refs
     d = pl.program_id(0)
 
     @pl.when(d == 0)
@@ -222,31 +251,45 @@ def _gs_kernel(sig_ref, v_ref, vt_ref, phi_ref, saphi_ref, sort_ref, rank_ref,
     # same update order as the unfused sweep: total - old + new
     total_scr[...] = total_scr[...] - cur + new
     out_ref[pl.ds(d, 1)] = new[None]
+    if want_resid:
+        # Khat_d^{-1} new = r - new/s^2 exactly (by the block solve), and a
+        # GS exit residual only depends on the final sweep's values — so
+        # return_info costs no extra matvec (see core/backfitting.py)
+        ko_ref[...] = r - new / s2
 
 
 @functools.partial(jax.jit, static_argnames=("w_p", "w_s", "pivot",
-                                             "interpret"))
+                                             "interpret", "want_resid"))
 def fused_gauss_seidel_iter_pallas(phi, saphi, sort_idx, rank_idx, sigma2, v,
                                    vt, *, w_p: int, w_s: int,
                                    pivot: bool = False,
-                                   interpret: bool = True):
-    """One sequential-over-dims Gauss-Seidel sweep (pre-padded operands)."""
+                                   interpret: bool = True,
+                                   want_resid: bool = False):
+    """One sequential-over-dims Gauss-Seidel sweep (pre-padded operands).
+
+    With ``want_resid`` (the solve's *final* sweep) additionally returns the
+    per-dim ``k_d = Khat_d^{-1} x_d`` stack: ``(out, k)``.
+    """
     D, npad, B = vt.shape
     dtype = vt.dtype
+    full = pl.BlockSpec((D, npad, B), lambda d: (0, 0, 0))
+    per_d = pl.BlockSpec((None, npad, B), lambda d: (d, 0, 0))
+    shape = jax.ShapeDtypeStruct((D, npad, B), dtype)
     return pl.pallas_call(
-        functools.partial(_gs_kernel, w_p=w_p, w_s=w_s, pivot=pivot),
+        functools.partial(_gs_kernel, w_p=w_p, w_s=w_s, pivot=pivot,
+                          want_resid=want_resid),
         grid=(D,),
         in_specs=[
             pl.BlockSpec((1, 1), lambda d: (0, 0)),
-            pl.BlockSpec((None, npad, B), lambda d: (d, 0, 0)),
-            pl.BlockSpec((D, npad, B), lambda d: (0, 0, 0)),
+            per_d,
+            full,
             pl.BlockSpec((None, npad, 2 * w_p + 1), lambda d: (d, 0, 0)),
             pl.BlockSpec((None, npad, 2 * w_s + 1), lambda d: (d, 0, 0)),
             pl.BlockSpec((1, npad), lambda d: (d, 0)),
             pl.BlockSpec((1, npad), lambda d: (d, 0)),
         ],
-        out_specs=pl.BlockSpec((D, npad, B), lambda d: (0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((D, npad, B), dtype),
+        out_specs=[full, per_d] if want_resid else full,
+        out_shape=[shape, shape] if want_resid else shape,
         scratch_shapes=[pltpu.VMEM((npad, B), dtype)],
         interpret=interpret,
     )(sigma2, v, vt, phi, saphi, sort_idx, rank_idx)
@@ -426,17 +469,19 @@ class FusedSweep:
     def unpad(self, u):
         return u[:, : self.n]
 
-    def jacobi_iter(self, v, vt, alpha: float):
+    def jacobi_iter(self, v, vt, alpha: float, k=None):
+        """One sweep; pass ``k`` to also carry the residual stack (out, k)."""
         return fused_jacobi_iter_pallas(
             self.phi, self.saphi, self.sort_idx, self.rank_idx, self.sigma2,
-            v, vt, w_p=self.w_p, w_s=self.w_s, alpha=alpha, pivot=self.pivot,
-            interpret=self.interpret)
+            v, vt, k, w_p=self.w_p, w_s=self.w_s, alpha=alpha,
+            pivot=self.pivot, interpret=self.interpret,
+            want_resid=k is not None)
 
-    def gauss_seidel_iter(self, v, vt):
+    def gauss_seidel_iter(self, v, vt, want_resid: bool = False):
         return fused_gauss_seidel_iter_pallas(
             self.phi, self.saphi, self.sort_idx, self.rank_idx, self.sigma2,
             v, vt, w_p=self.w_p, w_s=self.w_s, pivot=self.pivot,
-            interpret=self.interpret)
+            interpret=self.interpret, want_resid=want_resid)
 
     def pcg_iter(self, x, r, p, rz):
         assert self.a is not None, "PCG needs the A factor stack"

@@ -60,9 +60,16 @@ cross-dimension coupling — into a single ``pallas_call``
 
   * ``"auto"`` (default) — fuse when the resolved backend is pallas, every
     factor has a symmetric bandwidth (lo == hi — true for every KP system),
-    and the estimated VMEM footprint fits (``fused_sweep.fused_vmem_bytes``
-    vs ``REPRO_FUSED_VMEM_CAP``); otherwise run the unfused dispatch path.
-  * ``"on"`` — require fusion (raises if the backend/bandwidths can't).
+    the preconditioner is not kmg (its V-cycle is a host-level construction
+    neither fused pcg kernel can apply), and the estimated VMEM footprint
+    fits (vs ``REPRO_FUSED_VMEM_CAP``): preferring the *whole-solve* kernel
+    (below), then the per-iteration kernel, then the unfused dispatch path.
+  * ``"whole"`` — require the whole-solve mega-kernel
+    (``kernels/mega_solve.py``): the convergence loop itself runs on-chip,
+    so the entire ``solve_mhat`` is ONE ``pallas_call``. Raises wherever
+    ``"on"`` would.
+  * ``"on"`` — require per-iteration fusion (raises if the
+    backend/bandwidths/preconditioner can't).
   * ``"off"`` — never fuse.
 """
 from __future__ import annotations
@@ -99,7 +106,7 @@ ENV_VAR = "REPRO_BACKEND"
 SOLVE_ALGS = ("auto", "lu", "cr")
 ENV_SOLVE_ALG = "REPRO_SOLVE_ALG"
 
-FUSED_MODES = ("auto", "on", "off")
+FUSED_MODES = ("auto", "on", "whole", "off")
 ENV_FUSED = "REPRO_FUSED"
 
 PRECOND_MODES = ("auto", "none", "kmg")
@@ -259,7 +266,7 @@ def get_fused() -> str:
 
 
 def set_fused(name: str) -> None:
-    """Set the process-wide fused-sweep mode ("auto" | "on" | "off")."""
+    """Set the process-wide fused mode ("auto" | "on" | "whole" | "off")."""
     global _fused
     if name not in FUSED_MODES:
         raise ValueError(
@@ -280,20 +287,24 @@ def use_fused(name: str):
 
 def resolve_fused(fused: str | None, backend: str | None, *, widths,
                   n: int = 0, D: int = 1, B: int = 1, itemsize: int = 8,
-                  method: str = "pcg", cr_ok: bool = True) -> bool:
-    """Decide whether a backfitting solve runs the fused-sweep kernel.
+                  method: str = "pcg", cr_ok: bool = True,
+                  precond: str = "none") -> str:
+    """Decide how a backfitting solve fuses; returns "whole"|"iter"|"off".
 
     ``widths``: the (lo, hi) pairs of every band the sweep touches. An
-    explicit ``"on"``/``"off"`` wins (``"on"`` raises if fusion is
-    impossible: jax backend, asymmetric bandwidths, or a solve-alg override
-    that forbids block CR — the only solve the fused kernel implements;
-    callers pass that as ``cr_ok``); ``"auto"``/None defer to the process
-    default (``set_fused`` / ``REPRO_FUSED``), and a final "auto" fuses
-    exactly when the resolved backend is pallas, every band is symmetric,
-    CR is allowed, and the estimated VMEM footprint of one fused call fits
-    under ``fused_sweep.VMEM_CAP_BYTES`` (env ``REPRO_FUSED_VMEM_CAP``).
+    explicit mode wins (``"on"``/``"whole"`` raise if fusion is impossible:
+    jax backend, asymmetric bandwidths, a solve-alg override that forbids
+    block CR — the only solve the fused kernels implement; callers pass that
+    as ``cr_ok`` — or ``precond='kmg'``, whose host-level V-cycle neither
+    fused pcg kernel can apply); ``"auto"``/None defer to the process
+    default (``set_fused`` / ``REPRO_FUSED``), and a final "auto" requires
+    the pallas backend, symmetric bands, CR and ``precond != 'kmg'``, then
+    takes the whole-solve kernel when ``mega_solve.mega_vmem_bytes`` fits
+    under ``fused_sweep.VMEM_CAP_BYTES`` (env ``REPRO_FUSED_VMEM_CAP``),
+    falls back to the per-iteration kernel when ``fused_vmem_bytes`` fits,
+    and otherwise runs unfused. ``"on"`` pins the per-iteration kernel.
     """
-    from . import fused_sweep
+    from . import fused_sweep, mega_solve
 
     f = fused if fused is not None else _fused
     if f not in FUSED_MODES:
@@ -306,28 +317,39 @@ def resolve_fused(fused: str | None, backend: str | None, *, widths,
                 f"unknown fused mode {f!r} (from {ENV_FUSED} or set_fused); "
                 f"expected one of {FUSED_MODES}")
     if f == "off":
-        return False
+        return "off"
     be = resolve_backend(backend)
     symmetric = all(lo == hi for lo, hi in widths)
-    if f == "on":
+    if f in ("on", "whole"):
         if be != "pallas":
             raise ValueError(
-                "fused='on' requires the pallas backend (got "
+                f"fused={f!r} requires the pallas backend (got "
                 f"backend={be!r}); the fused sweep is a Pallas kernel")
         if not symmetric:
             raise ValueError(
-                "fused='on' requires symmetric bandwidths (lo == hi) on "
+                f"fused={f!r} requires symmetric bandwidths (lo == hi) on "
                 f"every factor; got {tuple(widths)}")
         if not cr_ok:
             raise ValueError(
-                "fused='on' conflicts with solve alg 'lu': the fused sweep "
+                f"fused={f!r} conflicts with solve alg 'lu': the fused sweep "
                 "solves via block cyclic reduction only")
-        return True
-    if be != "pallas" or not symmetric or not cr_ok:
-        return False
-    est = fused_vmem_bytes(n, D, B, [lo for lo, _ in widths], itemsize,
-                           method=method)
-    return est <= fused_sweep.VMEM_CAP_BYTES
+        if precond == "kmg":
+            raise ValueError(
+                f"fused={f!r} is incompatible with precond='kmg': the "
+                "V-cycle is a host-level construction and the fused pcg "
+                "kernels hard-code the block preconditioner; use "
+                "precond='none' or drop the fused override")
+        return "whole" if f == "whole" else "iter"
+    if be != "pallas" or not symmetric or not cr_ok or precond == "kmg":
+        return "off"
+    ws = [lo for lo, _ in widths]
+    if mega_solve.mega_vmem_bytes(
+            n, D, B, ws, itemsize, method=method) <= fused_sweep.VMEM_CAP_BYTES:
+        return "whole"
+    if fused_vmem_bytes(n, D, B, ws, itemsize,
+                        method=method) <= fused_sweep.VMEM_CAP_BYTES:
+        return "iter"
+    return "off"
 
 
 def get_precond() -> str:

@@ -84,6 +84,23 @@ def block_cr_logdet_ref(band: jax.Array, w: int):
         _blocks_to_dense(*band_to_blocks_ref(band, w)))[1]
 
 
+def rgf_band_inverse_ref(band: jax.Array, lo: int, hi: int, hw: int):
+    """Band (half-bw ``hw``) of the dense inverse of a banded matrix.
+
+    Oracle for ``core.band_inverse`` (jax scans) and ``kernels.rgf``
+    (pallas): densify, ``jnp.linalg.inv``, slice the band back out — no
+    block-tridiagonal arithmetic shared with either implementation.
+    """
+    n = band.shape[0]
+    G = jnp.linalg.inv(to_dense(Banded(band, lo, hi)))
+    i = jnp.arange(n)[:, None]
+    m = jnp.arange(-hw, hw + 1)[None, :]
+    j = i + m
+    valid = (j >= 0) & (j < n)
+    vals = jnp.take_along_axis(G, jnp.clip(j, 0, n - 1), axis=1)
+    return jnp.where(valid, vals, 0.0)
+
+
 def kp_gram_ref(q: int, omega, xs: jax.Array, a_band: jax.Array):
     """Phi band via explicit windowed gathers (same math as kernel_packets)."""
     n = xs.shape[0]

@@ -310,22 +310,27 @@ def insert(gp: AdditiveGP, x_new, y_new, *, iters: int | None = None,
     which blocks on the previous insert's computation (one sync per insert —
     callers that track the count, like the serving engine, should pass it
     so back-to-back inserts dispatch asynchronously).
+
+    Drift sentinel (``count is None`` only): checked *before* the mutation,
+    on the incoming GP — whose health scalars the previous step already
+    materialized, so the fetch rides the same round trip as the ``count``
+    guard instead of blocking on the insert just dispatched. The returned GP
+    therefore carries THIS insert's drift unchecked until the next mutation
+    (one-mutation lag); streams that stop mutating should finish with an
+    explicit :func:`maybe_resync`. Engines pass ``count=`` and schedule
+    their own sentinel.
     """
     if iters is None:
         iters = max(8, gp.config.solver_iters // 4)
+    if count is None:
+        gp, _ = maybe_resync(gp)
     if gp.n_active is None:
         gp = with_capacity(gp, gp.n + 1)
     elif (gp.num_points() if count is None else int(count)) >= gp.n:
         gp = with_capacity(gp, gp.n + 1)
     x_new = jnp.asarray(x_new, gp.X.dtype)
     y_new = jnp.asarray(y_new, gp.Y.dtype)
-    out = _insert_impl(gp, x_new, y_new, int(iters))
-    if count is None:
-        # the convenience path already device-syncs (num_points above), so
-        # the drift sentinel rides the same round trip; engines pass
-        # ``count=`` and run their own sentinel to keep dispatch async
-        out, _ = maybe_resync(out)
-    return out
+    return _insert_impl(gp, x_new, y_new, int(iters))
 
 
 def _evict_dim(q: int, k, omega_d, xs_d, sort_d, rank_d, a_d, phi_d, b_d,
@@ -430,17 +435,19 @@ def evict(gp: AdditiveGP, *, iters: int | None = None,
     bounded-memory serving loop of a long-running stream. ``iters`` caps the
     warm re-solve exactly like ``insert``'s; ``count`` is the same optional
     host-known active count (skips the device sync of the emptiness guard).
+    The drift sentinel runs pre-mutation on the incoming GP exactly like
+    ``insert``'s (same one-mutation lag; same explicit trailing
+    :func:`maybe_resync` for streams that stop mutating).
     """
     if iters is None:
         iters = max(8, gp.config.solver_iters // 4)
+    if count is None:
+        gp, _ = maybe_resync(gp)
     if gp.n_active is None:
         gp = with_capacity(gp, gp.n)  # mark active count; capacity unchanged
     if (gp.num_points() if count is None else int(count)) <= 1:
         raise ValueError("cannot evict from a GP with a single observation")
-    out = _evict_impl(gp, int(iters))
-    if count is None:
-        out, _ = maybe_resync(out)
-    return out
+    return _evict_impl(gp, int(iters))
 
 
 def _resync_core(gp: AdditiveGP) -> AdditiveGP:

@@ -246,37 +246,61 @@ def test_resolve_fused_rules():
     sym = ((2, 2), (1, 1), (2, 2))
     asym = ((2, 1), (1, 1))
     small = dict(n=64, D=3, B=2, itemsize=8)
-    assert ops.resolve_fused("on", "pallas", widths=sym) is True
-    assert ops.resolve_fused("off", "pallas", widths=sym, **small) is False
-    assert ops.resolve_fused(None, "pallas", widths=sym, **small) is True
+    assert ops.resolve_fused("on", "pallas", widths=sym) == "iter"
+    assert ops.resolve_fused("whole", "pallas", widths=sym) == "whole"
+    assert ops.resolve_fused("off", "pallas", widths=sym, **small) == "off"
+    # auto prefers the whole-solve kernel when everything fits VMEM
+    assert ops.resolve_fused(None, "pallas", widths=sym, **small) == "whole"
     # auto never fuses off the pallas backend or on asymmetric bands
-    assert ops.resolve_fused(None, "jax", widths=sym, **small) is False
-    assert ops.resolve_fused("auto", "pallas", widths=asym, **small) is False
-    # auto declines when the state stack cannot fit VMEM; "on" trusts you
+    assert ops.resolve_fused(None, "jax", widths=sym, **small) == "off"
+    assert ops.resolve_fused("auto", "pallas", widths=asym, **small) == "off"
+    # auto steps down as the state stack outgrows VMEM: whole-solve (extra
+    # iteration scratch) declines first, then the per-iteration kernel;
+    # "on"/"whole" trust you
+    mid = dict(n=18_000, D=3, B=2, itemsize=8)
     big = dict(n=4_000_000, D=8, B=16, itemsize=8)
-    assert ops.resolve_fused(None, "pallas", widths=sym, **big) is False
-    assert ops.resolve_fused("on", "pallas", widths=sym, **big) is True
-    # "on" validates what it cannot do
+    assert ops.resolve_fused(None, "pallas", widths=sym, **mid) == "iter"
+    assert ops.resolve_fused(None, "pallas", widths=sym, **big) == "off"
+    assert ops.resolve_fused("on", "pallas", widths=sym, **big) == "iter"
+    assert ops.resolve_fused("whole", "pallas", widths=sym, **big) == "whole"
+    # the kmg V-cycle is a host-level loop neither fused pcg kernel can
+    # apply: auto runs unfused, an explicit "on"/"whole" is contradictory
+    assert ops.resolve_fused(None, "pallas", widths=sym, precond="kmg",
+                             **small) == "off"
+    with pytest.raises(ValueError, match="kmg"):
+        ops.resolve_fused("whole", "pallas", widths=sym, precond="kmg")
+    with pytest.raises(ValueError, match="kmg"):
+        ops.resolve_fused("on", "pallas", widths=sym, precond="kmg")
+    # "on"/"whole" validate what they cannot do
     with pytest.raises(ValueError, match="pallas"):
         ops.resolve_fused("on", "jax", widths=sym)
+    with pytest.raises(ValueError, match="pallas"):
+        ops.resolve_fused("whole", "jax", widths=sym)
     with pytest.raises(ValueError, match="lo == hi"):
         ops.resolve_fused("on", "pallas", widths=asym)
+    with pytest.raises(ValueError, match="lo == hi"):
+        ops.resolve_fused("whole", "pallas", widths=asym)
     with pytest.raises(ValueError, match="unknown fused"):
         ops.resolve_fused("always", "pallas", widths=sym)
-    # the fused kernel only solves via block CR: a solve-alg override that
-    # forbids CR declines auto-fusion and invalidates "on"
+    # the fused kernels only solve via block CR: a solve-alg override that
+    # forbids CR declines auto-fusion and invalidates "on"/"whole"
     assert ops.resolve_fused(None, "pallas", widths=sym, cr_ok=False,
-                             **small) is False
+                             **small) == "off"
     with pytest.raises(ValueError, match="block cyclic reduction"):
         ops.resolve_fused("on", "pallas", widths=sym, cr_ok=False)
+    with pytest.raises(ValueError, match="block cyclic reduction"):
+        ops.resolve_fused("whole", "pallas", widths=sym, cr_ok=False)
     # process default + context manager, mirroring backend/solve_alg
     prev = ops.get_fused()
     try:
         ops.set_fused("off")
-        assert ops.resolve_fused(None, "pallas", widths=sym, **small) is False
-        assert ops.resolve_fused("auto", "pallas", widths=sym, **small) is False
+        assert ops.resolve_fused(None, "pallas", widths=sym, **small) == "off"
+        assert ops.resolve_fused("auto", "pallas", widths=sym,
+                                 **small) == "off"
         with ops.use_fused("on"):
-            assert ops.resolve_fused(None, "pallas", widths=sym) is True
+            assert ops.resolve_fused(None, "pallas", widths=sym) == "iter"
+        with ops.use_fused("whole"):
+            assert ops.resolve_fused(None, "pallas", widths=sym) == "whole"
         assert ops.get_fused() == "off"
         with pytest.raises(ValueError):
             ops.set_fused("sometimes")

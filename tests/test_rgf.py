@@ -1,0 +1,161 @@
+"""On-chip RGF band inverse: 3-way parity + capacity padding + resync route.
+
+``kernels/rgf.py`` runs the block-tridiagonal RGF recurrences of
+``core/band_inverse.py`` inside one ``pallas_call``. The kernel body reuses
+the scan path's own value-level block primitives (``_mm``, ``_block_solve``)
+in the same order, so the contract is *bitwise* parity with the jax scans —
+pinned here alongside a genuinely independent dense oracle
+(``kernels.ref.rgf_band_inverse_ref``: densify, ``jnp.linalg.inv``, slice
+the band) so the two implementations cannot agree by sharing a bug.
+
+Grid: w in {1, 2, 3} x n in {8, 37, 256} x {f32, f64}; plus the
+capacity-padded NaN-poisoned-tail case (canonical pad in => blockdiag(G, I)
+out, exactly) and the Gband full-resync path the PR-9 drift sentinel
+dispatches (``variance_band`` / ``resync_gband`` on the pallas backend).
+Tier-1 keeps one representative per width; the full grid is slow-marked.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.band_inverse import inverse_band, variance_band
+from repro.core.banded import Banded
+from repro.kernels.ref import rgf_band_inverse_ref
+from repro.kernels.rgf import rgf_inverse_band
+
+
+def _band(rng, n, lo, hi, dtype):
+    """Well-conditioned (diagonally dominant) random band rows."""
+    d = rng.standard_normal((n, lo + hi + 1))
+    d[:, lo] += 2.0 * (lo + hi + 1)
+    return jnp.asarray(d, dtype)
+
+
+def _check(d, lo, hi, hw, tol):
+    scan = inverse_band(Banded(d, lo, hi), hw, backend="jax").data
+    pal = inverse_band(Banded(d, lo, hi), hw, backend="pallas").data
+    ref = rgf_band_inverse_ref(d, lo, hi, hw)
+    np.testing.assert_array_equal(np.asarray(scan), np.asarray(pal),
+                                  err_msg="pallas RGF != jax scan (bitwise)")
+    err = float(jnp.max(jnp.abs(pal - ref)))
+    assert err < tol, f"pallas RGF vs dense oracle: {err:.3e} >= {tol:.0e}"
+
+
+# tier-1 representatives: each block width once, small n, f64
+@pytest.mark.parametrize("w,n", [(1, 8), (2, 37), (3, 8)])
+def test_rgf_three_way_parity(w, n):
+    rng = np.random.default_rng(w * 100 + n)
+    _check(_band(rng, n, w, w, jnp.float64), w, w, w, 1e-10)
+
+
+# the full grid (incl. n=256 and f32) is the slow acceptance sweep
+@pytest.mark.slow
+@pytest.mark.parametrize("w", [1, 2, 3])
+@pytest.mark.parametrize("n", [8, 37, 256])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-3),
+                                       (jnp.float64, 1e-10)])
+def test_rgf_three_way_parity_grid(w, n, dtype, tol):
+    rng = np.random.default_rng(w * 1000 + n)
+    _check(_band(rng, n, w, w, dtype), w, w, w, tol)
+
+
+def test_rgf_narrower_output_band():
+    # hw < matrix bandwidth: the extraction band is the caller's choice
+    rng = np.random.default_rng(3)
+    _check(_band(rng, 37, 2, 2, jnp.float64), 2, 2, 1, 1e-10)
+
+
+def test_rgf_capacity_padded_nan_tail():
+    """Canonical identity-tail pad in => blockdiag(G_active, I) out, exactly.
+
+    The tail beyond ``n_active`` is poisoned with NaN before canonicalizing:
+    any leak of padded rows into the active arithmetic would surface as NaN
+    in the active band, and the identity tail must come back finite. Batched
+    (leading axis) like the per-dim factor stacks.
+    """
+    rng = np.random.default_rng(11)
+    n0, cap, lo = 29, 40, 2
+    d = rng.standard_normal((3, cap, 2 * lo + 1))
+    d[..., lo] += 10.0
+    d = jnp.asarray(d).at[:, n0:].set(jnp.nan)
+    H = Banded(d, lo, lo, n_active=n0)
+    G_pal = inverse_band(H, lo, backend="pallas")
+    G_scan = inverse_band(H, lo, backend="jax")
+    np.testing.assert_array_equal(np.asarray(G_scan.data),
+                                  np.asarray(G_pal.data))
+    assert bool(jnp.all(jnp.isfinite(G_pal.data)))
+    # active prefix matches the unpadded dense oracle of the canonical band
+    ref = jax.vmap(lambda x: rgf_band_inverse_ref(x, lo, lo, lo))(
+        H.canonical().data)
+    err = float(jnp.max(jnp.abs(G_pal.data[:, :n0] - ref[:, :n0])))
+    assert err < 1e-10
+
+
+@pytest.mark.slow
+def test_variance_band_backend_parity(fitted_small):
+    """The posterior-variance entry point routes through the pallas RGF.
+
+    ``variance_band`` also dispatches the ``H = A Phi^T`` band-matmul per
+    backend, so the end-to-end comparison is convergence-level; the inverse
+    itself — the piece this PR moves on-chip — is re-pinned bitwise on the
+    shared H.
+    """
+    gp = fitted_small
+    from repro.core.banded import band_band_matmul, mask_band, transpose
+
+    H = mask_band(band_band_matmul(gp.ops.A, transpose(gp.ops.Phi)))
+    hw = gp.ops.A.lo + gp.ops.Phi.lo
+    np.testing.assert_array_equal(
+        np.asarray(inverse_band(H, hw, backend="jax").data),
+        np.asarray(inverse_band(H, hw, backend="pallas").data))
+    G_jax = variance_band(gp.ops.A, gp.ops.Phi, backend="jax")
+    G_pal = variance_band(gp.ops.A, gp.ops.Phi, backend="pallas")
+    np.testing.assert_allclose(np.asarray(G_pal.data),
+                               np.asarray(G_jax.data), rtol=1e-8, atol=0)
+
+
+def test_resync_route_uses_pallas_rgf(fitted_small, monkeypatch):
+    """The drift sentinel's full resync hits the kernel on backend='pallas'.
+
+    ``resync_gband`` -> ``variance_band`` -> ``inverse_band`` must dispatch
+    ``rgf_inverse_band`` when the baked config says pallas — asserted by
+    counting kernel entries — and the resynced Gband must match the jax-scan
+    resync (convergence-level: the H band-matmul also switches backend).
+    """
+    from repro.streaming import resync_gband
+    import repro.kernels.rgf as rgf_mod
+    import repro.streaming.updates as updates_mod
+
+    gp = fitted_small
+    gp_pal = dataclasses.replace(
+        gp, config=dataclasses.replace(gp.config, backend="pallas"))
+    calls = {"n": 0}
+    real = rgf_mod.rgf_inverse_band
+
+    def spy(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(rgf_mod, "rgf_inverse_band", spy)
+    updates_mod._resync_impl._clear_cache()  # force a re-trace past the spy
+    out_pal = resync_gband(gp_pal)
+    assert calls["n"] == 1
+    out_jax = resync_gband(gp)
+    np.testing.assert_allclose(np.asarray(out_pal.Gband.data),
+                               np.asarray(out_jax.Gband.data),
+                               rtol=1e-8, atol=0)
+
+
+@pytest.fixture(scope="module")
+def fitted_small():
+    from repro.core import GPConfig, fit
+
+    rng = np.random.default_rng(0)
+    n, D = 48, 2
+    X = jnp.asarray(rng.random((n, D)) * 4)
+    Y = jnp.asarray(np.sin(np.asarray(X)).sum(axis=1))
+    cfg = GPConfig(q=1, solver="pcg", solver_iters=30, backend="jax")
+    return fit(cfg, X, Y, jnp.ones(D), 0.4)
